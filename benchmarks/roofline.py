@@ -1,0 +1,212 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), TPU v5e constants:
+  compute term    = HLO_FLOPs_per_chip / 197e12        [s]
+  memory term     = HLO_bytes_per_chip / 819e9         [s]
+  collective term = wire_bytes_per_chip / 50e9         [s]
+
+HLO flops/bytes are trip-count-corrected (launch/dryrun.py calibration);
+collective wire bytes come from the partitioned-HLO parse with ring-cost
+weighting.  The per-chip formulation is equivalent to the global/chips form
+since the partitioned module *is* the per-chip program.
+
+MODEL_FLOPS (useful work, PaLM-style accounting):
+  train   tokens * (6 N_active + 12 L H hd S_ctx)   (+ SSD term for SSM)
+  prefill tokens * (2 N_active +  2 L H hd S)       (causal average ~S/2)
+  decode  tokens * (2 N_active +  4 L H hd S_kv)    (S_kv = cache length)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def model_flops(rec: dict, cfg) -> float:
+    """Analytic useful FLOPs for the whole step (see module docstring)."""
+    S, B = rec["seq_len"], rec["global_batch"]
+    kind = rec["kind"]
+    n_active = rec["n_params_active"]
+    L = cfg.n_layers
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    attn_ctx = S
+    if cfg.sliding_window > 0 and kind != "train":
+        attn_ctx = min(S, cfg.sliding_window)
+    ssd = 0.0
+    if cfg.block in ("ssm", "hybrid"):
+        di = cfg.ssm.d_inner(cfg.d_model)
+        ssd = 5 * L * di * cfg.ssm.d_state  # fwd per token
+    if cfg.block == "ssm":
+        H = 0
+    if kind == "train":
+        tokens = B * S
+        return tokens * (6 * n_active + 12 * L * H * hd * S + 3 * ssd)
+    if kind == "prefill":
+        tokens = B * S
+        return tokens * (2 * n_active + 2 * L * H * hd * attn_ctx + ssd)
+    # decode: one token per sequence against an S-long cache
+    tokens = B
+    return tokens * (2 * n_active + 4 * L * H * hd * attn_ctx + ssd)
+
+
+def model_bytes(rec: dict, cfg) -> float:
+    """Analytic minimal HBM traffic per step (whole job, bytes).
+
+    XLA's ``bytes accessed`` counts every op's operands as if nothing fuses —
+    a loose upper bound, especially on the CPU backend.  This lower bound is
+    what a well-fused TPU program approaches:
+      train:   28 B/param (bf16 fwd+bwd reads, f32 grad + Adam m/v r/w)
+               + ~10 streams of (B,S,d) per layer, x3 for full remat
+      prefill: 2 B/param + ~8 streams of (B,S,d) per layer + KV write
+      decode:  2 B/active-param + KV cache read + state r/w
+    """
+    S, B = rec["seq_len"], rec["global_batch"]
+    kind = rec["kind"]
+    n_active = rec["n_params_active"]
+    L, d = cfg.n_layers, cfg.d_model
+    hd = cfg.resolved_head_dim
+    kv_bytes = 2 * 2 * L * B * S * cfg.n_kv_heads_padded * hd  # bf16 k+v
+    if cfg.block == "ssm":
+        kv_bytes = 0
+    act_stream = 2 * B * S * d  # one bf16 (B,S,d) pass
+    if kind == "train":
+        return 28.0 * n_active + 3 * 10 * L * act_stream
+    if kind == "prefill":
+        return 2.0 * n_active + 8 * L * act_stream + kv_bytes
+    # decode: every active param + the whole cache, read once
+    state_bytes = 0
+    if cfg.block in ("ssm", "hybrid"):
+        s = cfg.ssm
+        nh = s.n_heads(d)
+        state_bytes = 2 * 4 * B * nh * s.headdim * s.d_state
+    return 2.0 * n_active + kv_bytes + state_bytes
+
+
+@dataclasses.dataclass
+class RooflinePoint:
+    cell: str
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float          # XLA bytes-accessed bound (unfused upper bound)
+    memory_min_s: float      # analytic minimal-traffic bound
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    fits_hbm: bool
+    hbm_gb: float
+
+    @property
+    def bound_time(self) -> float:
+        """Realistic bound: compute/collective from HLO, memory = geometric
+        middle of the unfused upper bound and the fused lower bound."""
+        mem = (self.memory_s * self.memory_min_s) ** 0.5
+        return max(self.compute_s, mem, self.collective_s)
+
+    @property
+    def ideal_time(self) -> float:
+        """What a perfect implementation needs: max of useful-compute time
+        and minimal-traffic time (whichever resource truly binds)."""
+        comp = self.model_flops / (PEAK_FLOPS * self._chips)
+        return max(comp, self.memory_min_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal time / realized bound time (the perf score, <= 1)."""
+        return min(1.0, self.ideal_time / max(self.bound_time, 1e-30))
+
+    _chips: int = 256
+
+
+def analyze(rec: dict) -> Optional[RooflinePoint]:
+    if rec.get("status") != "ok":
+        return None
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from repro import configs
+    from repro.models.common import finalize
+
+    cfg = finalize(
+        configs.get_config(rec["arch"]), rec["mesh"].get("model", 16)
+    )
+    chips = rec["n_devices"]
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["bytes_per_device"] / HBM_BW
+    mem_min = model_bytes(rec, cfg) / (chips * HBM_BW)
+    coll = rec["coll_bytes_per_device"] / LINK_BW
+    mem_mid = (mem * mem_min) ** 0.5
+    dominant = max(
+        [("compute", comp), ("memory", mem_mid), ("collective", coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec, cfg)
+    hlo_global = rec["flops_per_device"] * chips
+    hbm = (
+        rec["memory"]["argument_bytes"]
+        + rec["memory"]["temp_bytes"]
+        + rec["memory"]["output_bytes"]
+    )
+    p = RooflinePoint(
+        cell=rec["cell"],
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh="2x16x16" if rec["multi_pod"] else "16x16",
+        compute_s=comp,
+        memory_s=mem,
+        memory_min_s=mem_min,
+        collective_s=coll,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=mf / max(hlo_global, 1e-30),
+        fits_hbm=hbm < 16e9,
+        hbm_gb=hbm / 1e9,
+    )
+    p._chips = chips
+    return p
+
+
+def load_all(art_dir: pathlib.Path = ART_DIR) -> List[RooflinePoint]:
+    pts = []
+    for f in sorted(art_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        p = analyze(rec)
+        if p is not None:
+            pts.append(p)
+    return pts
+
+
+def render_table(pts: List[RooflinePoint], mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute s | mem s (xla/min) | collective s "
+        "| dominant | useful MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for p in pts:
+        if p.mesh != mesh:
+            continue
+        rows.append(
+            f"| {p.arch} | {p.shape} | {p.compute_s:.2e} "
+            f"| {p.memory_s:.2e} / {p.memory_min_s:.2e} "
+            f"| {p.collective_s:.2e} | **{p.dominant}** "
+            f"| {p.useful_ratio:.2f} | {p.roofline_fraction:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    pts = load_all()
+    print(render_table(pts, "16x16"))
+    print()
+    print(render_table(pts, "2x16x16"))

@@ -1,0 +1,286 @@
+"""Benchmark harness — one function per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV rows.  All sizes are scaled to run
+on this CPU container in minutes; the *shape* of each comparison mirrors the
+paper's (Fig. 5 Fibonacci overhead, Fig. 6 FFT, Fig. 7/8 BFS/SSSP vs
+hand-coded worklists, Fig. 9 sort, plus the V1/V-inf overhead decomposition
+of §4.4 and the TVM serving engine).  Roofline rows (§Roofline) are derived
+from the dry-run artifacts, not timed here.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def _time(fn: Callable, repeats: int = 3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def row(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ------------------------------------------------------------ Fig 5: fib
+def bench_fib():
+    from repro.apps import fib
+    from repro.core import HostEngine, DeviceEngine, run_oracle, compare
+
+    for n in (12, 14, 16):
+        _, _, ostats = run_oracle(fib.PROGRAM, fib.initial(n), capacity=1 << 14)
+
+        def run_host():
+            HostEngine(fib.PROGRAM, capacity=1 << 14, collect_stats=False).run(
+                fib.initial(n)
+            )
+
+        eng = HostEngine(fib.PROGRAM, capacity=1 << 14)
+        _, vals, hstats = eng.run(fib.initial(n))
+        t_host = _time(run_host, repeats=1)
+        rep = compare(ostats, hstats)
+        row(
+            f"fib{n}_trees_host", t_host * 1e6,
+            f"tasks={ostats.tasks_executed};epochs={ostats.epochs};"
+            f"us_per_task={t_host*1e6/ostats.tasks_executed:.1f};"
+            f"util={rep.utilization:.2f}",
+        )
+
+        def run_dev():
+            DeviceEngine(fib.PROGRAM, capacity=1 << 14, stack_depth=512).run(
+                fib.initial(n)
+            )
+
+        t_dev = _time(run_dev, repeats=1)
+        row(
+            f"fib{n}_trees_device", t_dev * 1e6,
+            f"speedup_vs_host={t_host/t_dev:.2f}",
+        )
+
+        def run_seq():
+            def f(k):
+                return k if k < 2 else f(k - 1) + f(k - 2)
+            return f(n)
+
+        t_seq = _time(run_seq)
+        row(
+            f"fib{n}_sequential", t_seq * 1e6,
+            f"trees_overhead_x={t_host/max(t_seq,1e-9):.1f}",
+        )
+
+
+# ------------------------------------------------------------ Fig 6: fft
+def bench_fft():
+    from repro.apps import fft
+    from repro.core import HostEngine
+    import jax.numpy as jnp
+    import jax
+
+    for n in (64, 256):
+        xr, xi = fft.random_input(n)
+        prog = fft.make_program(n)
+
+        def run_trees():
+            HostEngine(prog, capacity=1 << 13, collect_stats=False).run(
+                fft.initial(n), heap_init=dict(xr=xr, xi=xi)
+            )
+
+        t_trees = _time(run_trees, repeats=1)
+
+        xc = xr + 1j * xi
+
+        @jax.jit
+        def native(v):
+            return jnp.fft.fft(v)
+
+        t_native = _time(lambda: np.asarray(native(xc)))
+        row(
+            f"fft{n}_trees", t_trees * 1e6,
+            f"native_fft_us={t_native*1e6:.1f};"
+            f"generality_cost_x={t_trees/max(t_native,1e-9):.1f}",
+        )
+
+
+# ------------------------------------------------- Fig 7/8: bfs and sssp
+def bench_graph():
+    from repro.apps import bfs, sssp
+    from repro.apps.baselines import worklist
+    from repro.core import HostEngine
+
+    n = 256
+    adj_off, adj = bfs.random_graph(n, avg_degree=4, seed=0)
+
+    def run_trees_bfs():
+        prog = bfs.make_program(n, len(adj))
+        HostEngine(prog, capacity=1 << 15, collect_stats=False).run(
+            bfs.initial(0), heap_init=bfs.heap_init(adj_off, adj, n)
+        )
+
+    t_trees = _time(run_trees_bfs, repeats=1)
+
+    def run_wl_bfs():
+        worklist.bfs_worklist(adj_off, adj, 0, n)
+
+    t_wl = _time(run_wl_bfs, repeats=1)
+    row(
+        f"bfs_n{n}_trees", t_trees * 1e6,
+        f"worklist_us={t_wl*1e6:.1f};overhead_vs_native_x={t_trees/t_wl:.2f}",
+    )
+
+    wgt = sssp.random_weights(len(adj), seed=1)
+
+    def run_trees_sssp():
+        prog = sssp.make_program(n, len(adj))
+        HostEngine(prog, capacity=1 << 16, collect_stats=False).run(
+            sssp.initial(0), heap_init=sssp.heap_init(adj_off, adj, wgt, n)
+        )
+
+    t_trees = _time(run_trees_sssp, repeats=1)
+
+    def run_wl_sssp():
+        worklist.sssp_worklist(adj_off, adj, wgt, 0, n)
+
+    t_wl = _time(run_wl_sssp, repeats=1)
+    row(
+        f"sssp_n{n}_trees", t_trees * 1e6,
+        f"worklist_us={t_wl*1e6:.1f};overhead_vs_native_x={t_trees/t_wl:.2f}",
+    )
+
+
+# ------------------------------------------------------------ Fig 9: sort
+def bench_sort():
+    from repro.apps import mergesort
+    from repro.apps.baselines import bitonic
+    from repro.core import HostEngine
+    import jax.numpy as jnp
+
+    n = 64
+    x = mergesort.random_input(n)
+
+    def run(use_map):
+        prog = mergesort.make_program(n, use_map=use_map)
+        HostEngine(prog, capacity=1 << 13, collect_stats=False).run(
+            mergesort.initial(n), heap_init=dict(inp=x)
+        )
+
+    t_naive = _time(lambda: run(False), repeats=1)
+    t_map = _time(lambda: run(True), repeats=1)
+    xj = jnp.asarray(x)
+    t_bitonic = _time(lambda: np.asarray(bitonic.bitonic_sort(xj)))
+    row(f"sort{n}_trees_naive", t_naive * 1e6,
+        f"vs_bitonic_x={t_naive/max(t_bitonic,1e-9):.1f}")
+    row(f"sort{n}_trees_map", t_map * 1e6,
+        f"map_speedup_vs_naive_x={t_naive/t_map:.2f};"
+        f"vs_bitonic_x={t_map/max(t_bitonic,1e-9):.1f}")
+    row(f"sort{n}_bitonic_native", t_bitonic * 1e6, "")
+
+
+# --------------------------------------- §4.4: V1 / V_inf decomposition
+def bench_overhead():
+    from repro.apps import nqueens
+    from repro.core import HostEngine, run_oracle, compare
+
+    prog = nqueens.make_program(7)
+    _, _, ostats = run_oracle(prog, nqueens.initial(), capacity=1 << 14)
+    eng = HostEngine(prog, capacity=1 << 14)
+    t = _time(
+        lambda: HostEngine(
+            prog, capacity=1 << 14, collect_stats=False
+        ).run(nqueens.initial()),
+        repeats=1,
+    )
+    _, _, st = eng.run(nqueens.initial())
+    rep = compare(ostats, st)
+    row(
+        "nqueens7_overhead", t * 1e6,
+        f"T1={rep.t1_tasks};Tinf={rep.t_inf_epochs};"
+        f"parallelism={rep.parallelism:.1f};"
+        f"V1_lanes={rep.v1_lane_factor:.2f};"
+        f"Vinf_dispatches={rep.v_inf_dispatches};"
+        f"greedy_bound_P256={rep.greedy_bound(256):.0f}",
+    )
+
+
+# --------------------------------------------------- TVM serving engine
+def bench_serving():
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.models.model import init_model
+    from repro.serving import EpochServer, Request
+
+    cfg = configs.get_reduced("granite_3_8b")
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+
+    def serve(slots):
+        srv = EpochServer(cfg, params, n_slots=slots, max_len=64)
+        for _ in range(8):
+            srv.submit(
+                Request(
+                    prompt=rng.randint(3, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=8,
+                )
+            )
+        done = srv.run_to_completion()
+        return sum(len(r.output) for r in done), srv.epochs
+
+    # warm
+    serve(4)
+    t0 = time.perf_counter()
+    n_tok, epochs = serve(4)
+    dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n1, e1 = serve(1)
+    dt1 = time.perf_counter() - t0
+    row(
+        "serve_8req_slots4", dt * 1e6,
+        f"tokens={n_tok};epochs={epochs};"
+        f"batch_speedup_vs_slots1={dt1/dt:.2f}",
+    )
+
+
+# ----------------------------------------------------- roofline summary
+def bench_roofline():
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from roofline import load_all
+
+    pts = load_all()
+    if not pts:
+        row("roofline", 0.0, "no dry-run artifacts; run repro.launch.dryrun")
+        return
+    for p in pts:
+        if p.mesh != "16x16":
+            continue
+        row(
+            f"roofline_{p.arch}_{p.shape}",
+            p.bound_time * 1e6,
+            f"dominant={p.dominant};useful={p.useful_ratio:.2f};"
+            f"frac={p.roofline_fraction:.2f}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fib()
+    bench_fft()
+    bench_graph()
+    bench_sort()
+    bench_overhead()
+    bench_serving()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

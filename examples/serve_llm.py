@@ -1,0 +1,61 @@
+"""End-to-end serving driver: continuous batching on the TVM scheduler.
+
+16 ragged requests stream through 4 slots of an epoch-synchronized server
+(admission = prefix-sum fork, bulk decode epoch, emit on completion) — the
+paper's machine applied to LLM serving.  Works for every arch family; try
+--arch mamba2_1_3b (O(1)-state SSM decode) or whisper_large_v3 (enc-dec with
+cached cross-KV).
+
+Run:  PYTHONPATH=src python examples/serve_llm.py [--arch granite_3_8b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.model import init_model
+from repro.serving import EpochServer, Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite_3_8b")
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--requests", type=int, default=16)
+args = ap.parse_args()
+
+cfg = configs.get_reduced(args.arch)
+params, _ = init_model(cfg, jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+enc = None
+if cfg.encdec:
+    import jax.numpy as jnp
+
+    enc = jnp.asarray(
+        rng.normal(size=(1, cfg.encoder_len, cfg.d_model)), jnp.float32
+    )
+
+server = EpochServer(
+    cfg, params, n_slots=args.slots, max_len=128, enc_frames=enc
+)
+for i in range(args.requests):
+    server.submit(
+        Request(
+            prompt=rng.randint(3, cfg.vocab, rng.randint(4, 20)).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.randint(4, 16)),
+        )
+    )
+t0 = time.time()
+done = server.run_to_completion()
+dt = time.time() - t0
+tok = sum(len(r.output) for r in done)
+print(
+    f"{cfg.name}: {len(done)} requests, {tok} tokens, {server.epochs} epochs"
+    f" ({args.slots} slots) in {dt:.1f}s -> {tok/dt:.1f} tok/s"
+)
+print(f"  epochs per token ~ {server.epochs/max(tok,1):.2f} "
+      f"(continuous batching keeps slots busy across ragged requests)")
+for r in done[:4]:
+    print(f"  rid={r.rid:2d} prompt_len={len(r.prompt):2d} -> {r.output}")

@@ -1,0 +1,46 @@
+"""End-to-end training driver: a ~10M-param granite-family model trained a
+few hundred steps on CPU with the full substrate — step-indexed data,
+ZeRO-1 AdamW, atomic checkpoints, an injected node failure and automatic
+restart (the loss curve continues exactly where it left off).
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 200]
+Scale up: the same driver with --full and a production mesh runs the real
+configs (see repro/launch/train.py and the multi-pod dry-run).
+"""
+import argparse
+import tempfile
+
+from repro.checkpointing import CheckpointManager
+from repro.launch.train import build
+from repro.runtime import FailureInjector, TrainRunner
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="granite_moe_1b_a400m")
+args = ap.parse_args()
+
+cfg, params, opt_state, step_fn, data, _ = build(
+    args.arch, reduced=True, batch=8, seq=128, steps=args.steps, lr=3e-3
+)
+import numpy as np
+
+n_params = sum(int(np.prod(v.shape)) for v in params.values())
+print(f"training {cfg.name} (reduced, {n_params/1e6:.2f}M params) "
+      f"for {args.steps} steps with a failure injected at step "
+      f"{args.steps // 2}")
+
+runner = TrainRunner(
+    step_fn,
+    data,
+    CheckpointManager(tempfile.mkdtemp(prefix="repro_ckpt_"), keep=2,
+                      async_save=True),
+    ckpt_every=25,
+    failure=FailureInjector(fail_at_step=args.steps // 2),
+)
+params, opt_state, hist = runner.run_with_restarts(
+    params, opt_state, args.steps
+)
+for h in hist:
+    print(f"  step {h['step']:5d}  loss {h['loss']:.4f}  lr {h['lr']:.2e}")
+print(f"recovered from 1 injected failure; "
+      f"{len(runner.straggler.events)} straggler events; done")

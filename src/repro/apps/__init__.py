@@ -1,0 +1,15 @@
+# Task-parallel applications from the paper's evaluation (§6) plus the
+# programmability-study set (§6.5), each written against the TVM primitives,
+# with hand-coded "native" baselines under apps/baselines/.
+from . import (  # noqa: F401
+    annealing,
+    bfs,
+    fft,
+    fib,
+    matmul,
+    mergesort,
+    nqueens,
+    sssp,
+    treewalk,
+    tsp,
+)

@@ -1,0 +1,88 @@
+"""Task-parallel simulated annealing — from the paper's programmability
+study (§6.5).
+
+Independent annealing chains over a quadratic pseudo-Boolean objective:
+each chain task proposes a bit flip (hash-derived), accepts by Metropolis
+with a fixed-point temperature schedule, scatter-mins its energy into the
+global best, and forks its successor until the step budget runs out.
+Chains are embarrassingly parallel — every epoch runs all live chains as
+one bulk step (the regular-parallelism end of the TVM spectrum, like
+Fig. 6's FFT).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.program import HeapVar, InitialTask, Program, TaskType
+
+ESCALE = 1  # energies are already integral
+
+
+def make_program(n_bits: int, n_steps: int, n_chains: int) -> Program:
+    def _energy(ctx, state):
+        """E(state) = sum_ij Q[i,j] b_i b_j  (Q integral, n_bits<=16)."""
+        e = jnp.int32(0)
+        for i in range(n_bits):
+            bi = (state >> i) & 1
+            for j in range(i, n_bits):
+                bj = (state >> j) & 1
+                e = e + ctx.read("Q", i * n_bits + j) * bi * bj
+        return e
+
+    def _seed(ctx):
+        # root task forks every chain (static sites), paper-style single seed
+        for cid in range(n_chains):
+            ctx.fork("step", argi=((cid * 26543 + 7) % 65536, 0, cid))
+
+    def _step(ctx):
+        state, t, cid = ctx.argi(0), ctx.argi(1), ctx.argi(2)
+        h = (state * 31421 + t * 6927 + cid * 97 + 13) & 0x7FFF
+        flip = h % n_bits
+        cand = state ^ (1 << flip)
+        e_cur = _energy(ctx, state)
+        e_new = _energy(ctx, cand)
+        # Metropolis with linear temperature ramp-down, integer threshold:
+        # accept if dE < 0, or with prob ~ temp/(temp+dE) via hash draw
+        d_e = e_new - e_cur
+        temp = jnp.maximum(1, (n_steps - t) * 4 // n_steps + 1)
+        draw = (h >> 7) % 16
+        accept = (d_e < 0) | (draw < temp)
+        nxt = jnp.where(accept, cand, state)
+        e_next = jnp.where(accept, e_new, e_cur)
+        ctx.write("best", 0, e_next, op="min")
+        ctx.fork("step", argi=(nxt, t + 1, cid), where=t + 1 < n_steps)
+
+    return Program(
+        name="annealing",
+        tasks=(TaskType("seed", _seed), TaskType("step", _step)),
+        n_arg_i=3,
+        heap=(
+            HeapVar("Q", (n_bits * n_bits,), jnp.int32),
+            HeapVar("best", (1,), jnp.int32),
+        ),
+    )
+
+
+def initial() -> InitialTask:
+    return InitialTask(task="seed")
+
+
+def random_qubo(n_bits: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    q = rng.randint(-5, 6, size=(n_bits, n_bits))
+    return np.triu(q).astype(np.int32)
+
+
+def brute_force_min(Q: np.ndarray) -> int:
+    n = Q.shape[0]
+    best = 2**30
+    for s in range(1 << n):
+        bits = [(s >> i) & 1 for i in range(n)]
+        e = sum(
+            Q[i, j] * bits[i] * bits[j]
+            for i in range(n)
+            for j in range(i, n)
+        )
+        best = min(best, int(e))
+    return best

@@ -1,0 +1,4 @@
+# Hand-coded "native" implementations (the paper's LonestarGPU ports and
+# native OpenCL bitonic sort, re-expressed as idiomatic dense JAX): these are
+# what TREES' generality is benchmarked against (§6.3, §6.4).
+from . import worklist, bitonic  # noqa: F401

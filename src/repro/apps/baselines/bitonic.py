@@ -1,0 +1,32 @@
+"""Native bitonic sort — the paper's "high-performance native OpenCL sort"
+baseline (§6.4, Fig. 9), as one fused jitted program of log^2(n) dense
+compare-exchange stages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("ascending",))
+def bitonic_sort(x: jnp.ndarray, ascending: bool = True) -> jnp.ndarray:
+    n = x.shape[0]
+    assert n & (n - 1) == 0, "bitonic sort requires power-of-two length"
+    idx = jnp.arange(n)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            a = x
+            b = x[partner]
+            up = (idx & k) == 0
+            keep_min = (idx < partner) == up
+            lo = jnp.minimum(a, b)
+            hi = jnp.maximum(a, b)
+            x = jnp.where(keep_min, lo, hi)
+            j //= 2
+        k *= 2
+    return x if ascending else x[::-1]

@@ -1,0 +1,67 @@
+"""Hand-coded worklist BFS / SSSP — our port of the LonestarGPU benchmarks.
+
+The Lonestar kernels use input/output worklists with an atomically bumped
+tail pointer and relaunch until the output list is empty (paper §6.3).  The
+TPU-idiomatic equivalent of a push worklist is a dense frontier mask with
+edge-parallel relaxation and a segment-min scatter (no atomics); the host
+checks a single "anything relaxed?" scalar per round — the exact analogue of
+Lonestar's one-int transfer per kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..bfs import INF
+from ..sssp import INF_F
+
+
+def _edge_src(adj_off: np.ndarray) -> np.ndarray:
+    deg = np.diff(adj_off)
+    return np.repeat(np.arange(len(deg)), deg).astype(np.int32)
+
+
+@jax.jit
+def _bfs_round(dist, frontier, d, edge_src, adj):
+    cand = jnp.where(frontier[edge_src], d + 1, INF)
+    relaxed = jnp.full_like(dist, INF).at[adj].min(cand)
+    new_dist = jnp.minimum(dist, relaxed)
+    new_frontier = new_dist < dist
+    return new_dist, new_frontier, new_frontier.any()
+
+
+def bfs_worklist(adj_off, adj, src: int, n: int):
+    """Returns (dist, rounds).  One device dispatch + one scalar per round."""
+    edge_src = jnp.asarray(_edge_src(adj_off))
+    adj = jnp.asarray(adj)
+    dist = jnp.full((n,), INF, jnp.int32).at[src].set(0)
+    frontier = jnp.zeros((n,), bool).at[src].set(True)
+    d = 0
+    while True:
+        dist, frontier, more = _bfs_round(dist, frontier, jnp.int32(d), edge_src, adj)
+        d += 1
+        if not bool(more):  # the single-int host transfer, as in Lonestar
+            return dist, d
+
+
+@jax.jit
+def _sssp_round(dist, edge_src, adj, wgt):
+    cand = dist[edge_src] + wgt
+    relaxed = jnp.full_like(dist, INF_F).at[adj].min(cand)
+    new_dist = jnp.minimum(dist, relaxed)
+    return new_dist, (new_dist < dist).any()
+
+
+def sssp_worklist(adj_off, adj, wgt, src: int, n: int):
+    """Bellman-Ford rounds over the dense edge list (Lonestar-style)."""
+    edge_src = jnp.asarray(_edge_src(adj_off))
+    adj = jnp.asarray(adj)
+    wgt = jnp.asarray(wgt)
+    dist = jnp.full((n,), INF_F, jnp.float32).at[src].set(0.0)
+    rounds = 0
+    while True:
+        dist, more = _sssp_round(dist, edge_src, adj, wgt)
+        rounds += 1
+        if not bool(more):
+            return dist, rounds

@@ -1,0 +1,74 @@
+"""Task-parallel blocked matrix multiply (programmability study, §6.5).
+
+Recursive 2x2x2 decomposition: each task splits (i, j, k, size) into eight
+children until ``size == block``, where a data-parallel ``map`` computes the
+block product and accumulates with ``add`` scatters (commutative, so the
+eight-way write sharing needs no join ordering).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.program import HeapVar, InitialTask, MapType, Program, TaskType
+
+
+def make_program(n: int, block: int = 4) -> Program:
+    assert n % block == 0 and (n // block) & (n // block - 1) == 0
+
+    def _mm(ctx):
+        i0, j0, k0, size = (
+            ctx.argi(0), ctx.argi(1), ctx.argi(2), ctx.argi(3)
+        )
+        leaf = size == block
+        ctx.map("block_mm", argi=(i0, j0, k0), where=leaf)
+        h = size // 2
+        for di in (0, 1):
+            for dj in (0, 1):
+                for dk in (0, 1):
+                    ctx.fork(
+                        "mm",
+                        argi=(i0 + di * h, j0 + dj * h, k0 + dk * h, h),
+                        where=~leaf,
+                    )
+
+    def _block_mm(mctx):
+        i0, j0, k0 = mctx.argi(0), mctx.argi(1), mctx.argi(2)
+        r, c = mctx.eid // block, mctx.eid % block
+        acc = jnp.float32(0.0)
+        for kk in range(block):
+            a = mctx.read("A", (i0 + r) * n + (k0 + kk))
+            b = mctx.read("B", (k0 + kk) * n + (j0 + c))
+            acc = acc + a * b
+        mctx.write("C", (i0 + r) * n + (j0 + c), acc, op="add")
+
+    return Program(
+        name="matmul",
+        tasks=(TaskType("mm", _mm),),
+        maps=(
+            MapType(
+                "block_mm",
+                _block_mm,
+                domain=lambda argi: jnp.full(argi.shape[:-1], block * block),
+                max_domain=block * block,
+            ),
+        ),
+        n_arg_i=4,
+        heap=(
+            HeapVar("A", (n * n,), jnp.float32),
+            HeapVar("B", (n * n,), jnp.float32),
+            HeapVar("C", (n * n,), jnp.float32),
+        ),
+    )
+
+
+def initial(n: int) -> InitialTask:
+    return InitialTask(task="mm", argi=(0, 0, 0, n))
+
+
+def random_inputs(n: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return (
+        rng.normal(size=(n, n)).astype(np.float32),
+        rng.normal(size=(n, n)).astype(np.float32),
+    )

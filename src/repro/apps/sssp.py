@@ -1,0 +1,88 @@
+"""Task-parallel single-source shortest paths (paper §6.3, Fig. 8).
+
+Same chunked-expansion structure as BFS, with float tentative distances in
+``argf`` and edge weights in the heap — the relax-with-min-write formulation
+the LonestarGPU ``sssp`` worklist uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .bfs import random_graph  # noqa: F401  (re-exported for benchmarks)
+
+INF_F = np.float32(3.0e38)
+CHUNK = 8
+
+
+def make_program(n_nodes: int, n_edges: int) -> Program:
+    def _relax(ctx):
+        v, chunk = ctx.argi(0), ctx.argi(1)
+        d = ctx.argf(0)
+        off = ctx.read("adj_off", v)
+        deg = ctx.read("adj_off", v + 1) - off
+        first = chunk == 0
+        improve = d < ctx.read("dist", v)
+        live = jnp.where(first, improve, True)
+        ctx.write("dist", v, d, op="min", where=first & improve)
+        base = chunk * CHUNK
+        for i in range(CHUNK):
+            e = base + i
+            u = ctx.read("adj", off + e)
+            nd = d + ctx.read("wgt", off + e)
+            stale = ctx.read("dist", u) <= nd
+            ctx.fork(
+                "relax", argi=(u, 0), argf=(nd,),
+                where=live & (e < deg) & ~stale,
+            )
+        ctx.fork(
+            "relax", argi=(v, chunk + 1), argf=(d,),
+            where=live & (base + CHUNK < deg),
+        )
+
+    return Program(
+        name="sssp",
+        tasks=(TaskType("relax", _relax),),
+        n_arg_i=2,
+        n_arg_f=1,
+        heap=(
+            HeapVar("adj_off", (n_nodes + 1,), jnp.int32),
+            HeapVar("adj", (max(n_edges, 1),), jnp.int32),
+            HeapVar("wgt", (max(n_edges, 1),), jnp.float32),
+            HeapVar("dist", (n_nodes,), jnp.float32),
+        ),
+    )
+
+
+def initial(src: int = 0) -> InitialTask:
+    return InitialTask(task="relax", argi=(src, 0), argf=(0.0,))
+
+
+def random_weights(n_edges: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    return rng.uniform(0.1, 10.0, size=max(n_edges, 1)).astype(np.float32)
+
+
+def heap_init(adj_off, adj, wgt, n: int):
+    dist = np.full(n, INF_F, np.float32)
+    return dict(adj_off=adj_off, adj=adj, wgt=wgt, dist=dist)
+
+
+def sssp_reference(adj_off, adj, wgt, src: int, n: int) -> np.ndarray:
+    """Sequential Dijkstra (CPU comparison point)."""
+    import heapq
+
+    dist = np.full(n, np.float64(INF_F))
+    dist[src] = 0.0
+    pq = [(0.0, src)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist[v]:
+            continue
+        for e in range(adj_off[v], adj_off[v + 1]):
+            u, nd = adj[e], d + wgt[e]
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(pq, (nd, u))
+    return dist.astype(np.float32)

@@ -1,0 +1,87 @@
+"""Pre/post-order binary-tree traversal — the paper's running example
+(Fig. 2 code, Fig. 3 execution trace, Fig. 4 tree).
+
+The tree lives in the heap as left/right child index arrays (-1 = NULL).
+``visit`` appends the node id to an order buffer using an atomically
+incremented cursor — expressed TPU-style as an ``add``-scatter on a counter
+plus a slot reservation via the task's own emit ordering.  To keep commit
+order deterministic we instead record *visit epochs*: postorder is validated
+by checking every parent is visited after both children (the property the
+paper's postorder guarantees), and preorder the reverse.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.program import HeapVar, InitialTask, Program, TaskType
+
+
+def make_program(n_nodes: int, order: str = "post") -> Program:
+    assert order in ("pre", "post")
+
+    def _walk(ctx):
+        node = ctx.argi(0)
+        is_null = node < 0
+        left = ctx.read("left", node)
+        right = ctx.read("right", node)
+        if order == "pre":
+            # visit before children: stamp with the epoch-level clock
+            ctx.write("visit_clock", 0, 1, op="add", where=~is_null)
+            ctx.write(
+                "visit_epoch", node, ctx.read("visit_clock", 0), where=~is_null
+            )
+            ctx.fork("walk", argi=(left,), where=~is_null)
+            ctx.fork("walk", argi=(right,), where=~is_null)
+        else:
+            ctx.fork("walk", argi=(left,), where=~is_null)
+            ctx.fork("walk", argi=(right,), where=~is_null)
+            ctx.join("visit_after", argi=(node,), where=~is_null)
+
+    def _visit_after(ctx):
+        node = ctx.argi(0)
+        ctx.write("visit_clock", 0, 1, op="add")
+        ctx.write("visit_epoch", node, ctx.read("visit_clock", 0), where=True)
+
+    tasks = [TaskType("walk", _walk)]
+    if order == "post":
+        tasks.append(TaskType("visit_after", _visit_after))
+    return Program(
+        name=f"treewalk_{order}",
+        tasks=tuple(tasks),
+        n_arg_i=1,
+        value_width=1,
+        value_dtype=jnp.int32,
+        heap=(
+            HeapVar("left", (n_nodes,), jnp.int32),
+            HeapVar("right", (n_nodes,), jnp.int32),
+            HeapVar("visit_epoch", (n_nodes,), jnp.int32),
+            HeapVar("visit_clock", (1,), jnp.int32),
+        ),
+    )
+
+
+def random_tree(n_nodes: int, seed: int = 0):
+    """Random binary tree over nodes 0..n-1 rooted at 0."""
+    rng = np.random.RandomState(seed)
+    left = -np.ones(n_nodes, np.int32)
+    right = -np.ones(n_nodes, np.int32)
+    slots = [0]  # nodes with a free child pointer
+    for v in range(1, n_nodes):
+        while True:
+            p = slots[rng.randint(len(slots))]
+            side = rng.randint(2)
+            if side == 0 and left[p] < 0:
+                left[p] = v
+                break
+            if side == 1 and right[p] < 0:
+                right[p] = v
+                break
+            if left[p] >= 0 and right[p] >= 0:
+                slots.remove(p)
+        slots.append(v)
+    return left, right
+
+
+def initial() -> InitialTask:
+    return InitialTask(task="walk", argi=(0,))

@@ -1,0 +1,4 @@
+# Checkpointing substrate: atomic on-disk checkpoints (keep-k, async write
+# thread, exact-resume manifests) and elastic resharding across meshes.
+from .manager import CheckpointManager  # noqa: F401
+from .reshard import restore_resharded  # noqa: F401

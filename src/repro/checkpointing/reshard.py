@@ -1,0 +1,37 @@
+"""Elastic resharding: restore a checkpoint written under one mesh onto a
+*different* mesh (fewer/more pods after failure or scale-up).
+
+Checkpoints are stored unsharded-on-disk (full arrays), so resharding is a
+device_put with the new mesh's NamedShardings — the elastic-scaling path of
+runtime/elastic.py.  At 1000+ node scale the same layout works per-host with
+a sharded npz per data-parallel group; the manifest records enough to stitch
+(see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from ..models.common import ShardingRules, logical_to_physical
+from .manager import CheckpointManager
+
+
+def restore_resharded(
+    mgr: CheckpointManager,
+    axes: Dict[str, tuple],
+    mesh,
+    rules: ShardingRules,
+    step: Optional[int] = None,
+):
+    """Restore a params dict onto ``mesh`` using logical->physical rules."""
+    step, flat, extra = mgr.restore_flat(step)
+    out = {}
+    for name, arr in flat.items():
+        if name in axes:
+            spec = logical_to_physical(axes[name], rules)
+            out[name] = jax.device_put(arr, NamedSharding(mesh, spec))
+        else:
+            out[name] = jax.device_put(arr)
+    return step, out, extra

@@ -1,0 +1,71 @@
+"""Architecture registry: one module per assigned architecture, plus the
+input-shape table and per-cell skip rules (DESIGN.md §5)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+from ..models.common import ModelConfig
+
+ARCH_IDS = (
+    "yi_34b",
+    "deepseek_67b",
+    "granite_3_8b",
+    "command_r_35b",
+    "whisper_large_v3",
+    "mamba2_1_3b",
+    "granite_moe_1b_a400m",
+    "llama4_scout_17b_a16e",
+    "hymba_1_5b",
+    "chameleon_34b",
+)
+
+
+def normalize(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{normalize(arch)}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    """Small same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f".{normalize(arch)}", __package__)
+    return mod.reduced()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    s.name: s
+    for s in (
+        ShapeSpec("train_4k", "train", 4096, 256),
+        ShapeSpec("prefill_32k", "prefill", 32768, 32),
+        ShapeSpec("decode_32k", "decode", 32768, 128),
+        ShapeSpec("long_500k", "decode", 524288, 1),
+    )
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """Per-spec skip rules; None = run the cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full quadratic attention; long_500k needs sub-quadratic"
+    return None
+
+
+def all_cells():
+    """Yield (arch_id, shape_name, skip_reason_or_None) for all 40 cells."""
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            yield a, s.name, skip_reason(cfg, s)

@@ -1,0 +1,23 @@
+# The paper's primary contribution: the TVM abstract machine and the TREES
+# epoch-synchronized task-parallel runtime, adapted from GPU/OpenCL to
+# TPU/JAX (see DESIGN.md section 2 for the adaptation table).
+from .engine import DeviceEngine, EngineError, HostEngine, RunStats
+from .interp import OracleStats, run_oracle
+from .program import HeapVar, InitialTask, MapType, Program, TaskType
+from .analysis import OverheadReport, compare
+
+__all__ = [
+    "DeviceEngine",
+    "EngineError",
+    "HostEngine",
+    "RunStats",
+    "OracleStats",
+    "run_oracle",
+    "HeapVar",
+    "InitialTask",
+    "MapType",
+    "Program",
+    "TaskType",
+    "OverheadReport",
+    "compare",
+]

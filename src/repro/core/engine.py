@@ -1,0 +1,309 @@
+"""TREES epoch engines: host-loop (paper-faithful) and on-device.
+
+``HostEngine`` reproduces the paper's CPU/GPU split: the Python host performs
+epoch phases 1 and 3 (stack bookkeeping, flag readback — the paper's
+``joinScheduled``/``mapScheduled``/``nextFreeCore`` transfers) and dispatches
+one jitted XLA program per epoch, sized to the popped NDRange padded to a
+power-of-two bucket (the analogue of launching a kernel with that NDRange).
+Every host<->device scalar transfer in the paper has a counterpart here, so
+the paper's critical-path overhead V_inf stays measurable.
+
+``DeviceEngine`` is the beyond-paper variant the paper itself predicts
+("future chips with tighter CPU/GPU coupling"): the entire epoch loop runs
+on-device inside one ``lax.while_loop`` with the join/NDRange stacks as fixed
+capacity device arrays, eliminating the per-epoch dispatch + transfer from
+the critical path entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tvm
+from .program import InitialTask, Program
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Work/critical-path accounting in the paper's terms (§4.4.1)."""
+
+    epochs: int = 0                 # critical path length T_inf (in epochs)
+    tasks_executed: int = 0         # work T_1 (in tasks)
+    lanes_launched: int = 0         # includes padding/invalid lanes
+    total_forks: int = 0
+    map_launches: int = 0
+    map_elements: int = 0
+    peak_tv_slots: int = 0          # space (paper §4.4.2)
+    dispatches: int = 0             # host->device program launches (V_inf)
+    scalar_transfers: int = 0       # device->host readbacks (V_inf)
+
+    @property
+    def utilization(self) -> float:
+        """Active lanes / launched lanes — the SIMT-divergence analogue."""
+        return self.tasks_executed / max(1, self.lanes_launched)
+
+
+class EngineError(RuntimeError):
+    pass
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Round the NDRange up to a power-of-two launch bucket."""
+    p = minimum
+    while p < n:
+        p *= 2
+    return p
+
+
+def _build_epoch_step(program: Program, fork_offsets_fn=None):
+    """Shared phase-2+3 step; specialized by jit on the lane count P."""
+
+    def step(state: tvm.TVMState, heap, start, count, cen, P: int):
+        idx = start + jnp.arange(P, dtype=jnp.int32)
+        in_range = jnp.arange(P, dtype=jnp.int32) < count
+        cidx = jnp.clip(idx, 0, state.capacity - 1)
+        active = in_range & (state.epoch[cidx] == cen)
+        per_type, _ = tvm.trace_tasks(program, state, heap, idx, active)
+        return tvm.commit_epoch(
+            program, state, heap, idx, active, per_type, cen,
+            fork_offsets_fn=fork_offsets_fn,
+        )
+
+    return step
+
+
+class HostEngine:
+    """Paper-faithful engine: host drives stacks, device runs bulk epochs."""
+
+    def __init__(
+        self,
+        program: Program,
+        capacity: int = 1 << 14,
+        collect_stats: bool = True,
+        fork_offsets_fn: Optional[Callable] = None,
+        donate: bool = False,
+    ):
+        self.program = program
+        self.capacity = capacity
+        self.collect_stats = collect_stats
+        self._raw_step = _build_epoch_step(program, fork_offsets_fn)
+        self._step_cache: Dict[int, Any] = {}
+        self._map_cache: Dict[Tuple[int, int, int], Any] = {}
+        self._donate = donate
+
+    # ------------------------------------------------------------- steps
+    def _get_step(self, P: int):
+        if P not in self._step_cache:
+            fn = functools.partial(self._raw_step, P=P)
+            self._step_cache[P] = jax.jit(
+                fn, donate_argnums=(0, 1) if self._donate else ()
+            )
+        return self._step_cache[P]
+
+    def _get_map_step(self, mid: int, P: int, D: int):
+        key = (mid, P, D)
+        if key not in self._map_cache:
+            def mfn(heap, where, argi, argf):
+                return tvm.run_map_payload(
+                    self.program, heap, mid, where, argi, argf, D
+                )
+
+            self._map_cache[key] = jax.jit(
+                mfn, donate_argnums=(0,) if self._donate else ()
+            )
+        return self._map_cache[key]
+
+    # --------------------------------------------------------------- run
+    def run(
+        self,
+        initial: InitialTask,
+        heap_init: Optional[Dict[str, Any]] = None,
+        max_epochs: int = 1 << 20,
+    ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray, RunStats]:
+        """Execute the program to completion.
+
+        Returns (final heap, final TV value array, stats).  The TVM halts
+        when the join/NDRange stacks empty (paper §4.3.3).
+        """
+        program = self.program
+        state = tvm.init_state(program, self.capacity, initial)
+        heap = program.init_heap(**(heap_init or {}))
+        # phase-1 state owned by the CPU, exactly as in the paper (§5.2.2)
+        join_stack = [1]
+        range_stack = [(0, 1)]
+        next_free_host = 1
+        stats = RunStats()
+
+        while join_stack:
+            if stats.epochs >= max_epochs:
+                raise EngineError(f"exceeded max_epochs={max_epochs}")
+            cen = join_stack.pop()
+            start, count = range_stack.pop()
+            P = _bucket(count)
+            step = self._get_step(P)
+            state, heap, summary, map_launches = step(
+                state, heap, jnp.asarray(start, jnp.int32),
+                jnp.asarray(count, jnp.int32), jnp.asarray(cen, jnp.int32),
+            )
+            # the paper's end-of-epoch readback: nextFreeCore, joinScheduled,
+            # mapScheduled (§5.2.4) (+ stats counters when enabled)
+            total_forks, join_sched, map_sched, n_active, overflow, nf = (
+                jax.device_get(
+                    (
+                        summary.total_forks,
+                        summary.join_scheduled,
+                        summary.map_scheduled,
+                        summary.n_active,
+                        summary.overflow,
+                        state.next_free,
+                    )
+                )
+            )
+            stats.dispatches += 1
+            stats.scalar_transfers += 1
+            if overflow:
+                raise EngineError(
+                    f"task vector overflow: capacity={self.capacity}"
+                )
+            if join_sched:
+                join_stack.append(cen)
+                range_stack.append((start, count))
+            if total_forks > 0:
+                join_stack.append(cen + 1)
+                range_stack.append((int(nf) - int(total_forks), int(total_forks)))
+            next_free_host = int(nf)
+
+            if map_sched:
+                for ml in map_launches:
+                    where = np.asarray(jax.device_get(ml.where))
+                    if not where.any():
+                        continue
+                    argi = np.asarray(jax.device_get(ml.argi))
+                    dom = np.asarray(self.program.maps[ml.map_id].domain(argi))
+                    D = _bucket(int(dom[where].max()), minimum=8)
+                    mstep = self._get_map_step(ml.map_id, int(where.shape[0]), D)
+                    heap = mstep(heap, ml.where, ml.argi, ml.argf)
+                    stats.map_launches += 1
+                    stats.dispatches += 1
+                    if self.collect_stats:
+                        stats.map_elements += int(dom[where].sum())
+
+            if self.collect_stats:
+                stats.epochs += 1
+                stats.tasks_executed += int(n_active)
+                stats.lanes_launched += P
+                stats.total_forks += int(total_forks)
+                stats.peak_tv_slots = max(stats.peak_tv_slots, next_free_host)
+            else:
+                stats.epochs += 1
+
+        return heap, state.value, stats
+
+
+class DeviceEngine:
+    """Whole-program engine: stacks + epoch loop inside one XLA program.
+
+    Beyond-paper optimization (the paper's "tighter coupling" prediction):
+    zero per-epoch dispatches/transfers on the critical path.  Constraints:
+    fixed TV capacity processed every epoch (no NDRange bucketing) and map
+    payloads sized by ``MapType.max_domain``.
+    """
+
+    def __init__(
+        self,
+        program: Program,
+        capacity: int = 1 << 12,
+        stack_depth: int = 1 << 10,
+        fork_offsets_fn: Optional[Callable] = None,
+    ):
+        self.program = program
+        self.capacity = capacity
+        self.stack_depth = stack_depth
+        self._raw_step = _build_epoch_step(program, fork_offsets_fn)
+        self._compiled = None
+
+    def _body(self, carry):
+        (state, heap, jstack, rstack, sp, n_epochs, err) = carry
+        cen = jstack[sp - 1]
+        start, count = rstack[sp - 1, 0], rstack[sp - 1, 1]
+        sp = sp - 1
+        old_next_free = state.next_free
+        state, heap, summary, map_launches = self._raw_step(
+            state, heap, start, count, cen, P=self.capacity
+        )
+        # push join range back, then the forked range (LIFO order, §4.3.3)
+        def push(jstack, rstack, sp, e, s, c, pred):
+            ssp = jnp.clip(sp, 0, self.stack_depth - 1)
+            jstack = jnp.where(
+                pred, jstack.at[ssp].set(e), jstack
+            )
+            rstack = jnp.where(
+                pred, rstack.at[ssp].set(jnp.stack([s, c])), rstack
+            )
+            return jstack, rstack, sp + pred.astype(jnp.int32)
+
+        jstack, rstack, sp = push(
+            jstack, rstack, sp, cen, start, count, summary.join_scheduled
+        )
+        forked = summary.total_forks > 0
+        jstack, rstack, sp = push(
+            jstack, rstack, sp, cen + 1, old_next_free, summary.total_forks,
+            forked,
+        )
+        for ml in map_launches:
+            mt = self.program.maps[ml.map_id]
+            if mt.max_domain <= 0:
+                raise EngineError(
+                    f"map '{mt.name}' needs max_domain>0 for DeviceEngine"
+                )
+            heap = jax.lax.cond(
+                ml.where.any(),
+                lambda h: tvm.run_map_payload(
+                    self.program, h, ml.map_id, ml.where, ml.argi, ml.argf,
+                    mt.max_domain,
+                ),
+                lambda h: h,
+                heap,
+            )
+        err = err | summary.overflow | (sp >= self.stack_depth)
+        return (state, heap, jstack, rstack, sp, n_epochs + 1, err)
+
+    def run(
+        self,
+        initial: InitialTask,
+        heap_init: Optional[Dict[str, Any]] = None,
+        max_epochs: int = 1 << 16,
+    ):
+        program = self.program
+        state = tvm.init_state(program, self.capacity, initial)
+        heap = program.init_heap(**(heap_init or {}))
+        jstack = jnp.zeros((self.stack_depth,), jnp.int32).at[0].set(1)
+        rstack = (
+            jnp.zeros((self.stack_depth, 2), jnp.int32)
+            .at[0].set(jnp.asarray([0, 1], jnp.int32))
+        )
+
+        def cond(carry):
+            (_, _, _, _, sp, n_epochs, err) = carry
+            return (sp > 0) & (n_epochs < max_epochs) & (~err)
+
+        @jax.jit
+        def loop(state, heap, jstack, rstack):
+            carry = (
+                state, heap, jstack, rstack,
+                jnp.asarray(1, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.asarray(False),
+            )
+            return jax.lax.while_loop(cond, self._body, carry)
+
+        state, heap, _, _, sp, n_epochs, err = loop(state, heap, jstack, rstack)
+        if bool(err):
+            raise EngineError("TV capacity or stack depth exhausted")
+        stats = RunStats(epochs=int(n_epochs), dispatches=1, scalar_transfers=1)
+        stats.peak_tv_slots = int(jax.device_get(state.next_free))
+        return heap, state.value, stats

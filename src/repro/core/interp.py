@@ -1,0 +1,193 @@
+"""Sequential reference interpreter for TVM programs (the runtime's oracle).
+
+Implements the abstract TVM of paper §4 directly with Python lists and
+numpy scalars — no vectorization, no padding, no buckets — and runs the very
+same task functions through the same ``EpochCtx`` effect API, one lane at a
+time.  The vectorized engines must produce identical heaps and identical
+emitted values; hypothesis property tests drive both on random programs.
+
+It also returns the *ideal* work/critical-path numbers (T1 = total tasks,
+T_inf = number of epochs), which ``analysis.py`` compares against engine
+stats to isolate the runtime overheads V1 / V_inf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .primitives import EpochCtx, MapCtx
+from .program import InitialTask, Program, pack_args
+
+
+@dataclasses.dataclass
+class OracleStats:
+    epochs: int = 0          # T_inf in epochs
+    tasks_executed: int = 0  # T_1 in tasks
+    total_forks: int = 0
+    map_elements: int = 0
+    peak_tv_slots: int = 0
+
+
+def run_oracle(
+    program: Program,
+    initial: InitialTask,
+    heap_init: Optional[Dict[str, Any]] = None,
+    capacity: int = 1 << 14,
+    max_epochs: int = 1 << 20,
+) -> Tuple[Dict[str, np.ndarray], np.ndarray, OracleStats]:
+    """Run the TVM semantics sequentially; returns (heap, values, stats)."""
+    import jax.numpy as jnp
+
+    heap_j = program.init_heap(**(heap_init or {}))
+    heap = {k: np.asarray(v).copy() for k, v in heap_j.items()}
+
+    task = np.zeros(capacity, np.int64)
+    argi = np.zeros((capacity, program.n_arg_i), np.int64)
+    argf = np.zeros((capacity, program.n_arg_f), np.float64)
+    epoch = np.zeros(capacity, np.int64)
+    value = np.zeros(
+        (capacity, program.value_width),
+        np.asarray(jnp.zeros((), program.value_dtype)).dtype,
+    )
+    child_base = np.zeros(capacity, np.int64)
+    child_count = np.zeros(capacity, np.int64)
+
+    ai, af = pack_args(program, initial.argi, initial.argf)
+    task[0] = program.task_id(initial.task)
+    argi[0] = ai
+    argf[0] = af
+    epoch[0] = 1
+    next_free = 1
+
+    join_stack = [1]
+    range_stack = [(0, 1)]
+    stats = OracleStats(peak_tv_slots=1)
+
+    while join_stack:
+        if stats.epochs >= max_epochs:
+            raise RuntimeError("oracle exceeded max_epochs")
+        cen = join_stack.pop()
+        start, count = range_stack.pop()
+        stats.epochs += 1
+
+        # ---- phase 2: execute each active lane sequentially -------------
+        effects = []
+        for slot in range(start, start + count):
+            if epoch[slot] != cen:
+                continue
+            ctx = EpochCtx(
+                program,
+                np.int32(argi[slot]),
+                np.float32(argf[slot]),
+                int(child_base[slot]),
+                int(child_count[slot]),
+                slot,
+                {k: v.copy() for k, v in heap.items()},  # pre-epoch snapshot
+                value.copy(),
+            )
+            program.tasks[int(task[slot])].fn(ctx)
+            effects.append((slot, ctx))
+            stats.tasks_executed += 1
+
+        # ---- phase 3: commit in slot order ------------------------------
+        old_next_free = next_free
+        join_sched = False
+        map_calls: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        heap_writes = []
+        for slot, ctx in effects:
+            my_children = 0
+            for f in ctx.forks:
+                if not bool(f.where):
+                    continue
+                s = next_free
+                if s >= capacity:
+                    raise RuntimeError("oracle TV overflow")
+                task[s] = int(f.task)
+                argi[s] = np.asarray(f.argi)
+                argf[s] = np.asarray(f.argf)
+                epoch[s] = cen + 1
+                child_base[s] = 0
+                child_count[s] = 0
+                next_free += 1
+                my_children += 1
+                stats.total_forks += 1
+            base = next_free - my_children
+            child_base[slot] = base
+            child_count[slot] = my_children
+            joined = ctx.join_site is not None and bool(ctx.join_site.where)
+            if joined:
+                j = ctx.join_site
+                task[slot] = int(j.task)
+                argi[slot] = np.asarray(j.argi)
+                argf[slot] = np.asarray(j.argf)
+                join_sched = True
+            if bool(ctx.emit_where):
+                value[slot] = np.asarray(ctx.emit_value)
+            if not joined:
+                epoch[slot] = 0
+            for w in ctx.writes:
+                heap_writes.append(w)
+            for m in ctx.map_sites:
+                if bool(m.where):
+                    map_calls.append(
+                        (m.map_id, np.asarray(m.argi), np.asarray(m.argf))
+                    )
+
+        for w in heap_writes:
+            if not bool(w.where):
+                continue
+            arr = heap[w.name]
+            i = int(np.clip(int(w.index), 0, arr.shape[0] - 1))
+            v = np.asarray(w.value)
+            if w.op == "set":
+                arr[i] = v
+            elif w.op == "add":
+                arr[i] = arr[i] + v
+            elif w.op == "min":
+                arr[i] = np.minimum(arr[i], v)
+            elif w.op == "max":
+                arr[i] = np.maximum(arr[i], v)
+
+        # ---- map payloads (between epochs, paper §5.2.4) -----------------
+        for mid, mai, maf in map_calls:
+            mt = program.maps[mid]
+            dom = int(np.asarray(mt.domain(mai[None, :]))[0])
+            snapshot = {k: v.copy() for k, v in heap.items()}
+            writes = []
+            for eid in range(dom):
+                mctx = MapCtx(
+                    program, np.int32(mai), np.float32(maf), eid, snapshot
+                )
+                mt.fn(mctx)
+                writes.extend(mctx.writes)
+                stats.map_elements += 1
+            for w in writes:
+                if not bool(w.where):
+                    continue
+                arr = heap[w.name]
+                i = int(np.clip(int(w.index), 0, arr.shape[0] - 1))
+                v = np.asarray(w.value)
+                if w.op == "set":
+                    arr[i] = v
+                elif w.op == "add":
+                    arr[i] = arr[i] + v
+                elif w.op == "min":
+                    arr[i] = np.minimum(arr[i], v)
+                elif w.op == "max":
+                    arr[i] = np.maximum(arr[i], v)
+
+        # ---- TMS update ---------------------------------------------------
+        if join_sched:
+            join_stack.append(cen)
+            range_stack.append((start, count))
+        if next_free > old_next_free:
+            join_stack.append(cen + 1)
+            range_stack.append((old_next_free, next_free - old_next_free))
+        stats.peak_tv_slots = max(stats.peak_tv_slots, next_free)
+        # trailing-invalid reclamation
+        valid = np.nonzero(epoch > 0)[0]
+        next_free = int(valid[-1]) + 1 if valid.size else 0
+
+    return heap, value, stats

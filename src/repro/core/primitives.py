@@ -1,0 +1,247 @@
+"""The TVM primitives — fork / join / emit / map — as a traced effect API.
+
+Task functions receive an :class:`EpochCtx` and *record* effects; the engine
+commits them in bulk at the end of the epoch (paper §4.3.3 / §5.2.4).  This
+record-then-commit split is what lets TREES replace the GPU's per-thread
+atomics with one cooperative prefix-sum allocation per epoch on TPU.
+
+All ``where=`` predicates default to True; they are the lane-level predication
+that replaces SIMT divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+
+_WRITE_OPS = ("set", "add", "min", "max")
+
+
+@dataclasses.dataclass
+class ForkSite:
+    where: Any
+    task: Any
+    argi: Any  # i32[A]
+    argf: Any  # f32[Af]
+
+
+@dataclasses.dataclass
+class WriteSite:
+    name: str
+    index: Any
+    value: Any
+    op: str
+    where: Any
+
+
+@dataclasses.dataclass
+class MapSite:
+    where: Any
+    map_id: int
+    argi: Any
+    argf: Any
+
+
+class EpochCtx:
+    """Per-lane view of one TVM core during epoch phase 2.
+
+    The engine constructs it (vmapped across lanes), runs the task function,
+    then reads the recorded effects back out.
+    """
+
+    def __init__(
+        self,
+        program,
+        argi,
+        argf,
+        child_base,
+        child_count,
+        slot,
+        heap: Dict[str, Any],
+        values: Any,
+    ):
+        self._program = program
+        self._argi = argi
+        self._argf = argf
+        self._child_base = child_base
+        self._child_count = child_count
+        self._slot = slot
+        self._heap = heap
+        self._values = values
+        # recorded effects
+        self.forks: List[ForkSite] = []
+        self.join_site: Optional[ForkSite] = None
+        self.emit_where = jnp.asarray(False)
+        self.emit_value = jnp.zeros(
+            (program.value_width,), dtype=program.value_dtype
+        )
+        self.writes: List[WriteSite] = []
+        self.map_sites: List[MapSite] = []
+
+    # ------------------------------------------------------------- reads
+    def argi(self, k: int):
+        """k-th integer argument of this task."""
+        return self._argi[k]
+
+    def argf(self, k: int):
+        """k-th float argument of this task."""
+        return self._argf[k]
+
+    @property
+    def slot(self):
+        """This task's TV slot index (its abstract core id)."""
+        return self._slot
+
+    @property
+    def child_count(self):
+        """Number of children forked by this task's predecessor (join use)."""
+        return self._child_count
+
+    def child_values(self, n: int):
+        """Values emitted by up to ``n`` children, shape (n, value_width).
+
+        Children of one task are contiguous (prefix-sum allocation preserves
+        the paper's contiguity invariant), starting at ``child_base``.
+        Entries >= child_count are zero.
+        """
+        idx = self._child_base + jnp.arange(n)
+        vals = self._values[jnp.clip(idx, 0, self._values.shape[0] - 1)]
+        mask = (jnp.arange(n) < self._child_count)[:, None]
+        return jnp.where(mask, vals, jnp.zeros_like(vals))
+
+    def read(self, name: str, index):
+        """Gather ``heap[name][index]`` (pre-epoch snapshot)."""
+        arr = self._heap[name]
+        return arr[jnp.clip(index, 0, arr.shape[0] - 1)]
+
+    # ----------------------------------------------------------- effects
+    def fork(self, task: Any, argi=(), argf=(), where=True):
+        """Spawn ``task(argi, argf)``; eligible from the *next* epoch."""
+        self.forks.append(
+            ForkSite(
+                where=jnp.asarray(where),
+                task=self._task_code(task),
+                argi=self._pack_i(argi),
+                argf=self._pack_f(argf),
+            )
+        )
+
+    def join(self, task: Any, argi=(), argf=(), where=True):
+        """Replace this task with ``task`` to run after all its forks finish."""
+        if self.join_site is not None:
+            raise ValueError("at most one join per task body (paper §4.3.2)")
+        self.join_site = ForkSite(
+            where=jnp.asarray(where),
+            task=self._task_code(task),
+            argi=self._pack_i(argi),
+            argf=self._pack_f(argf),
+        )
+
+    def emit(self, value, where=True):
+        """Return a value to the parent waiting to join this task."""
+        v = jnp.asarray(value, dtype=self._program.value_dtype)
+        v = v.reshape(-1)
+        if v.shape[0] > self._program.value_width:
+            raise ValueError("emit value wider than program.value_width")
+        v = jnp.pad(v, (0, self._program.value_width - v.shape[0]))
+        w = jnp.asarray(where)
+        self.emit_value = jnp.where(w, v, self.emit_value)
+        self.emit_where = jnp.logical_or(self.emit_where, w)
+
+    def write(self, name: str, index, value, op: str = "set", where=True):
+        """Scatter ``heap[name][index] (op)= value`` at end of epoch.
+
+        ``add``/``min``/``max`` are conflict-safe; ``set`` with conflicting
+        indices has an unspecified winner (same as the paper's data races).
+        """
+        if op not in _WRITE_OPS:
+            raise ValueError(f"op must be one of {_WRITE_OPS}")
+        arr = self._heap[name]
+        self.writes.append(
+            WriteSite(
+                name=name,
+                index=jnp.asarray(index, jnp.int32),
+                value=jnp.asarray(value, arr.dtype),
+                op=op,
+                where=jnp.asarray(where),
+            )
+        )
+
+    def map(self, map_fn: Any, argi=(), argf=(), where=True):
+        """Schedule a data-parallel payload to run before the next epoch."""
+        mid = (
+            self._program.map_id(map_fn)
+            if isinstance(map_fn, str)
+            else int(map_fn)
+        )
+        self.map_sites.append(
+            MapSite(
+                where=jnp.asarray(where),
+                map_id=mid,
+                argi=self._pack_i(argi),
+                argf=self._pack_f(argf),
+            )
+        )
+
+    # ----------------------------------------------------------- helpers
+    def _task_code(self, task):
+        if isinstance(task, str):
+            return jnp.asarray(self._program.task_id(task), jnp.int32)
+        return jnp.asarray(task, jnp.int32)
+
+    def _pack_i(self, argi):
+        a = jnp.zeros((self._program.n_arg_i,), jnp.int32)
+        for k, v in enumerate(argi):
+            a = a.at[k].set(jnp.asarray(v, jnp.int32))
+        return a
+
+    def _pack_f(self, argf):
+        a = jnp.zeros((self._program.n_arg_f,), jnp.float32)
+        for k, v in enumerate(argf):
+            a = a.at[k].set(jnp.asarray(v, jnp.float32))
+        return a
+
+
+class MapCtx:
+    """Per-element view of a data-parallel ``map`` payload.
+
+    The payload runs over a dense index domain ``[0, domain)``; ``eid`` is the
+    element index.  Reads snapshot the pre-map heap; writes commit in bulk.
+    """
+
+    def __init__(self, program, argi, argf, eid, heap):
+        self._program = program
+        self._argi = argi
+        self._argf = argf
+        self._eid = eid
+        self._heap = heap
+        self.writes: List[WriteSite] = []
+
+    def argi(self, k: int):
+        return self._argi[k]
+
+    def argf(self, k: int):
+        return self._argf[k]
+
+    @property
+    def eid(self):
+        return self._eid
+
+    def read(self, name: str, index):
+        arr = self._heap[name]
+        return arr[jnp.clip(index, 0, arr.shape[0] - 1)]
+
+    def write(self, name: str, index, value, op: str = "set", where=True):
+        if op not in _WRITE_OPS:
+            raise ValueError(f"op must be one of {_WRITE_OPS}")
+        arr = self._heap[name]
+        self.writes.append(
+            WriteSite(
+                name=name,
+                index=jnp.asarray(index, jnp.int32),
+                value=jnp.asarray(value, arr.dtype),
+                op=op,
+                where=jnp.asarray(where),
+            )
+        )

@@ -1,0 +1,129 @@
+"""Task-program definition for the TVM / TREES runtime.
+
+A *program* is a set of task functions written against the :class:`EpochCtx`
+effect API (see ``primitives.py``).  Task functions are written **per lane**
+(one TVM core) using jnp scalar ops; the engine vmaps them across the Task
+Vector so that every task *type* executes as one dense, masked vector
+operation — the TPU analogue of the paper's SIMT "work-together" execution.
+
+Key restrictions (they are what make bulk epoch execution possible):
+  * task bodies are straight-line jnp code; data-dependent branching is
+    expressed with ``where=`` predicates on the effect calls (fork/join/emit/
+    map/write), never Python ``if`` on traced values;
+  * each task type has a *static* number of fork sites / write sites; which
+    ones actually fire is decided by the predicates;
+  * integer args live in ``argi`` (i32), float args in ``argf`` (f32); emitted
+    values are a fixed-width vector of the program's ``value_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+TaskFn = Callable[["EpochCtx"], None]  # noqa: F821  (EpochCtx in primitives)
+MapFn = Callable[["MapCtx"], None]  # noqa: F821
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskType:
+    """One entry in the program's task-function table."""
+
+    name: str
+    fn: TaskFn
+
+
+@dataclasses.dataclass(frozen=True)
+class MapType:
+    """A data-parallel ``map`` payload (paper §4.2).
+
+    ``domain`` maps the scheduling task's integer args to the number of
+    data-parallel elements the payload covers.  The host engine sizes the
+    payload launch from it (the analogue of the paper's separately launched
+    map kernel NDRange); the device engine uses ``max_domain``.
+    """
+
+    name: str
+    fn: MapFn
+    domain: Callable[[np.ndarray], int]
+    max_domain: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HeapVar:
+    """A named global array tasks may read (gather) and write (scatter)."""
+
+    name: str
+    shape: tuple
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A TVM task-parallel program.
+
+    Attributes:
+      name: program name (used in benchmarks / stats).
+      tasks: task-function table; the task *type id* is the index here.
+      n_arg_i / n_arg_f: width of the integer / float argument registers.
+      value_width / value_dtype: shape of the per-task ``emit`` value.
+      maps: optional table of data-parallel map payloads.
+      heap: declarations of the global arrays.
+    """
+
+    name: str
+    tasks: Sequence[TaskType]
+    n_arg_i: int = 2
+    n_arg_f: int = 0
+    value_width: int = 1
+    value_dtype: Any = jnp.int32
+    maps: Sequence[MapType] = ()
+    heap: Sequence[HeapVar] = ()
+
+    def task_id(self, name: str) -> int:
+        for i, t in enumerate(self.tasks):
+            if t.name == name:
+                return i
+        raise KeyError(name)
+
+    def map_id(self, name: str) -> int:
+        for i, m in enumerate(self.maps):
+            if m.name == name:
+                return i
+        raise KeyError(name)
+
+    def init_heap(self, **overrides: Any) -> Dict[str, jnp.ndarray]:
+        out: Dict[str, jnp.ndarray] = {}
+        for hv in self.heap:
+            if hv.name in overrides:
+                arr = jnp.asarray(overrides[hv.name], dtype=hv.dtype)
+                if arr.shape != tuple(hv.shape):
+                    raise ValueError(
+                        f"heap var {hv.name}: expected shape {hv.shape}, got {arr.shape}"
+                    )
+            else:
+                arr = jnp.zeros(hv.shape, dtype=hv.dtype)
+            out[hv.name] = arr
+        unknown = set(overrides) - {hv.name for hv in self.heap}
+        if unknown:
+            raise KeyError(f"unknown heap overrides: {sorted(unknown)}")
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class InitialTask:
+    """The seed task placed in TV slot 0 (paper §4.3: initial state)."""
+
+    task: str
+    argi: Sequence[int] = ()
+    argf: Sequence[float] = ()
+
+
+def pack_args(program: Program, argi: Sequence[int], argf: Sequence[float]):
+    ai = np.zeros(program.n_arg_i, np.int32)
+    ai[: len(argi)] = list(argi)
+    af = np.zeros(program.n_arg_f, np.float32)
+    af[: len(argf)] = list(argf)
+    return ai, af

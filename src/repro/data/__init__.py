@@ -1,0 +1,3 @@
+# Data substrate: deterministic synthetic token pipeline (step-indexed, so
+# checkpoint restart replays exactly), sequence packing, sharded placement.
+from .pipeline import PackedDataset, SyntheticLM, place_batch  # noqa: F401

@@ -1,0 +1,4 @@
+# Distributed-optimization substrate: gradient compression (error-feedback
+# int8 / bf16 all-reduce), GPipe pipeline parallelism over the 'pod' axis.
+from .compression import CompressionState, compressed_grad_allreduce  # noqa: F401
+from .pipeline import gpipe_apply  # noqa: F401

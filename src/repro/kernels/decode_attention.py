@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: single-token decode attention over a KV cache (GQA).
+
+Decode is memory-bound: the kernel streams K/V blocks from HBM once while
+the tiny q row sits in VMEM, with per-sequence valid lengths masking the
+ragged cache tail.  Grid (B, Hkv, n_kv_blocks), kv innermost; all ``group``
+grouped q heads of one kv head are processed together as the rows of an
+MXU matmul — the grouped-heads-share-KV trick that makes GQA decode read
+each cache byte exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, block_k, window,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[pl.program_id(0)]
+    group = q_ref.shape[0]
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (group, block_k), 1
+    )
+
+    lo = length - window if window > 0 else 0
+
+    @pl.when((ik * block_k < length) & ((ik + 1) * block_k > lo))
+    def _body():
+        q = q_ref[...].astype(jnp.float32)       # (group, D)
+        k = k_ref[...].astype(jnp.float32)       # (block_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                 # (group, block_k)
+        valid = kpos < length
+        if window > 0:
+            valid = valid & (kpos >= length - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)       # (block_k, D)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fini():
+        l = l_scr[:, :1]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,        # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, Hkv, S, D)
+    v_cache: jnp.ndarray,  # (B, Hkv, S, D)
+    lengths: jnp.ndarray,  # (B,) i32
+    scale: float | None = None,
+    window: int = 0,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    block_k = min(block_k, max(S, 128))
+    pk = (-S) % block_k
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nk = kp.shape[2] // block_k
+    # regroup q rows under their kv head: (B, Hkv, group, D)
+    qg = q.reshape(B, Hkv, group, D)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, window=window
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths, whole array
+            pl.BlockSpec((None, None, group, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, group, D), lambda b, h, ik: (b, h, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kp, vp)
+    return out.reshape(B, Hq, D)

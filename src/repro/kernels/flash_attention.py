@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: blockwise (flash) attention with GQA and causal mask.
+
+Grid (B, Hq, n_q_blocks, n_kv_blocks); the kv dimension is innermost, so the
+online-softmax running max / normalizer / accumulator live in VMEM scratch
+across the sequential kv steps.  GQA is expressed through the K/V BlockSpec
+index maps (kv head = q head // group) — the grouped heads *share* the K/V
+block in VMEM instead of materializing repeated KV in HBM.
+
+Block shapes default to (128, head_dim): MXU-aligned on the contraction and
+output dims, VMEM working set = q(128xD) + k,v(2x128xD) + scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, block_q, block_k, q_offset, kv_len, window,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = (
+        iq * block_q + q_offset
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    )
+    kpos = (
+        ik * block_k
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    )
+    # skip kv blocks entirely in the causal future of this q block, and
+    # (for sliding-window) blocks entirely behind every query's window
+    run = True
+    if causal:
+        run = run & (ik * block_k <= (iq + 1) * block_q - 1 + q_offset)
+    if window > 0:
+        run = run & (
+            (ik + 1) * block_k - 1 >= iq * block_q + q_offset - window + 1
+        )
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (block_q, block_k)
+        mask = kpos < kv_len
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window > 0:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fini():
+        l = l_scr[:, :1]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "scale", "q_offset", "window", "block_q", "block_k",
+        "interpret"
+    ),
+)
+def mha_flash(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, D)
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, "GQA requires Hq divisible by Hkv"
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Skv, 128))
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = qp.shape[2] // block_q
+    nk = kp.shape[2] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=q_offset,
+        kv_len=Skv,
+        window=window,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, block_k, D),
+                lambda b, h, iq, ik, g=group: (b, h // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, block_k, D),
+                lambda b, h, iq, ik, g=group: (b, h // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :]

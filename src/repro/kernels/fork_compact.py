@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: cooperative fork-slot allocation (exclusive prefix sum).
+
+This is the TPU-native replacement for the paper's ``atomicInc(nextFreeCore)``
+(§5.2.3).  On the GPU, TREES reduces per-wavefront then issues one atomic per
+wavefront; on TPU there are no global atomics, so the whole Task Vector's
+fork counts are scanned cooperatively:
+
+  * each grid step loads one (8, 128)-aligned block of counts into VMEM,
+  * computes the block-local exclusive scan on the VPU,
+  * adds the running carry held in SMEM scratch — TPU grid steps execute
+    *sequentially* on a core, so the carry needs no synchronization at all
+    (the "wavefront -> block, atomic -> sequential-grid carry" adaptation
+    from DESIGN.md §2),
+  * the final step emits the grand total (the new ``nextFreeCore`` delta).
+
+Used by the engine via ``ops.fork_offsets`` and by the MoE work-together
+dispatch (expert bincount offsets share the same primitive).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 1024  # lanes per grid step; multiple of the (8,128) VPU tile
+
+
+def _fork_scan_kernel(counts_ref, offs_ref, total_ref, carry_ref):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(0)
+
+    block = counts_ref[...]  # (1, BLOCK) i32
+    incl = jnp.cumsum(block, axis=-1)
+    carry = carry_ref[0]
+    offs_ref[...] = incl - block + carry
+    carry_ref[0] = carry + incl[0, -1]
+
+    @pl.when(i == n - 1)
+    def _fini():
+        total_ref[0, 0] = carry_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fork_scan(
+    counts: jnp.ndarray, block: int = BLOCK, interpret: bool = False
+):
+    """Exclusive prefix sum + total of an i32 vector (any length).
+
+    Returns (offsets i32[C], total i32[]).
+    """
+    (c,) = counts.shape
+    pad = (-c) % block
+    x = jnp.pad(counts.astype(jnp.int32), (0, pad)).reshape(-1, block)
+    nb = x.shape[0]
+    offs, total = pl.pallas_call(
+        _fork_scan_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return offs.reshape(-1)[:c], total[0, 0]
+
+
+def _type_rank_kernel(types_ref, active_ref, rank_ref, counts_ref, carry_ref,
+                      *, n_types):
+    """Per-type stable ranks: rank[i] = #active lanes of the same type before
+    lane i.  One (n_types,)-wide running count in SMEM replaces n_types
+    atomic counters; TPU's sequential grid makes the carry race-free."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        for t in range(n_types):
+            carry_ref[t] = jnp.int32(0)
+
+    types = types_ref[...]       # (1, B) i32
+    act = active_ref[...] != 0   # (1, B)
+    rank = jnp.zeros_like(types)
+    for t in range(n_types):     # n_types is small and static
+        m = (types == t) & act
+        mi = m.astype(jnp.int32)
+        excl = jnp.cumsum(mi, axis=-1) - mi
+        rank = jnp.where(m, excl + carry_ref[t], rank)
+        carry_ref[t] = carry_ref[t] + jnp.sum(mi)
+    rank_ref[...] = jnp.where(act, rank, -1)
+
+    @pl.when(i == n - 1)
+    def _fini():
+        for t in range(n_types):
+            counts_ref[0, t] = carry_ref[t]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_types", "block", "interpret")
+)
+def type_rank(
+    types: jnp.ndarray,
+    active: jnp.ndarray,
+    n_types: int,
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """Stable rank of each active lane within its task type + per-type counts.
+
+    This is the paper's §5.4 contiguity principle as a kernel: with
+    ``dest = type_start[type] + rank`` (type_start = exclusive cumsum of the
+    returned counts), scattering lanes to ``dest`` groups same-type tasks
+    contiguously so each type executes as one dense range.  Also the core of
+    the MoE work-together dispatch (type = expert id).
+
+    Returns (rank i32[C] — -1 for inactive lanes, counts i32[n_types]).
+    """
+    (c,) = types.shape
+    pad = (-c) % block
+    t = jnp.pad(types.astype(jnp.int32), (0, pad)).reshape(-1, block)
+    a = jnp.pad(active.astype(jnp.int32), (0, pad)).reshape(-1, block)
+    nb = t.shape[0]
+    ct = max(n_types, 1)
+    kernel = functools.partial(_type_rank_kernel, n_types=n_types)
+    rank, counts = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int32),
+            jax.ShapeDtypeStruct((1, ct), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((ct,), jnp.int32)],
+        interpret=interpret,
+    )(t, a)
+    return rank.reshape(-1)[:c], counts[0, :n_types]

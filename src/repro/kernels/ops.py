@@ -1,0 +1,120 @@
+"""Public jit'd wrappers around the Pallas kernels, with backend dispatch.
+
+On TPU the Pallas kernels run natively; on CPU (this container, smoke tests,
+and the dry-run lowering) the pure-jnp oracles from ``ref.py`` are used —
+mathematically identical, so tests and the dry-run cost model stay valid.
+``impl`` overrides: "pallas" (native), "interpret" (Pallas interpreter —
+the kernel body executed on CPU, used by the per-kernel allclose sweeps),
+"ref" (oracle), "auto" (platform default).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import mha_flash as _flash_pallas
+from .fork_compact import fork_scan as _fork_scan_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str) -> str:
+    return _default_impl() if impl == "auto" else impl
+
+
+def fork_offsets(counts: jnp.ndarray, impl: str = "auto"):
+    """Exclusive prefix-sum fork allocation (engine + MoE dispatch)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.fork_scan_ref(counts)
+    return _fork_scan_pallas(counts, interpret=(impl == "interpret"))
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    site: str = "kv_self",
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """GQA attention (B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    The jnp path switches to the blockwise online-softmax form beyond 1k
+    context (O(Sq*block) score memory); ``site`` names the KV loop for the
+    dry-run's unroll calibration."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        from ..models.common import get_unroll
+
+        if k.shape[2] > 1024:
+            return ref.mha_blockwise(
+                q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+                window=window, block_k=512, unroll=get_unroll(site),
+            )
+        return ref.mha_ref(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            window=window,
+        )
+    return _flash_pallas(
+        q, k, v, causal=causal, scale=scale, q_offset=q_offset, window=window,
+        block_q=block_q, block_k=block_k, interpret=(impl == "interpret"),
+    )
+
+
+def gqa_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    scale: Optional[float] = None,
+    window: int = 0,
+    block_k: int = 512,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Single-token decode attention over a ragged KV cache."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.decode_attention_ref(
+            q, k_cache, v_cache, lengths, scale=scale, window=window
+        )
+    return _decode_pallas(
+        q, k_cache, v_cache, lengths, scale=scale, window=window,
+        block_k=block_k, interpret=(impl == "interpret"),
+    )
+
+
+def ssd(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    h0: Optional[jnp.ndarray] = None,
+    chunk: int = 128,
+    impl: str = "auto",
+):
+    """Mamba-2 SSD scan; returns (y, final_state)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        from ..models.common import get_unroll
+
+        return ref.ssd_chunked(
+            x, dt, A, B, C, h0=h0, chunk=chunk, unroll=get_unroll("ssd")
+        )
+    return _ssd_pallas(
+        x, dt, A, B, C, h0=h0, chunk=chunk, interpret=(impl == "interpret")
+    )

@@ -1,0 +1,257 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret-mode
+allclose sweeps in tests/test_kernels.py) and the fallback implementation on
+backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fork_scan_ref(counts: jnp.ndarray):
+    """Exclusive prefix sum + total (oracle for fork_compact.fork_scan)."""
+    counts = counts.astype(jnp.int32)
+    incl = jnp.cumsum(counts)
+    return incl - counts, incl[-1] if counts.shape[0] else jnp.int32(0)
+
+
+def type_rank_ref(types: jnp.ndarray, active: jnp.ndarray, n_types: int):
+    """Oracle for fork_compact.type_rank: stable within-type ranks."""
+    types = types.astype(jnp.int32)
+    act = active.astype(bool)
+    onehot = jax.nn.one_hot(types, n_types, dtype=jnp.int32)
+    onehot = onehot * act[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.take_along_axis(
+        pos, jnp.clip(types, 0, n_types - 1)[:, None], axis=1
+    )[:, 0]
+    rank = jnp.where(act, rank, -1)
+    counts = onehot.sum(axis=0)
+    return rank, counts
+
+
+def mha_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, D)
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Grouped-query attention oracle, f32 accumulation.
+
+    ``q_offset`` positions queries at absolute index q_offset + i for the
+    causal mask (decode-with-cache semantics).  ``window > 0`` restricts
+    attention to the last ``window`` positions (sliding-window attention).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    static_no_window = isinstance(window, int) and window == 0
+    if causal or not static_no_window:
+        Skv = k.shape[2]
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if not static_no_window:
+            # window may be a traced per-layer scalar (hybrid archs)
+            w = jnp.asarray(window)
+            mask = mask & (
+                (qpos[:, None] - kpos[None, :] < w) | (w <= 0)
+            )
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def mha_blockwise(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, D)
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    window: int = 0,
+    block_k: int = 512,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure jnp: a lax.scan over KV
+    blocks.  This is the XLA twin of the Pallas kernel — O(Sq * block_k)
+    score memory instead of O(Sq * Skv) — used for the long-context cells on
+    backends without Pallas (and as the dry-run lowering).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    block_k = min(block_k, Skv)
+    pad = (-Skv) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = kp.shape[2] // block_k
+    kb = kp.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Sq, D) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    static_no_window = isinstance(window, int) and window == 0
+
+    m0 = jnp.full((B, Hkv, g, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, D), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ib, kblk, vblk = xs
+        kpos = ib * block_k + jnp.arange(block_k)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qf, kblk.astype(jnp.float32)
+        )
+        mask = kpos[None, :] < Skv
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if not static_no_window:
+            w = jnp.asarray(window)
+            mask = mask & ((qpos[:, None] - kpos[None, :] < w) | (w <= 0))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = alpha * acc + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), ()
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nk), kb, vb),
+        unroll=unroll,
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,   # (S, H, P)
+    dt: jnp.ndarray,  # (S, H)
+    A: jnp.ndarray,   # (H,)
+    B: jnp.ndarray,   # (S, N)
+    C: jnp.ndarray,   # (S, N)
+    h0: jnp.ndarray | None = None,
+    chunk: int = 128,
+    unroll: int = 1,
+):
+    """Chunked SSD in pure jnp — the XLA twin of the Pallas ssd_scan kernel
+    (same matrix formulation, lax.scan over chunks instead of a sequential
+    grid).  Matches ssd_scan_ref; O(S/chunk) loop trips instead of O(S)."""
+    S, H, P = x.shape
+    N = B.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    xf = jnp.pad(x.astype(jnp.float32), ((0, pad), (0, 0), (0, 0)))
+    dtf = jnp.pad(dt.astype(jnp.float32), ((0, pad), (0, 0)))
+    Bf = jnp.pad(B.astype(jnp.float32), ((0, pad), (0, 0)))
+    Cf = jnp.pad(C.astype(jnp.float32), ((0, pad), (0, 0)))
+    Af = A.astype(jnp.float32)
+    nc = (S + pad) // chunk
+    xb = xf.reshape(nc, chunk, H, P)
+    dtb = dtf.reshape(nc, chunk, H)
+    Bb = Bf.reshape(nc, chunk, N)
+    Cb = Cf.reshape(nc, chunk, N)
+    h_init = (
+        jnp.zeros((H, P, N), jnp.float32) if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs          # (T,H,P), (T,H), (T,N), (T,N)
+        la = Af[None, :] * dtc        # (T, H)
+        cum = jnp.cumsum(la, axis=0)  # (T, H)
+        logm = cum[:, None, :] - cum[None, :, :]        # (T, T, H)
+        m = jnp.where(tri[..., None], jnp.exp(jnp.minimum(logm, 0.0)), 0.0)
+        gmat = Cc @ Bc.T                                # (T, T)
+        w = gmat[..., None] * m                         # (T, T, H)
+        xdt = xc * dtc[..., None]                       # (T, H, P)
+        y_intra = jnp.einsum("tsh,shp->thp", w, xdt)
+        cdecay = Cc[:, None, :] * jnp.exp(cum)[..., None]  # (T, H, N)
+        y_carry = jnp.einsum("thn,hpn->thp", cdecay, h)
+        wvec = dtc * jnp.exp(cum[-1][None, :] - cum)       # (T, H)
+        upd = jnp.einsum("thp,th,tn->hpn", xc, wvec, Bc)
+        h_new = jnp.exp(cum[-1])[:, None, None] * h + upd
+        return h_new, y_intra + y_carry
+
+    h, ys = jax.lax.scan(body, h_init, (xb, dtb, Bb, Cb), unroll=unroll)
+    y = ys.reshape(nc * chunk, H, P)[:S]
+    return y.astype(x.dtype), h
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, Hq, D)      one new query per sequence
+    k_cache: jnp.ndarray,  # (B, Hkv, S, D)
+    v_cache: jnp.ndarray,  # (B, Hkv, S, D)
+    lengths: jnp.ndarray,  # (B,) valid cache lengths
+    scale: float | None = None,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32))
+    logits = logits * scale
+    valid = jnp.arange(S)[None] < lengths[:, None]  # (B, S)
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window)
+        valid = valid & (
+            (jnp.arange(S)[None] >= lengths[:, None] - w) | (w <= 0)
+        )
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,   # (S, H, P)   inputs per head
+    dt: jnp.ndarray,  # (S, H)      softplus-activated step sizes
+    A: jnp.ndarray,   # (H,)        negative decay rates (A < 0)
+    B: jnp.ndarray,   # (S, N)      input projection (shared across heads)
+    C: jnp.ndarray,   # (S, N)      output projection
+    h0: jnp.ndarray | None = None,  # (H, P, N) initial state
+):
+    """Sequential Mamba-2 SSD recurrence (oracle for the chunked kernel).
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * (x_t outer B_t);  y_t = h_t C_t
+    Returns (y (S,H,P), h_final (H,P,N)).
+    """
+    S, H, P = x.shape
+    N = B.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(Af * dtf[t])[:, None, None]  # (H,1,1)
+        upd = (dtf[t][:, None, None] * xf[t][:, :, None]) * Bf[t][None, None, :]
+        h = decay * h + upd
+        y = jnp.einsum("hpn,n->hp", h, Cf[t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.astype(x.dtype), h

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked state-space scan.
+
+The SSD recurrence  h_t = exp(A dt_t) h_{t-1} + dt_t (x_t (x) B_t),
+y_t = h_t C_t  is evaluated in chunks of T steps (the state-space-duality
+form of arXiv:2405.21060 §6): within a chunk the contribution is a masked
+"attention"  Y_intra = ((C B^T) o M) (dt o X)  — three MXU matmuls — and the
+chunk-crossing state is carried in VMEM scratch across the *sequential* TPU
+grid (chunks innermost), exactly one (P, N) state per head.
+
+Grid (H, S/T).  All decay exponents are differences of a per-chunk cumsum of
+A*dt <= 0, so every exp() argument is <= 0 — numerically safe in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, h_scr,
+    *, chunk,
+):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)     # (T, P)
+    dt = dt_ref[...].astype(jnp.float32)   # (1, T)
+    a = a_ref[0, 0].astype(jnp.float32)    # scalar decay rate (< 0)
+    bmat = b_ref[...].astype(jnp.float32)  # (T, N)
+    cmat = c_ref[...].astype(jnp.float32)  # (T, N)
+
+    la = a * dt                            # (1, T) log-decays, <= 0
+    cum = jnp.cumsum(la, axis=1)           # (1, T) inclusive
+    cum_col = cum.reshape(chunk, 1)
+    cum_last = cum[0, chunk - 1]
+    # intra-chunk: masked decay kernel  M[t,s] = exp(cum_t - cum_s), s <= t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    logm = cum_col - cum                   # (T, T)
+    m = jnp.where(rows >= cols, jnp.exp(jnp.minimum(logm, 0.0)), 0.0)
+    g = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # (T, T) = C B^T
+    w = g * m
+    xdt = x * dt.reshape(chunk, 1)         # (T, P)
+    y_intra = jax.lax.dot(w, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state h0 contributes  exp(cum_t) * (C_t . h)
+    h = h_scr[...]                         # (P, N)
+    cdecay = cmat * jnp.exp(cum_col)       # (T, N)
+    y_carry = jax.lax.dot_general(
+        cdecay, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # (T, P)
+    y_ref[...] = (y_intra + y_carry).astype(y_ref.dtype)
+
+    # new carry:  h' = exp(cum_T) h + X^T diag(dt exp(cum_T - cum)) B
+    wvec = (dt * jnp.exp(cum_last - cum)).reshape(chunk, 1)  # (T, 1)
+    upd = jax.lax.dot_general(
+        x * wvec, bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # (P, N)
+    h_scr[...] = jnp.exp(cum_last) * h + upd
+
+    @pl.when(ic == nc - 1)
+    def _fini():
+        hout_ref[...] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,   # (S, H, P)
+    dt: jnp.ndarray,  # (S, H)
+    A: jnp.ndarray,   # (H,)
+    B: jnp.ndarray,   # (S, N)
+    C: jnp.ndarray,   # (S, N)
+    h0: jnp.ndarray | None = None,  # (H, P, N)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """Returns (y (S,H,P), h_final (H,P,N)); matches ref.ssd_scan_ref."""
+    S, H, P = x.shape
+    N = B.shape[1]
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    # dt = 0 padding is a no-op on the state (decay exp(0)=1, update 0)
+    xt = jnp.pad(x.transpose(1, 0, 2), ((0, 0), (0, pad), (0, 0)))
+    dtt = jnp.pad(dt.T, ((0, 0), (0, pad)))
+    Bp = jnp.pad(B, ((0, pad), (0, 0)))
+    Cp = jnp.pad(C, ((0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    if h0 is None:
+        h0 = jnp.zeros((H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(H, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, 1), lambda h, c: (h, 0)),
+            pl.BlockSpec((chunk, N), lambda h, c: (c, 0)),
+            pl.BlockSpec((chunk, N), lambda h, c: (c, 0)),
+            pl.BlockSpec((None, P, N), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((None, P, N), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, S + pad, P), x.dtype),
+            jax.ShapeDtypeStruct((H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.reshape(H, 1), Bp, Cp, h0)
+    return y.transpose(1, 0, 2)[:S], hout

@@ -1,0 +1,18 @@
+# Unified model stack: GQA / SSM / hybrid / enc-dec / MoE transformer
+# definitions with logical-axis sharding and scanned layer stacks.
+from .common import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShardingRules,
+    finalize,
+    logical_to_physical,
+    sharding_ctx,
+)
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+)

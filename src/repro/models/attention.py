@@ -1,0 +1,133 @@
+"""GQA attention block: train path (flash / ref dispatch), decode path
+(ragged KV-cache update + decode kernel), sliding-window and QK-norm options,
+head padding for tensor-parallel divisibility (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .common import ModelConfig, ParamScope
+from .layers import rope
+
+
+def init_attn(
+    s: ParamScope,
+    cfg: ModelConfig,
+    n_layers: Optional[int] = None,
+    cross: bool = False,
+):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    L = cfg.n_layers if n_layers is None else n_layers
+    s.add("wq", (L, d, hq * hd), ("layers", "embed", "heads"))
+    s.add("wk", (L, d, hkv * hd), ("layers", "embed", "kv_heads"))
+    s.add("wv", (L, d, hkv * hd), ("layers", "embed", "kv_heads"))
+    s.add("wo", (L, hq * hd, d), ("layers", "heads", "embed"))
+    if cfg.qk_norm:
+        s.add("q_scale", (L, hd), ("layers", "head_dim"), init="ones")
+        s.add("k_scale", (L, hd), ("layers", "head_dim"), init="ones")
+    del cross  # same parameter structure; K/V source differs at apply time
+
+
+def _qk_norm(x, scale):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _head_mask(cfg: ModelConfig, x):
+    """Zero padded q heads so head padding is function-preserving."""
+    hq = cfg.n_heads_padded
+    if hq == cfg.n_heads:
+        return x
+    mask = (jnp.arange(hq) < cfg.n_heads).astype(x.dtype)
+    return x * mask[..., None]
+
+
+def _project_qkv(p, prefix, cfg, xq, xkv, positions_q, positions_kv, use_rope):
+    dt = cfg.compute_dtype
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    q = (xq @ p[f"{prefix}/wq"].astype(dt)).reshape(*xq.shape[:-1], hq, hd)
+    k = (xkv @ p[f"{prefix}/wk"].astype(dt)).reshape(*xkv.shape[:-1], hkv, hd)
+    v = (xkv @ p[f"{prefix}/wv"].astype(dt)).reshape(*xkv.shape[:-1], hkv, hd)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p[f"{prefix}/q_scale"])
+        k = _qk_norm(k, p[f"{prefix}/k_scale"])
+    if use_rope:
+        q = rope(q, positions_q, cfg.rope_theta)
+        k = rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attn(
+    p: Dict[str, Any],
+    prefix: str,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                 # (B, S, d)
+    causal: bool = True,
+    window: int = 0,
+    use_rope: bool = True,
+    kv_source: Optional[jnp.ndarray] = None,  # cross-attn context (B, Skv, d)
+    return_kv: bool = False,
+    site: str = "kv_self",
+):
+    """Training / prefill attention.  With ``return_kv`` also returns the
+    rotary-applied (k, v) in cache layout (B, Hkv, S, hd)."""
+    B, S, _ = x.shape
+    xkv = x if kv_source is None else kv_source
+    Skv = xkv.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos_kv = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    q, k, v = _project_qkv(p, prefix, cfg, x, xkv, pos_q, pos_kv, use_rope)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    out = ops.attention(q, k, v, causal=causal, window=window, site=site)
+    out = _head_mask(cfg, out.transpose(0, 2, 1, 3))  # (B, S, H, hd)
+    out = out.reshape(B, S, -1)
+    proj = out @ p[f"{prefix}/wo"].astype(cfg.compute_dtype)
+    if return_kv:
+        return proj, (k, v)
+    return proj
+
+
+def apply_attn_decode(
+    p: Dict[str, Any],
+    prefix: str,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                  # (B, 1, d) new token activations
+    cache_k: jnp.ndarray,            # (B, Hkv, S, hd)
+    cache_v: jnp.ndarray,
+    lengths: jnp.ndarray,            # (B,) tokens already in cache
+    window: int = 0,
+    use_rope: bool = True,
+    cross: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  Returns (out (B,1,d), new_cache_k, new_cache_v).
+
+    For cross-attention (``cross=True``) the cache holds precomputed encoder
+    K/V and is not updated; ``lengths`` is the encoder length.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = lengths[:, None]  # (B, 1) absolute position of the new token
+    if cross:
+        q, _, _ = _project_qkv(p, prefix, cfg, x, x, pos, pos, use_rope=False)
+        new_k, new_v = cache_k, cache_v
+        att_len = lengths
+    else:
+        q, k, v = _project_qkv(p, prefix, cfg, x, x, pos, pos, use_rope)
+        bidx = jnp.arange(B)
+        new_k = cache_k.at[bidx, :, lengths].set(k[:, 0].astype(cache_k.dtype))
+        new_v = cache_v.at[bidx, :, lengths].set(v[:, 0].astype(cache_v.dtype))
+        att_len = lengths + 1
+    out = ops.gqa_decode(q[:, 0], new_k, new_v, att_len, window=window)
+    out = _head_mask(cfg, out)
+    out = out.reshape(B, 1, -1)
+    return out @ p[f"{prefix}/wo"].astype(cfg.compute_dtype), new_k, new_v

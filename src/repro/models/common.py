@@ -1,0 +1,327 @@
+"""Model configuration, logical-axis sharding rules, and parameter helpers.
+
+Every parameter is created through :func:`Params.add`, which records a tuple
+of *logical* axis names alongside the array.  ``ShardingRules`` maps logical
+axes to mesh axes (Megatron TP over "model", DP/ZeRO over "data", pipeline
+over "pod"), and :func:`logical_to_physical` produces the PartitionSpec used
+by pjit.  Head counts / vocab / ff dims that don't divide the mesh axis are
+*padded* (function-preserving, see DESIGN.md §5); both logical and padded
+sizes live in the config so the roofline can report padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ----------------------------------------------------------------- configs
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    dispatch: str = "sort"     # sort (contiguity compaction) | cumsum (GShard)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    block: str = "attn"                    # attn | ssm | hybrid
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: bool = False                   # whisper-style encoder-decoder
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500                # whisper audio frames
+    sliding_window: int = 0                # 0 = full attention
+    global_layer_every: int = 0            # hymba: every k-th layer is global
+    parallel_block: bool = False           # command-r: attn ∥ mlp
+    qk_norm: bool = False                  # chameleon
+    tie_embeddings: bool = False
+    norm: str = "rms"                      # rms | ln
+    rope_theta: float = 10000.0
+    frontend: str = "none"                 # none | audio | vq
+    max_seq_len: int = 8192
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"                    # full | dots | none
+    # ---- physical padding (set by finalize()) ----
+    pad_heads_to: int = 1
+    pad_vocab_to: int = 256
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_heads_padded(self) -> int:
+        return _round_up(self.n_heads, self.pad_heads_to)
+
+    @property
+    def n_kv_heads_padded(self) -> int:
+        """KV heads padded to the TP degree (so the kv_heads axis shards).
+
+        Both q and kv head counts are rounded up to pad_heads_to, giving an
+        integer grouped-query ratio; padded q heads are output-masked, so
+        capacity is preserved and the FLOP/byte overhead shows up honestly
+        in the MODEL_FLOPS / HLO_FLOPs roofline ratio (DESIGN.md §5).
+        """
+        kv = _round_up(self.n_kv_heads, self.pad_heads_to)
+        assert self.n_heads_padded % kv == 0, (
+            f"padded heads {self.n_heads_padded} not divisible by "
+            f"padded kv heads {kv}"
+        )
+        return kv
+
+    @property
+    def vocab_padded(self) -> int:
+        return _round_up(self.vocab, self.pad_vocab_to)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context decode is O(1)/O(window) per token."""
+        return self.block in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def n_params(self) -> int:
+        """Logical (unpadded) parameter count for MODEL_FLOPS."""
+        d, v, L = self.d_model, self.vocab, self.n_layers
+        hd = self.resolved_head_dim
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+        if self.moe:
+            mlp = 3 * d * self.moe.d_ff_expert * (
+                self.moe.n_experts + self.moe.n_shared_experts
+            ) + d * self.moe.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        if self.block == "ssm":
+            s = self.ssm
+            di = s.d_inner(d)
+            attn = 0
+            mlp = d * (2 * di + 2 * s.d_state + s.n_heads(d)) + di * d \
+                + s.d_conv * (di + 2 * s.d_state)
+        elif self.block == "hybrid":
+            s = self.ssm
+            di = s.d_inner(d)
+            mlp += d * (2 * di + 2 * s.d_state + s.n_heads(d)) + di * d
+        body = L * (attn + mlp + 2 * d)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.encdec:
+            enc_attn = 4 * d * hd * self.n_heads
+            body += self.n_encoder_layers * (enc_attn + 3 * d * self.d_ff)
+            body += L * (enc_attn + 2 * d)  # cross-attention
+        return body + emb
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if not self.moe:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        dense = self.n_params() - L * 3 * d * self.moe.d_ff_expert * (
+            self.moe.n_experts + self.moe.n_shared_experts
+        )
+        act = L * 3 * d * self.moe.d_ff_expert * (
+            self.moe.top_k + self.moe.n_shared_experts
+        )
+        return dense + act
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def finalize(cfg: ModelConfig, model_axis_size: int) -> ModelConfig:
+    """Pad head/vocab dims for a given tensor-parallel degree."""
+    return dataclasses.replace(
+        cfg,
+        pad_heads_to=model_axis_size,
+        pad_vocab_to=max(256, model_axis_size),
+    )
+
+
+# --------------------------------------------------------- sharding rules
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (or None = replicated)."""
+
+    rules: Tuple[Tuple[str, Any], ...] = (
+        ("batch", ("pod", "data")),
+        ("seq", None),              # sequence-parallel flips this to "model"
+        ("embed", None),
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("head_dim", None),
+        ("mlp", "model"),
+        ("experts", "model"),
+        ("expert_mlp", None),
+        ("ssm_inner", "model"),
+        ("ssm_state", None),
+        ("ssm_heads", None),   # hymba: 50 heads do not divide TP=16; tiny arrays
+        ("conv", None),
+        ("layers", None),
+        ("kv_seq", None),
+        ("zero", "data"),           # ZeRO-1 optimizer-state sharding
+    )
+
+    def mesh_axis(self, logical: str):
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        raise KeyError(f"unknown logical axis {logical!r}")
+
+    def replace(self, **kw) -> "ShardingRules":
+        rules = tuple((k, kw.get(k, v)) for k, v in self.rules)
+        extra = set(kw) - {k for k, _ in self.rules}
+        if extra:
+            raise KeyError(f"unknown logical axes: {extra}")
+        return ShardingRules(rules=rules)
+
+
+def logical_to_physical(axes: Tuple[Optional[str], ...], rules: ShardingRules):
+    spec = []
+    for a in axes:
+        m = rules.mesh_axis(a) if a is not None else None
+        spec.append(m)
+    return P(*spec)
+
+
+# ------------------------------------------------------------- parameters
+class Params:
+    """Builds a params pytree and a parallel pytree of logical-axis tags."""
+
+    def __init__(self, key: jax.Array, dtype: Any):
+        self._key = key
+        self.dtype = dtype
+        self.values: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _split(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def add(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        axes: Tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "normal":
+            s = scale if scale is not None else (shape[0] ** -0.5 if shape else 1.0)
+            v = jax.random.normal(self._split(), shape, self.dtype) * s
+        elif init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        else:
+            raise ValueError(init)
+        self.values[name] = v
+        self.axes[name] = axes
+        return v
+
+    def scope(self, name: str) -> "ParamScope":
+        return ParamScope(self, name)
+
+
+class ParamScope:
+    def __init__(self, params: Params, prefix: str):
+        self._p = params
+        self._prefix = prefix
+
+    def add(self, name: str, *a, **kw):
+        return self._p.add(f"{self._prefix}/{name}", *a, **kw)
+
+    def scope(self, name: str) -> "ParamScope":
+        return ParamScope(self._p, f"{self._prefix}/{name}")
+
+
+def params_pspecs(axes_tree: Dict[str, Any], rules: ShardingRules):
+    """Map the axes pytree to PartitionSpecs."""
+    return {
+        k: logical_to_physical(v, rules) for k, v in axes_tree.items()
+    }
+
+
+# -------------------------------------------------- activation constraints
+import contextlib
+import threading
+
+_SHARDING_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: ShardingRules):
+    """Install (mesh, rules) so model code can annotate activations."""
+    prev = getattr(_SHARDING_CTX, "value", None)
+    _SHARDING_CTX.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _SHARDING_CTX.value = prev
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint via logical axes; no-op outside sharding_ctx."""
+    ctx = getattr(_SHARDING_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_physical(logical_axes, rules)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+# --------------------------------------------------- loop-unroll calibration
+_UNROLL_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def unroll_ctx(**factors: int):
+    """Per-loop unroll factors, used by the dry-run's trip-count calibration
+    (XLA's cost_analysis counts while-loop bodies once; the dry-run lowers
+    each cell twice per loop — unroll=1 and unroll=2 — and differences the
+    counts to recover true per-trip costs).  Loop names: layer, enc, chunk,
+    kv_self, kv_cross, kv_enc, ssd."""
+    prev = getattr(_UNROLL_CTX, "value", None)
+    _UNROLL_CTX.value = dict(prev or {}, **factors)
+    try:
+        yield
+    finally:
+        _UNROLL_CTX.value = prev
+
+
+def get_unroll(name: str) -> int:
+    ctx = getattr(_UNROLL_CTX, "value", None) or {}
+    return int(ctx.get(name, 1))

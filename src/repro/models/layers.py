@@ -1,0 +1,95 @@
+"""Primitive layers: norms, rotary embedding, SwiGLU MLP, embeddings.
+
+All parameters are created through ``ParamScope.add`` with logical axis tags
+(see common.py); apply functions are pure and take the param dict slice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamScope
+
+
+# ------------------------------------------------------------------ norms
+def init_norm(s: ParamScope, cfg: ModelConfig, layered: bool = True):
+    lead = (cfg.n_layers,) if layered else ()
+    lax = ("layers",) if layered else ()
+    s.add("scale", lead + (cfg.d_model,), lax + ("embed",), init="ones")
+    if cfg.norm == "ln":
+        s.add("bias", lead + (cfg.d_model,), lax + ("embed",), init="zeros")
+
+
+def apply_norm(p: Dict[str, Any], prefix: str, cfg: ModelConfig, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    y = y * p[f"{prefix}/scale"].astype(jnp.float32)
+    if cfg.norm == "ln":
+        y = y + p[f"{prefix}/bias"].astype(jnp.float32)
+    return y.astype(cfg.compute_dtype)
+
+
+# ----------------------------------------------------------------- rotary
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(s: ParamScope, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, L = cfg.d_model, cfg.n_layers
+    f = d_ff or cfg.d_ff
+    s.add("w_gate", (L, d, f), ("layers", "embed", "mlp"))
+    s.add("w_up", (L, d, f), ("layers", "embed", "mlp"))
+    s.add("w_down", (L, f, d), ("layers", "mlp", "embed"))
+
+
+def apply_mlp(p: Dict[str, Any], prefix: str, cfg: ModelConfig, x):
+    dt = cfg.compute_dtype
+    g = x @ p[f"{prefix}/w_gate"].astype(dt)
+    u = x @ p[f"{prefix}/w_up"].astype(dt)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return h @ p[f"{prefix}/w_down"].astype(dt)
+
+
+# ------------------------------------------------------------- embeddings
+def init_embeddings(s: ParamScope, cfg: ModelConfig):
+    vp, d = cfg.vocab_padded, cfg.d_model
+    s.add("tok_embed", (vp, d), ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        s.add("unembed", (d, vp), ("embed", "vocab"))
+
+
+def embed_tokens(p: Dict[str, Any], cfg: ModelConfig, tokens):
+    emb = p["embed/tok_embed"]
+    return emb[tokens].astype(cfg.compute_dtype)
+
+
+def logits_fn(p: Dict[str, Any], cfg: ModelConfig, x):
+    """x (..., d) -> logits (..., vocab_padded); padded entries masked."""
+    if cfg.tie_embeddings:
+        w = p["embed/tok_embed"].astype(cfg.compute_dtype).T
+    else:
+        w = p["embed/unembed"].astype(cfg.compute_dtype)
+    logits = (x @ w).astype(jnp.float32)
+    vp, v = cfg.vocab_padded, cfg.vocab
+    if vp != v:
+        mask = jnp.arange(vp) < v
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

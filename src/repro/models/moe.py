@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer with *work-together* dispatch.
+
+Token->expert routing is exactly the paper's scheduling problem: tokens are
+tasks, the expert id is the task type, and efficient execution requires all
+tasks of one type to run contiguously ("cores that perform the same task
+types ... run on contiguous cores", §5.4).  The dispatch below is the same
+machinery as the engine's fork allocation: a prefix-sum over per-expert
+one-hots assigns each token its *contiguous* slot in its expert's buffer
+(no atomics, deterministic), then one dense grouped GEMM per expert runs on
+the MXU.  Capacity overflow drops tokens (standard GShard semantics) — the
+residual connection carries them through.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamScope, constrain
+
+
+def init_moe(s: ParamScope, cfg: ModelConfig, n_layers: Optional[int] = None):
+    m = cfg.moe
+    d, L = cfg.d_model, (cfg.n_layers if n_layers is None else n_layers)
+    e, f = m.n_experts, m.d_ff_expert
+    s.add("router", (L, d, e), ("layers", "embed", "experts"))
+    s.add("w_gate", (L, e, d, f), ("layers", "experts", "embed", "expert_mlp"))
+    s.add("w_up", (L, e, d, f), ("layers", "experts", "embed", "expert_mlp"))
+    s.add("w_down", (L, e, f, d), ("layers", "experts", "expert_mlp", "embed"))
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        s.add("ws_gate", (L, d, fs), ("layers", "embed", "mlp"))
+        s.add("ws_up", (L, d, fs), ("layers", "embed", "mlp"))
+        s.add("ws_down", (L, fs, d), ("layers", "mlp", "embed"))
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * m.top_k * n_tokens / m.n_experts)
+    return max(128, -(-c // 128) * 128)  # pad to a lane multiple
+
+
+def _n_groups(T: int) -> int:
+    """Dispatch groups = data-parallel shards (GShard grouping).
+
+    Group-local dispatch keeps each group's expert buffer sharded over the
+    data axes, so cross-shard traffic is the token all-to-all instead of a
+    full buffer all-gather.  Outside a sharding context: one group.
+    """
+    from .common import _SHARDING_CTX
+
+    ctx = getattr(_SHARDING_CTX, "value", None)
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    while g > 1 and T % g:
+        g //= 2
+    return max(g, 1)
+
+
+def apply_moe(
+    p: Dict[str, Any], prefix: str, cfg: ModelConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    dt = cfg.compute_dtype
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = _capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p[f"{prefix}/router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)             # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)     # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    flat_e = expert_idx.reshape(-1)                      # (T*K,) task types
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1, mode="drop")
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = probs.mean(axis=0)                              # (E,)
+    ce = counts.astype(jnp.float32) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- group-local dispatch (GShard grouping): positions are computed
+    # within each data-parallel group, so the expert buffers stay sharded
+    # and the cross-shard traffic is the token all-to-all
+    G = _n_groups(T)
+    Tg = (T * K) // G
+    Cg = max(128, -(-C // G // 128) * 128)
+    eg = flat_e.reshape(G, Tg)
+    if m.dispatch == "cumsum":
+        # GShard-style one-hot exclusive scan — the paper-faithful
+        # work-together prefix sum (engine fork allocation), per group.
+        onehot = jax.nn.one_hot(eg, E, dtype=jnp.int32)   # (G, Tg, E)
+        pos = jnp.cumsum(onehot, axis=1) - onehot
+        my_pos = jnp.take_along_axis(pos, eg[..., None], axis=2)[..., 0]
+        cnt_g = None
+    else:
+        # sort-based compaction: group same task types contiguously (the
+        # paper's §5.4 contiguity principle), then rank within the group.
+        # O(Tg log Tg) sort + an E-wide scan instead of a (Tg, E) scan.
+        order = jnp.argsort(eg, axis=1, stable=True)      # (G, Tg)
+        e_sorted = jnp.take_along_axis(eg, order, axis=1)
+        cnt_g = jax.vmap(
+            lambda e: jnp.zeros((E,), jnp.int32).at[e].add(1, mode="drop")
+        )(eg)
+        starts = jnp.cumsum(cnt_g, axis=1) - cnt_g        # (G, E)
+        pos_sorted = (
+            jnp.arange(Tg, dtype=jnp.int32)[None]
+            - jnp.take_along_axis(starts, e_sorted, axis=1)
+        )
+        my_pos = jnp.zeros((G, Tg), jnp.int32)
+        my_pos = jax.vmap(lambda mp, o, ps: mp.at[o].set(ps))(
+            my_pos, order, pos_sorted
+        )
+    keep = my_pos < Cg
+    slot = jnp.where(keep, eg * Cg + my_pos, E * Cg)      # E*Cg = dropped
+
+    xrep = jnp.repeat(xt, K, axis=0).reshape(G, Tg, d)
+    buf = jax.vmap(
+        lambda s, xg: jnp.zeros((E * Cg, d), dt).at[s].set(xg, mode="drop")
+    )(slot, xrep)
+    buf = constrain(
+        buf.reshape(G, E, Cg, d), "batch", "experts", None, "embed"
+    )
+
+    # ---- per-expert SwiGLU (grouped GEMMs; experts sharded over "model",
+    # groups over the data axes — the g<->e reshard is the all-to-all)
+    wg = p[f"{prefix}/w_gate"].astype(dt)
+    wu = p[f"{prefix}/w_up"].astype(dt)
+    wd = p[f"{prefix}/w_down"].astype(dt)
+    g = jnp.einsum("gecd,edf->gecf", buf, wg)
+    u = jnp.einsum("gecd,edf->gecf", buf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    yb = jnp.einsum("gecf,efd->gecd", h, wd)
+    yb = constrain(yb, "batch", "experts", None, "embed")
+    yb = yb.reshape(G, E * Cg, d)
+
+    # ---- combine: gather back, weight by gate, sum over K ----------------
+    gathered = jax.vmap(
+        lambda y_, s, kp: jnp.where(
+            kp[:, None], y_[jnp.clip(s, 0, E * Cg - 1)], 0.0
+        )
+    )(yb, slot, keep)
+    y = (
+        gathered.reshape(T, K, d)
+        * gate_vals.astype(dt)[..., None]
+    ).sum(axis=1)
+
+    if m.n_shared_experts:
+        gs = xt @ p[f"{prefix}/ws_gate"].astype(dt)
+        us = xt @ p[f"{prefix}/ws_up"].astype(dt)
+        hs = jax.nn.silu(gs.astype(jnp.float32)).astype(dt) * us
+        y = y + hs @ p[f"{prefix}/ws_down"].astype(dt)
+
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,144 @@
+"""Mamba-2 (SSD) block: fused zxbcdt projection, short causal conv, SSD scan
+(Pallas kernel on TPU / oracle elsewhere), gated output projection.
+
+Decode keeps O(1) state per sequence: a (d_conv-1)-deep conv window and the
+(H, P, N) SSM state — this is why the ``long_500k`` cell runs for SSM/hybrid
+archs while full-attention archs skip it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .common import ModelConfig, ParamScope
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return s, di, nh, s.d_state, s.headdim, s.d_conv
+
+
+def init_ssm(s_: ParamScope, cfg: ModelConfig, n_layers: Optional[int] = None):
+    s, di, nh, N, P, K = _dims(cfg)
+    d = cfg.d_model
+    L = cfg.n_layers if n_layers is None else n_layers
+    # fused input projection: [z (gate), x, B, C, dt]
+    s_.add("w_in_zx", (L, d, 2 * di), ("layers", "embed", "ssm_inner"))
+    s_.add("w_in_bc", (L, d, 2 * N), ("layers", "embed", "ssm_state"))
+    s_.add("w_in_dt", (L, d, nh), ("layers", "embed", "ssm_heads"))
+    s_.add("conv_w", (L, K, di + 2 * N), ("layers", "conv", "ssm_inner"))
+    s_.add("a_log", (L, nh), ("layers", "ssm_heads"), init="zeros")
+    s_.add("dt_bias", (L, nh), ("layers", "ssm_heads"), init="zeros")
+    s_.add("d_skip", (L, nh), ("layers", "ssm_heads"), init="ones")
+    s_.add("w_out", (L, di, d), ("layers", "ssm_inner", "embed"))
+
+
+def _split_proj(p, prefix, cfg, u):
+    """u (B, S, d) -> z, x, B, C, dt (pre-conv, pre-activation)."""
+    dt_ = cfg.compute_dtype
+    s, di, nh, N, P, K = _dims(cfg)
+    zx = u @ p[f"{prefix}/w_in_zx"].astype(dt_)
+    bc = u @ p[f"{prefix}/w_in_bc"].astype(dt_)
+    dt_raw = u @ p[f"{prefix}/w_in_dt"].astype(dt_)
+    z, x = zx[..., :di], zx[..., di:]
+    return z, x, bc, dt_raw
+
+
+def _conv_scan_inputs(x, bc):
+    """Concat the conv-filtered channels: (B, S, di + 2N)."""
+    return jnp.concatenate([x, bc], axis=-1)
+
+
+def apply_ssm(
+    p: Dict[str, Any], prefix: str, cfg: ModelConfig, u: jnp.ndarray,
+    return_state: bool = False,
+):
+    """Training / prefill path.  u: (B, S, d) -> (B, S, d).
+    With ``return_state`` also returns (ssm_state (B,nh,P,N),
+    conv_tail (B, K-1, di+2N)) for cache handoff to decode."""
+    s, di, nh, N, P, K = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    B_, S, _ = u.shape
+    z, x, bc, dt_raw = _split_proj(p, prefix, cfg, u)
+
+    # depthwise causal conv over [x, B, C]
+    xbc = _conv_scan_inputs(x, bc)
+    w = p[f"{prefix}/conv_w"].astype(dt_)  # (K, di+2N)
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K)
+    )
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt_)
+    xc, bcc = conv[..., :di], conv[..., di:]
+    Bm, Cm = bcc[..., :N], bcc[..., N:]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p[f"{prefix}/dt_bias"].astype(jnp.float32)
+    )  # (B, S, nh)
+    A = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))  # (nh,)
+    xh = xc.reshape(B_, S, nh, P)
+
+    def one_seq(xs, dts, bs, cs):
+        return ops.ssd(xs, dts, A, bs, cs)
+
+    y, hfinal = jax.vmap(one_seq)(xh, dt.astype(dt_), Bm, Cm)  # (B,S,nh,P)
+    y = y + xh * p[f"{prefix}/d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = y @ p[f"{prefix}/w_out"].astype(dt_)
+    if return_state:
+        K_ = K - 1
+        tail = jnp.pad(xbc, ((0, 0), (K_, 0), (0, 0)))[:, S : S + K_]
+        return out, hfinal, tail
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    s, di, nh, N, P, K = _dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, K - 1, di + 2 * N), dtype),
+        state=jnp.zeros((batch, nh, P, N), jnp.float32),
+    )
+
+
+def apply_ssm_decode(
+    p: Dict[str, Any],
+    prefix: str,
+    cfg: ModelConfig,
+    u: jnp.ndarray,           # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode: O(1) state update (the SSD recurrence directly)."""
+    s, di, nh, N, P, K = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    B_ = u.shape[0]
+    z, x, bc, dt_raw = _split_proj(p, prefix, cfg, u)
+
+    xbc = _conv_scan_inputs(x, bc)[:, 0]  # (B, di+2N)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,.)
+    w = p[f"{prefix}/conv_w"].astype(dt_)  # (K, di+2N)
+    conv = (hist * w[None]).sum(axis=1)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt_)
+    xc, bcc = conv[..., :di], conv[..., di:]
+    Bm, Cm = bcc[..., :N], bcc[..., N:]
+
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32)
+        + p[f"{prefix}/dt_bias"].astype(jnp.float32)
+    )  # (B, nh)
+    A = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+    xh = xc.reshape(B_, nh, P)
+    decay = jnp.exp(A[None] * dt)[..., None, None]          # (B,nh,1,1)
+    upd = (dt[..., None] * xh)[..., None] * Bm[:, None, None, :]
+    state = decay * cache["state"] + upd                     # (B,nh,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y.astype(dt_) + xh * p[f"{prefix}/d_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(B_, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = y @ p[f"{prefix}/w_out"].astype(dt_)
+    return out, dict(conv=hist[:, 1:], state=state)

@@ -1,0 +1,4 @@
+# Pure-JAX optimizer substrate: AdamW with ZeRO-1 state sharding, cosine
+# schedule, global-norm clipping, gradient accumulation.
+from .adamw import AdamW, OptState, zero1_pspec  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,114 @@
+"""AdamW in pure JAX with ZeRO-1 optimizer-state sharding.
+
+The first/second-moment tensors carry a PartitionSpec that additionally
+shards one param-replicated dimension over the "data" mesh axis (ZeRO-1).
+Under GSPMD this materializes as reduce-scattered moment updates and an
+all-gather of the updated params — the standard ZeRO-1 collective schedule —
+without any manual collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    m: Dict[str, jnp.ndarray]
+    v: Dict[str, jnp.ndarray]
+    step: jnp.ndarray
+    # f32 master copies when training with bf16 params (mixed precision);
+    # empty dict otherwise
+    master: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+
+
+def zero1_pspec(
+    spec: P,
+    shape: Tuple[int, ...],
+    data_axes: Tuple[str, ...],
+    data_axis_size: int,
+) -> P:
+    """Shard the first replicated, divisible dim of a moment tensor over the
+    data axes (ZeRO-1).  Falls back to the param spec when nothing divides."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+    for i, (p_, n) in enumerate(zip(parts, shape)):
+        if p_ is None and n > 0 and n % data_axis_size == 0:
+            parts[i] = ax
+            return P(*parts)
+    return P(*list(spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                 # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    master_weights: bool = False   # bf16 params + f32 masters in OptState
+
+    def init(self, params: Dict[str, jnp.ndarray]) -> OptState:
+        zeros = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+        master = {}
+        if self.master_weights:
+            master = {
+                k: v.astype(jnp.float32) for k, v in params.items()
+            }
+        return OptState(
+            m=zeros,
+            v={k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+            step=jnp.zeros((), jnp.int32),
+            master=master,
+        )
+
+    def update(
+        self,
+        params: Dict[str, jnp.ndarray],
+        grads: Dict[str, jnp.ndarray],
+        state: OptState,
+    ) -> Tuple[Dict[str, jnp.ndarray], OptState, Dict[str, jnp.ndarray]]:
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in grads.values()
+            )
+        )
+        scale = jnp.float32(1.0)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        new_p, new_m, new_v, new_master = {}, {}, {}, {}
+        for k, p_ in params.items():
+            g = grads[k].astype(jnp.float32) * scale
+            m = self.b1 * state.m[k] + (1 - self.b1) * g
+            v = self.b2 * state.v[k] + (1 - self.b2) * g * g
+            upd = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            ref = state.master[k] if self.master_weights else (
+                p_.astype(jnp.float32)
+            )
+            if self.weight_decay and p_.ndim > 1:  # no decay on norms/bias
+                upd = upd + self.weight_decay * ref
+            newf = ref - lr * upd
+            if self.master_weights:
+                new_master[k] = newf
+            new_p[k] = newf.astype(p_.dtype)
+            new_m[k] = m
+            new_v[k] = v
+        return new_p, OptState(
+            m=new_m, v=new_v, step=step, master=new_master
+        ), {
+            "grad_norm": gnorm, "lr": jnp.float32(lr),
+        }

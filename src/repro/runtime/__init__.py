@@ -1,0 +1,4 @@
+# Runtime substrate: fault-tolerant train runner (checkpoint/restart,
+# failure injection), straggler mitigation, elastic re-meshing.
+from .ft import TrainRunner, FailureInjector  # noqa: F401
+from .stragglers import StragglerMonitor  # noqa: F401

@@ -1,0 +1,48 @@
+"""Straggler detection/mitigation for the host-side step loop.
+
+At multi-pod scale a straggling host shows up as a slow step (everything is
+bulk-synchronous — exactly the paper's epoch model, where one slow lane
+delays the whole epoch).  The monitor keeps an EMA of step wall-time and
+flags steps beyond ``threshold`` x EMA; the runner's mitigation policy is
+pluggable (log / skip-data-refill / trigger elastic re-mesh).  On real pods
+the same hook receives per-host heartbeat latencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    elapsed: float
+    ema: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, ema_decay: float = 0.9):
+        self.threshold = threshold
+        self.ema_decay = ema_decay
+        self.ema: Optional[float] = None
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int) -> Optional[StragglerEvent]:
+        elapsed = time.monotonic() - self._t0
+        ev = None
+        if self.ema is not None and elapsed > self.threshold * self.ema:
+            ev = StragglerEvent(step=step, elapsed=elapsed, ema=self.ema)
+            self.events.append(ev)
+            # a straggler step must not poison the baseline
+        else:
+            self.ema = (
+                elapsed
+                if self.ema is None
+                else self.ema_decay * self.ema + (1 - self.ema_decay) * elapsed
+            )
+        return ev

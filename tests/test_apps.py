@@ -1,0 +1,132 @@
+"""Application-level tests: every paper workload vs its native reference."""
+import numpy as np
+import pytest
+
+from repro.apps import bfs, fft, fib, matmul, mergesort, nqueens, sssp
+from repro.apps.baselines import bitonic, worklist
+from repro.core import HostEngine
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("n", [16, 96])
+def test_bfs_matches_reference_and_worklist(n, seed):
+    adj_off, adj = bfs.random_graph(n, avg_degree=4, seed=seed)
+    ref = bfs.bfs_reference(adj_off, adj, 0, n)
+    prog = bfs.make_program(n, len(adj))
+    heap, _, _ = HostEngine(prog, capacity=1 << 14).run(
+        bfs.initial(0), heap_init=bfs.heap_init(adj_off, adj, n)
+    )
+    np.testing.assert_array_equal(np.asarray(heap["dist"]), ref)
+    wl, _ = worklist.bfs_worklist(adj_off, adj, 0, n)
+    np.testing.assert_array_equal(np.asarray(wl), ref)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_sssp_matches_reference_and_worklist(n):
+    adj_off, adj = bfs.random_graph(n, avg_degree=4, seed=7)
+    wgt = sssp.random_weights(len(adj), seed=2)
+    ref = sssp.sssp_reference(adj_off, adj, wgt, 0, n)
+    prog = sssp.make_program(n, len(adj))
+    heap, _, _ = HostEngine(prog, capacity=1 << 14).run(
+        sssp.initial(0), heap_init=sssp.heap_init(adj_off, adj, wgt, n)
+    )
+    np.testing.assert_allclose(np.asarray(heap["dist"]), ref, rtol=1e-5)
+    wl, _ = worklist.sssp_worklist(adj_off, adj, wgt, 0, n)
+    np.testing.assert_allclose(np.asarray(wl), ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("use_map", [True, False])
+@pytest.mark.parametrize("n", [8, 32])
+def test_mergesort(n, use_map):
+    x = mergesort.random_input(n, seed=5)
+    prog = mergesort.make_program(n, use_map=use_map)
+    heap, _, stats = HostEngine(prog, capacity=1 << 12).run(
+        mergesort.initial(n), heap_init=dict(inp=x)
+    )
+    np.testing.assert_array_equal(np.asarray(heap["src"])[:n], np.sort(x))
+    if use_map:
+        assert stats.map_launches > 0
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_bitonic_baseline(n):
+    x = mergesort.random_input(n, seed=1)
+    np.testing.assert_array_equal(
+        np.asarray(bitonic.bitonic_sort(np.asarray(x))), np.sort(x)
+    )
+
+
+@pytest.mark.parametrize("n", [8, 32])
+def test_fft(n):
+    xr, xi = fft.random_input(n, seed=7)
+    prog = fft.make_program(n)
+    heap, _, _ = HostEngine(prog, capacity=1 << 12).run(
+        fft.initial(n), heap_init=dict(xr=xr, xi=xi)
+    )
+    got = np.asarray(heap["re"])[:n] + 1j * np.asarray(heap["im"])[:n]
+    np.testing.assert_allclose(got, fft.fft_reference(xr, xi), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [4, 5, 6, 7])
+def test_nqueens(n):
+    prog = nqueens.make_program(n)
+    heap, _, _ = HostEngine(prog, capacity=1 << 13).run(nqueens.initial())
+    assert int(np.asarray(heap["count"])[0]) == nqueens.SOLUTIONS[n]
+
+
+@pytest.mark.parametrize("n,block", [(4, 4), (8, 4), (16, 8)])
+def test_matmul(n, block):
+    A, B = matmul.random_inputs(n, seed=9)
+    prog = matmul.make_program(n, block=block)
+    heap, _, _ = HostEngine(prog, capacity=1 << 12).run(
+        matmul.initial(n), heap_init=dict(A=A.ravel(), B=B.ravel())
+    )
+    np.testing.assert_allclose(
+        np.asarray(heap["C"]).reshape(n, n), A @ B, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_fib_values():
+    for n in (0, 1, 5, 16):
+        _, v, _ = HostEngine(fib.PROGRAM, capacity=1 << 13).run(fib.initial(n))
+        assert int(v[0, 0]) == fib.fib_reference(n)
+
+
+def test_tsp_exact():
+    from repro.apps import tsp
+
+    n = 7
+    dist = tsp.random_instance(n, seed=3)
+    prog = tsp.make_program(n)
+    heap, _, stats = HostEngine(prog, capacity=1 << 14).run(
+        tsp.initial(), heap_init=tsp.heap_init(dist)
+    )
+    got = int(np.asarray(heap["best"])[0])
+    assert got == tsp.tsp_reference(dist)
+    # pruning means far fewer tasks than the full (n-1)! tree
+    import math
+
+    full_tree = sum(
+        math.factorial(n - 1) // math.factorial(n - 1 - d)
+        for d in range(1, n)
+    )
+    assert stats.tasks_executed < full_tree
+
+
+def test_annealing_reaches_good_energy():
+    from repro.apps import annealing
+
+    nb = 8
+    Q = annealing.random_qubo(nb, seed=5)
+    prog = annealing.make_program(nb, n_steps=40, n_chains=16)
+    heap, _, stats = HostEngine(prog, capacity=1 << 10).run(
+        annealing.initial(), heap_init=dict(Q=Q.ravel())
+    )
+    got = int(np.asarray(heap["best"])[0])
+    opt = annealing.brute_force_min(Q)
+    assert got >= opt
+    # 16 chains x 40 steps must land within 20% of the optimum (or exactly
+    # 0 if the optimum is 0)
+    assert got <= opt + max(2, int(abs(opt) * 0.2))
+    # regular parallelism: ~n_steps epochs, not n_steps*chains
+    assert stats.epochs <= 45

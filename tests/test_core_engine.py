@@ -1,0 +1,176 @@
+"""Engine behaviour tests: host vs device vs sequential-oracle equivalence,
+paper-example semantics (Fig. 3), and hypothesis property tests on random
+fork/join DAG programs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import fib, treewalk
+from repro.core import (
+    DeviceEngine,
+    EngineError,
+    HostEngine,
+    Program,
+    TaskType,
+    InitialTask,
+    HeapVar,
+    compare,
+    run_oracle,
+)
+
+
+@pytest.mark.parametrize("n,expect", [(0, 0), (1, 1), (2, 1), (10, 55), (14, 377)])
+def test_fib_host(n, expect):
+    heap, values, stats = HostEngine(fib.PROGRAM, capacity=1 << 12).run(
+        fib.initial(n)
+    )
+    assert int(values[0, 0]) == expect
+    # critical path = one epoch per level down + one per join level up
+    assert stats.epochs == (2 * n - 1 if n >= 2 else 1)
+
+
+@pytest.mark.parametrize("n", [2, 8, 12])
+def test_fib_device_matches_host(n):
+    _, vh, sh = HostEngine(fib.PROGRAM, capacity=1 << 12).run(fib.initial(n))
+    _, vd, sd = DeviceEngine(
+        fib.PROGRAM, capacity=1 << 12, stack_depth=256
+    ).run(fib.initial(n))
+    assert int(vh[0, 0]) == int(vd[0, 0]) == fib.fib_reference(n)
+    assert sh.epochs == sd.epochs
+
+
+def test_fib_oracle_equivalence():
+    heap_o, v_o, so = run_oracle(fib.PROGRAM, fib.initial(9), capacity=1 << 12)
+    heap_e, v_e, se = HostEngine(fib.PROGRAM, capacity=1 << 12).run(
+        fib.initial(9)
+    )
+    assert int(v_o[0, 0]) == int(v_e[0, 0])
+    assert so.epochs == se.epochs
+    assert so.tasks_executed == se.tasks_executed
+    rep = compare(so, se)
+    assert rep.t1_tasks == so.tasks_executed
+    assert rep.v1_lane_factor >= 1.0
+    assert rep.utilization <= 1.0
+
+
+def test_overflow_raises():
+    with pytest.raises(EngineError):
+        HostEngine(fib.PROGRAM, capacity=16).run(fib.initial(12))
+
+
+def test_treewalk_postorder_property():
+    n = 21
+    left, right = treewalk.random_tree(n, seed=11)
+    prog = treewalk.make_program(n, "post")
+    heap, _, _ = HostEngine(prog, capacity=1 << 10).run(
+        treewalk.initial(), heap_init=dict(left=left, right=right)
+    )
+    ve = np.asarray(heap["visit_epoch"])
+    for p in range(n):
+        for c in (left[p], right[p]):
+            if c >= 0:
+                assert ve[p] > ve[c], "parent must be visited after children"
+
+
+def test_treewalk_preorder_property():
+    n = 17
+    left, right = treewalk.random_tree(n, seed=4)
+    prog = treewalk.make_program(n, "pre")
+    heap, _, _ = HostEngine(prog, capacity=1 << 10).run(
+        treewalk.initial(), heap_init=dict(left=left, right=right)
+    )
+    ve = np.asarray(heap["visit_epoch"])
+    for p in range(n):
+        for c in (left[p], right[p]):
+            if c >= 0:
+                assert ve[p] < ve[c], "parent must be visited before children"
+
+
+# ---------------------------------------------------------------------------
+# Property test: random fork/join DAG programs must match the oracle exactly.
+# Each task carries (depth, salt); it pseudo-randomly forks 0..3 children,
+# optionally joins to sum their values, and add-scatters into a heap cell.
+# This exercises fork allocation contiguity, join LIFO order, emit routing,
+# reclamation, and heap commit semantics all at once.
+# ---------------------------------------------------------------------------
+def _make_random_dag_program(max_depth: int, fanout_mod: int) -> Program:
+    def _node(ctx):
+        depth, salt = ctx.argi(0), ctx.argi(1)
+        h = (salt * 31421 + depth * 6927 + 17) & 0x7FFF
+        n_kids = jnp.where(depth >= max_depth, 0, h % fanout_mod)
+        ctx.write("touch", (h % 16), 1, op="add")
+        for k in range(fanout_mod - 1):
+            ctx.fork(
+                "node",
+                argi=(depth + 1, h + 31 * k + 7),
+                where=k < n_kids,
+            )
+        has_kids = n_kids > 0
+        ctx.emit(depth + (h % 5), where=~has_kids)
+        ctx.join("gather", argi=(depth, salt), where=has_kids)
+
+    def _gather(ctx):
+        cv = ctx.child_values(fanout_mod - 1)
+        ctx.emit(cv[:, 0].sum() + 1)
+
+    return Program(
+        name="random_dag",
+        tasks=(TaskType("node", _node), TaskType("gather", _gather)),
+        n_arg_i=2,
+        value_width=1,
+        value_dtype=jnp.int32,
+        heap=(HeapVar("touch", (16,), jnp.int32),),
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**15 - 1),
+    max_depth=st.integers(1, 4),
+    fanout_mod=st.integers(2, 4),
+)
+def test_random_dag_engine_matches_oracle(seed, max_depth, fanout_mod):
+    prog = _make_random_dag_program(max_depth, fanout_mod)
+    init = InitialTask(task="node", argi=(0, seed))
+    heap_o, v_o, so = run_oracle(prog, init, capacity=1 << 12)
+    heap_e, v_e, se = HostEngine(prog, capacity=1 << 12).run(init)
+    np.testing.assert_array_equal(np.asarray(heap_e["touch"]), heap_o["touch"])
+    assert int(v_e[0, 0]) == int(v_o[0, 0])
+    assert se.epochs == so.epochs
+    assert se.tasks_executed == so.tasks_executed
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**15 - 1))
+def test_random_dag_device_matches_host(seed):
+    prog = _make_random_dag_program(3, 3)
+    init = InitialTask(task="node", argi=(0, seed))
+    heap_h, v_h, sh = HostEngine(prog, capacity=1 << 10).run(init)
+    heap_d, v_d, sd = DeviceEngine(
+        prog, capacity=1 << 10, stack_depth=256
+    ).run(init)
+    np.testing.assert_array_equal(
+        np.asarray(heap_h["touch"]), np.asarray(heap_d["touch"])
+    )
+    assert int(v_h[0, 0]) == int(v_d[0, 0])
+    assert sh.epochs == sd.epochs
+
+
+def test_engine_with_pallas_fork_offsets():
+    """The engine's fork-allocation plug point accepts the Pallas kernel
+    (interpret mode on CPU) and produces identical schedules."""
+    from repro.kernels import ops as kops
+
+    def pallas_offsets(counts):
+        return kops.fork_offsets(counts, impl="interpret")
+
+    _, v_ref, s_ref = HostEngine(fib.PROGRAM, capacity=1 << 10).run(
+        fib.initial(10)
+    )
+    _, v_pal, s_pal = HostEngine(
+        fib.PROGRAM, capacity=1 << 10, fork_offsets_fn=pallas_offsets
+    ).run(fib.initial(10))
+    assert int(v_ref[0, 0]) == int(v_pal[0, 0]) == fib.fib_reference(10)
+    assert s_ref.epochs == s_pal.epochs
+    assert s_ref.tasks_executed == s_pal.tasks_executed

@@ -1,0 +1,153 @@
+"""Multi-device distributed tests (pipeline parallelism, compressed
+all-reduce, elastic resharding).  Each runs in a subprocess with forced host
+devices so the main test process keeps its single-device jax config."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(script: str, devices: int = 4) -> str:
+    env = {
+        "PYTHONPATH": SRC,
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/tmp",
+    }
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=480, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_gpipe_matches_sequential():
+    out = _run(
+        """
+import jax, jax.numpy as jnp, numpy as np
+mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed import gpipe_apply
+rng = np.random.RandomState(0)
+ws = jnp.asarray(rng.normal(size=(4, 8, 8)) * 0.3, jnp.float32)
+x = jnp.asarray(rng.normal(size=(6, 2, 8)), jnp.float32)
+got = gpipe_apply(lambda w, h: jnp.tanh(h @ w), ws, x, mesh, axis="pod")
+want = x
+for i in range(4):
+    want = jnp.tanh(want @ ws[i])
+err = float(jnp.abs(got - want).max())
+assert err < 1e-6, err
+print("PIPE_OK", err)
+"""
+    )
+    assert "PIPE_OK" in out
+
+
+def test_compressed_allreduce_int8_and_bf16():
+    out = _run(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed import compressed_grad_allreduce
+from repro.distributed.compression import CompressionState
+rng = np.random.RandomState(0)
+g = {"w": jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)}
+resid0 = {"w": jnp.zeros((4, 64), jnp.float32)}
+def f(gs, rs):
+    out, st = compressed_grad_allreduce(
+        {"w": gs["w"][0]}, ("data",), "int8",
+        CompressionState(residual={"w": rs["w"][0]}))
+    return out, {"w": st.residual["w"][None]}
+out, resid = jax.shard_map(f, mesh=mesh,
+    in_specs=({"w": P("data")}, {"w": P("data")}),
+    out_specs=({"w": P()}, {"w": P("data")}))(g, resid0)
+want = g["w"].mean(0)
+err = float(jnp.abs(out["w"] - want).max())
+bound = float(jnp.abs(g["w"]).max() / 127) + 1e-6
+assert err <= bound, (err, bound)
+# error feedback residual: reapplying next step corrects the bias
+assert float(jnp.abs(resid["w"]).max()) > 0
+out2, _ = jax.shard_map(
+    lambda gs, rs: compressed_grad_allreduce({"w": gs["w"][0]}, ("data",), "bf16", None),
+    mesh=mesh, in_specs=({"w": P("data")}, {"w": P("data")}),
+    out_specs=({"w": P()}, None))(g, resid0)
+err2 = float(jnp.abs(out2["w"] - want).max())
+assert err2 < 2e-2, err2
+print("COMPRESS_OK", err, err2)
+"""
+    )
+    assert "COMPRESS_OK" in out
+
+
+def test_elastic_reshard_across_meshes():
+    """Save under a (2,2) mesh, restore onto a (4,1) mesh — elastic."""
+    out = _run(
+        """
+import tempfile, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpointing import CheckpointManager, restore_resharded
+from repro.models.common import ShardingRules
+from repro.launch.mesh import rules_for_mesh
+
+mesh_a = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = jax.make_mesh((4, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+axes = {"w": ("embed", "mlp"), "b": ("mlp",)}
+rules_a = rules_for_mesh(mesh_a)
+rules_b = rules_for_mesh(mesh_b)
+w = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh_a, P(None, "model")))
+b = jax.device_put(np.arange(8, dtype=np.float32),
+                   NamedSharding(mesh_a, P("model")))
+d = tempfile.mkdtemp()
+mgr = CheckpointManager(d)
+mgr.save(5, {"w": w, "b": b})
+step, params, _ = restore_resharded(mgr, axes, mesh_b, rules_b)
+assert step == 5
+np.testing.assert_array_equal(np.asarray(params["w"]), np.asarray(w))
+np.testing.assert_array_equal(np.asarray(params["b"]), np.asarray(b))
+assert params["w"].sharding.mesh.shape == {"data": 4, "model": 1}
+print("ELASTIC_OK")
+"""
+    )
+    assert "ELASTIC_OK" in out
+
+
+def test_multidevice_train_step_with_mesh():
+    """End-to-end sharded train step on a 2x2 mesh (TP+DP+ZeRO-1)."""
+    out = _run(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch.mesh import rules_for_mesh, param_shardings
+from repro.models.common import finalize, sharding_ctx
+from repro.models.model import init_model, loss_fn
+from repro.optim import AdamW
+from repro.data import SyntheticLM, place_batch
+from jax.sharding import NamedSharding
+
+mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = finalize(configs.get_reduced("granite_3_8b"), 2)
+rules = rules_for_mesh(mesh)
+pspecs, axes = param_shardings(cfg, mesh, rules)
+params, _ = init_model(cfg, jax.random.PRNGKey(0))
+params = {k: jax.device_put(v, pspecs[k].sharding) for k, v in params.items()}
+opt = AdamW(lr=1e-3)
+opt_state = opt.init(params)
+def step(p, s, b):
+    with sharding_ctx(mesh, rules):
+        (l, m), g = jax.value_and_grad(lambda p_: loss_fn(p_, cfg, b), has_aux=True)(p)
+        return opt.update(p, g, s) + (l,)
+data = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=4)
+b = place_batch(data.batch_at(0), mesh)
+p2, s2, om, l0 = jax.jit(step)(params, opt_state, b)
+b = place_batch(data.batch_at(1), mesh)
+p3, s3, om, l1 = jax.jit(step)(p2, s2, b)
+assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+print("MESH_TRAIN_OK", float(l0), float(l1))
+"""
+    )
+    assert "MESH_TRAIN_OK" in out

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train/decode
+step on CPU, asserting output shapes and no NaNs (full configs are exercised
+only by the dry-run)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode_step, forward, init_cache, init_model, loss_fn
+from repro.models.common import finalize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encdec:
+        batch["enc_frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_len, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_forward_and_loss(arch):
+    cfg = configs.get_reduced(arch)
+    params, axes = init_model(cfg, KEY)
+    assert set(params) == set(axes)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    hidden, aux = forward(
+        params, cfg, batch["tokens"], enc_frames=batch.get("enc_frames")
+    )
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    """One SGD step must produce finite grads for every parameter."""
+    cfg = configs.get_reduced(arch)
+    params, _ = init_model(cfg, KEY)
+    batch = _batch(cfg)
+
+    def loss_of(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    grads = jax.jit(jax.grad(loss_of))(params)
+    for k, g in grads.items():
+        assert np.isfinite(np.asarray(g, np.float32)).all(), (arch, k)
+    # params actually move
+    moved = any(
+        float(jnp.abs(g).max()) > 0 for g in grads.values()
+    )
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_decode(arch):
+    cfg = configs.get_reduced(arch)
+    params, _ = init_model(cfg, KEY)
+    B = 2
+    cache = init_cache(cfg, B, max_len=32)
+    if cfg.encdec:
+        cache["enc_out"] = jax.random.normal(
+            KEY, (B, cfg.encoder_len, cfg.d_model), cfg.compute_dtype
+        )
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    logits, cache = step(params, tok, cache)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["lengths"][0]) == 1
+    logits2, cache = step(params, tok, cache)
+    assert int(cache["lengths"][0]) == 2
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_decode_matches_prefill_causal():
+    """Token-by-token decode must match the teacher-forced forward pass."""
+    cfg = configs.get_reduced("granite_3_8b")
+    params, _ = init_model(cfg, KEY)
+    B, S = 1, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    hidden, _ = forward(params, cfg, tokens, remat=False)
+    from repro.models.layers import logits_fn
+
+    full_logits = logits_fn(params, cfg, hidden)  # (B, S, Vp)
+    cache = init_cache(cfg, B, max_len=S + 1)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(params, cfg, tokens[:, t : t + 1], cache)
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=2e-2, atol=2e-2,  # bf16 compute
+    )
+
+
+def test_head_padding_is_function_preserving():
+    """Padding heads/vocab for TP divisibility must not change outputs."""
+    cfg = configs.get_reduced("yi_34b")
+    cfgp = finalize(cfg, model_axis_size=8)  # pads 4 heads -> 8
+    assert cfgp.n_heads_padded == 8 and cfg.n_heads == 4
+    params, _ = init_model(cfgp, KEY)
+    B, S = 1, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    hidden, _ = forward(params, cfgp, tokens, remat=False)
+    # zero out everything the padded heads could have contributed: output
+    # must be identical since padded heads are masked before wo
+    p2 = dict(params)
+    hd = cfgp.resolved_head_dim
+    wo = np.array(params["layers/attn/wo"], np.float32)  # writable copy
+    wo[:, cfg.n_heads * hd :, :] = 1e6  # poison padded-head rows
+    p2["layers/attn/wo"] = jnp.asarray(wo, params["layers/attn/wo"].dtype)
+    hidden2, _ = forward(p2, cfgp, tokens, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(hidden, np.float32), np.asarray(hidden2, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_moe_dispatch_capacity_and_balance():
+    """MoE layer: dropped tokens fall back to residual; aux loss finite."""
+    cfg = configs.get_reduced("granite_moe_1b_a400m")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.5)
+    )
+    params, _ = init_model(cfg, KEY)
+    batch = _batch(cfg, B=2, S=32)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) > 0
