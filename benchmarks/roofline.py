@@ -26,7 +26,30 @@ PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
 HBM_BW = 819e9           # B/s per chip
 LINK_BW = 50e9           # B/s per ICI link
 
+# V_inf critical-path constants for the epoch engines (paper §4.4.1): every
+# host->device program launch and device->host scalar readback sits on the
+# epoch critical path.  Calibrated to this container's measured jitted
+# no-op dispatch / device_get round trips; on a real TPU host they are the
+# PCIe/ICI launch+readback latencies.
+DISPATCH_LATENCY_S = 40e-6   # per program launch
+TRANSFER_LATENCY_S = 15e-6   # per scalar readback batch
+
 ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def vinf_seconds(stats) -> float:
+    """Critical-path overhead V_inf·T_inf implied by engine ``RunStats``.
+
+    Consumes the engines' pluggable stats-collector output
+    (``repro.core.scheduler.RunStats`` or anything with ``dispatches`` /
+    ``scalar_transfers``): the §5.4 compacted dispatch pays one extra
+    launch + one extra readback per epoch for its compaction pass, and this
+    is the model that prices that trade against the lane-utilization win.
+    """
+    return (
+        stats.dispatches * DISPATCH_LATENCY_S
+        + stats.scalar_transfers * TRANSFER_LATENCY_S
+    )
 
 
 def model_flops(rec: dict, cfg) -> float:

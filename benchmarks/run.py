@@ -9,12 +9,17 @@ from the dry-run artifacts, not timed here.
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Callable, List, Tuple
 
 import numpy as np
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# set by main() from --dispatch; every HostEngine below follows it so the
+# whole harness can be A/B'd masked vs compacted (§5.4 contiguity)
+DISPATCH = "masked"
 
 
 def _time(fn: Callable, repeats: int = 3) -> float:
@@ -39,11 +44,11 @@ def bench_fib():
         _, _, ostats = run_oracle(fib.PROGRAM, fib.initial(n), capacity=1 << 14)
 
         def run_host():
-            HostEngine(fib.PROGRAM, capacity=1 << 14, collect_stats=False).run(
+            HostEngine(fib.PROGRAM, capacity=1 << 14, collect_stats=False, dispatch=DISPATCH).run(
                 fib.initial(n)
             )
 
-        eng = HostEngine(fib.PROGRAM, capacity=1 << 14)
+        eng = HostEngine(fib.PROGRAM, capacity=1 << 14, dispatch=DISPATCH)
         _, vals, hstats = eng.run(fib.initial(n))
         t_host = _time(run_host, repeats=1)
         rep = compare(ostats, hstats)
@@ -89,7 +94,7 @@ def bench_fft():
         prog = fft.make_program(n)
 
         def run_trees():
-            HostEngine(prog, capacity=1 << 13, collect_stats=False).run(
+            HostEngine(prog, capacity=1 << 13, collect_stats=False, dispatch=DISPATCH).run(
                 fft.initial(n), heap_init=dict(xr=xr, xi=xi)
             )
 
@@ -120,7 +125,7 @@ def bench_graph():
 
     def run_trees_bfs():
         prog = bfs.make_program(n, len(adj))
-        HostEngine(prog, capacity=1 << 15, collect_stats=False).run(
+        HostEngine(prog, capacity=1 << 15, collect_stats=False, dispatch=DISPATCH).run(
             bfs.initial(0), heap_init=bfs.heap_init(adj_off, adj, n)
         )
 
@@ -139,7 +144,7 @@ def bench_graph():
 
     def run_trees_sssp():
         prog = sssp.make_program(n, len(adj))
-        HostEngine(prog, capacity=1 << 16, collect_stats=False).run(
+        HostEngine(prog, capacity=1 << 16, collect_stats=False, dispatch=DISPATCH).run(
             sssp.initial(0), heap_init=sssp.heap_init(adj_off, adj, wgt, n)
         )
 
@@ -167,7 +172,7 @@ def bench_sort():
 
     def run(use_map):
         prog = mergesort.make_program(n, use_map=use_map)
-        HostEngine(prog, capacity=1 << 13, collect_stats=False).run(
+        HostEngine(prog, capacity=1 << 13, collect_stats=False, dispatch=DISPATCH).run(
             mergesort.initial(n), heap_init=dict(inp=x)
         )
 
@@ -190,10 +195,10 @@ def bench_overhead():
 
     prog = nqueens.make_program(7)
     _, _, ostats = run_oracle(prog, nqueens.initial(), capacity=1 << 14)
-    eng = HostEngine(prog, capacity=1 << 14)
+    eng = HostEngine(prog, capacity=1 << 14, dispatch=DISPATCH)
     t = _time(
         lambda: HostEngine(
-            prog, capacity=1 << 14, collect_stats=False
+            prog, capacity=1 << 14, collect_stats=False, dispatch=DISPATCH
         ).run(nqueens.initial()),
         repeats=1,
     )
@@ -207,6 +212,58 @@ def bench_overhead():
         f"Vinf_dispatches={rep.v_inf_dispatches};"
         f"greedy_bound_P256={rep.greedy_bound(256):.0f}",
     )
+
+
+# ------------------------------- §5.4: masked vs compacted dispatch A/B
+def bench_dispatch():
+    """Lane utilization + time, masked vs type-compacted dispatch, per app.
+
+    The compacted rows realize §5.4's contiguity principle (dense per-type
+    launches); the derived column carries the utilization of *both* policies
+    so the win is visible in one row, plus the V_inf critical-path estimate
+    from the roofline dispatch model.
+    """
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from roofline import vinf_seconds
+
+    from repro.apps import get_case
+    from repro.core import HostEngine
+
+    for name in ("fib", "nqueens", "bfs"):
+        case = get_case(name)
+        stats = {}
+        times = {}
+        for policy in ("masked", "compacted"):
+            eng = HostEngine(
+                case.program, capacity=case.capacity, dispatch=policy
+            )
+            _, _, stats[policy] = eng.run(
+                case.initial, heap_init=dict(case.heap_init) or None
+            )
+            times[policy] = _time(
+                lambda e=eng: e.run(
+                    case.initial, heap_init=dict(case.heap_init) or None
+                ),
+                repeats=1,
+            )
+        sm, sc = stats["masked"], stats["compacted"]
+        occ = ";".join(
+            f"occ_{t}={o:.2f}" for t, o in sorted(sc.occupancy_by_type.items())
+        )
+        row(
+            f"dispatch_{name}_{DISPATCH}", times[DISPATCH] * 1e6,
+            f"util_masked={sm.utilization:.2f};"
+            f"util_compacted={sc.utilization:.2f};"
+            f"us_masked={times['masked']*1e6:.1f};"
+            f"us_compacted={times['compacted']*1e6:.1f};"
+            f"lanes_masked={sm.lanes_launched};"
+            f"lanes_compacted={sc.lanes_launched};"
+            f"vinf_masked_us={vinf_seconds(sm)*1e6:.0f};"
+            f"vinf_compacted_us={vinf_seconds(sc)*1e6:.0f};{occ}",
+        )
 
 
 # --------------------------------------------------- TVM serving engine
@@ -271,15 +328,38 @@ def bench_roofline():
         )
 
 
-def main() -> None:
+BENCHES = {
+    "fib": bench_fib,
+    "fft": bench_fft,
+    "graph": bench_graph,
+    "sort": bench_sort,
+    "overhead": bench_overhead,
+    "dispatch": bench_dispatch,
+    "serving": bench_serving,
+    "roofline": bench_roofline,
+}
+
+
+def main(argv=None) -> None:
+    global DISPATCH
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dispatch", choices=("masked", "compacted"), default="masked",
+        help="HostEngine dispatch policy for every benchmark "
+        "(masked = seed full-width vmap; compacted = §5.4 dense "
+        "per-type launches)",
+    )
+    ap.add_argument(
+        "--only", nargs="+", choices=sorted(BENCHES), default=None,
+        help="run only these benchmark groups",
+    )
+    args = ap.parse_args(argv)
+    DISPATCH = args.dispatch
     print("name,us_per_call,derived")
-    bench_fib()
-    bench_fft()
-    bench_graph()
-    bench_sort()
-    bench_overhead()
-    bench_serving()
-    bench_roofline()
+    for name, fn in BENCHES.items():
+        if args.only and name not in args.only:
+            continue
+        fn()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 # Task-parallel applications from the paper's evaluation (§6) plus the
 # programmability-study set (§6.5), each written against the TVM primitives,
-# with hand-coded "native" baselines under apps/baselines/.
+# with hand-coded "native" baselines under apps/baselines/.  Every app
+# registers an engine-ready default case in ``registry`` so benchmarks and
+# equivalence tests drive all workloads through one entry point.
 from . import (  # noqa: F401
     annealing,
     bfs,
@@ -13,3 +15,4 @@ from . import (  # noqa: F401
     treewalk,
     tsp,
 )
+from .registry import AppCase, all_cases, get_case, register_case  # noqa: F401

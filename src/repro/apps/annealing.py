@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 ESCALE = 1  # energies are already integral
 
@@ -86,3 +87,15 @@ def brute_force_min(Q: np.ndarray) -> int:
         )
         best = min(best, int(e))
     return best
+
+
+@register_case("annealing")
+def case() -> AppCase:
+    nb = 6
+    return AppCase(
+        name="annealing",
+        program=make_program(nb, n_steps=20, n_chains=8),
+        initial=initial(),
+        heap_init=dict(Q=random_qubo(nb, seed=5).ravel()),
+        capacity=1 << 10,
+    )

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 INF = np.int32(2**30)
 CHUNK = 8
@@ -94,3 +95,16 @@ def bfs_reference(adj_off, adj, src: int, n: int) -> np.ndarray:
                     nxt.append(u)
         q = nxt
     return dist.astype(np.int32)
+
+
+@register_case("bfs")
+def case() -> AppCase:
+    n = 64
+    adj_off, adj = random_graph(n, avg_degree=4, seed=0)
+    return AppCase(
+        name="bfs",
+        program=make_program(n, len(adj)),
+        initial=initial(0),
+        heap_init=heap_init(adj_off, adj, n),
+        capacity=1 << 14,
+    )

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, MapType, Program, TaskType
+from .registry import AppCase, register_case
 
 
 def make_program(n: int) -> Program:
@@ -98,3 +99,16 @@ def random_input(n: int, seed: int = 0):
 
 def fft_reference(xr: np.ndarray, xi: np.ndarray) -> np.ndarray:
     return np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64))
+
+
+@register_case("fft")
+def case() -> AppCase:
+    n = 32
+    xr, xi = random_input(n, seed=7)
+    return AppCase(
+        name="fft",
+        program=make_program(n),
+        initial=initial(n),
+        heap_init=dict(xr=xr, xi=xi),
+        capacity=1 << 12,
+    )

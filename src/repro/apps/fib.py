@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core.program import InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 
 def _fib(ctx):
@@ -46,3 +47,10 @@ def fib_reference(n: int) -> int:
     for _ in range(n):
         a, b = b, a + b
     return a
+
+
+@register_case("fib")
+def case() -> AppCase:
+    return AppCase(
+        name="fib", program=PROGRAM, initial=initial(12), capacity=1 << 13
+    )

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, MapType, Program, TaskType
+from .registry import AppCase, register_case
 
 
 def make_program(n: int, block: int = 4) -> Program:
@@ -71,4 +72,17 @@ def random_inputs(n: int, seed: int = 0):
     return (
         rng.normal(size=(n, n)).astype(np.float32),
         rng.normal(size=(n, n)).astype(np.float32),
+    )
+
+
+@register_case("matmul")
+def case() -> AppCase:
+    n, block = 8, 4
+    A, B = random_inputs(n, seed=9)
+    return AppCase(
+        name="matmul",
+        program=make_program(n, block=block),
+        initial=initial(n),
+        heap_init=dict(A=A.ravel(), B=B.ravel()),
+        capacity=1 << 12,
     )

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, MapType, Program, TaskType
+from .registry import AppCase, register_case
 
 
 def _rank_in_other(ctx, v, other_lo, half, from_left, log_max):
@@ -132,3 +133,15 @@ def result_buffer(n: int) -> slice:
 
 def random_input(n: int, seed: int = 0) -> np.ndarray:
     return np.random.RandomState(seed).uniform(-1, 1, n).astype(np.float32)
+
+
+@register_case("mergesort")
+def case() -> AppCase:
+    n = 32
+    return AppCase(
+        name="mergesort",
+        program=make_program(n, use_map=True),
+        initial=initial(n),
+        heap_init=dict(inp=random_input(n, seed=5)),
+        capacity=1 << 12,
+    )

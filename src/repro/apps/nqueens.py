@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 SOLUTIONS = {4: 2, 5: 10, 6: 4, 7: 40, 8: 92, 9: 352, 10: 724}
 
@@ -47,3 +48,13 @@ def make_program(n: int) -> Program:
 
 def initial() -> InitialTask:
     return InitialTask(task="place", argi=(0, 0, 0, 0))
+
+
+@register_case("nqueens")
+def case() -> AppCase:
+    return AppCase(
+        name="nqueens",
+        program=make_program(6),
+        initial=initial(),
+        capacity=1 << 13,
+    )

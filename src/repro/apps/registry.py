@@ -1,0 +1,63 @@
+"""Uniform app registry: one runnable case per paper workload.
+
+Every app module registers a :func:`case` — a fully materialized
+(program, initial task, heap init, TV capacity) bundle — so the dispatch A/B
+harness (``benchmarks/run.py --dispatch={masked,compacted}``), the engine
+equivalence tests, and future sharded/async drivers can iterate *all*
+workloads through one entry point instead of re-deriving each app's setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional
+
+from ..core.program import InitialTask, Program
+
+
+@dataclasses.dataclass(frozen=True)
+class AppCase:
+    """One concrete, engine-ready instantiation of a workload."""
+
+    name: str
+    program: Program
+    initial: InitialTask
+    heap_init: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    capacity: int = 1 << 13
+
+    def run(self, engine_cls=None, **engine_kw):
+        """Run this case; defaults to HostEngine with the given kwargs."""
+        from ..core import HostEngine
+
+        cls = engine_cls or HostEngine
+        kw = dict(capacity=self.capacity)
+        kw.update(engine_kw)
+        return cls(self.program, **kw).run(
+            self.initial, heap_init=dict(self.heap_init) or None
+        )
+
+
+CASES: Dict[str, Callable[[], AppCase]] = {}
+
+
+def register_case(name: str):
+    """Register an app module's default benchmark/test case factory."""
+
+    def deco(fn: Callable[[], AppCase]):
+        CASES[name] = fn
+        return fn
+
+    return deco
+
+
+def get_case(name: str) -> AppCase:
+    return CASES[name]()
+
+
+def all_cases() -> Dict[str, AppCase]:
+    """Materialize every registered case (imports all app modules)."""
+    from . import (  # noqa: F401  (registration side effects)
+        annealing, bfs, fft, fib, matmul, mergesort, nqueens, sssp,
+        treewalk, tsp,
+    )
+
+    return {name: fn() for name, fn in sorted(CASES.items())}

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 from .bfs import random_graph  # noqa: F401  (re-exported for benchmarks)
 
 INF_F = np.float32(3.0e38)
@@ -86,3 +87,17 @@ def sssp_reference(adj_off, adj, wgt, src: int, n: int) -> np.ndarray:
                 dist[u] = nd
                 heapq.heappush(pq, (nd, u))
     return dist.astype(np.float32)
+
+
+@register_case("sssp")
+def case() -> AppCase:
+    n = 48
+    adj_off, adj = random_graph(n, avg_degree=4, seed=7)
+    wgt = random_weights(len(adj), seed=2)
+    return AppCase(
+        name="sssp",
+        program=make_program(n, len(adj)),
+        initial=initial(0),
+        heap_init=heap_init(adj_off, adj, wgt, n),
+        capacity=1 << 14,
+    )

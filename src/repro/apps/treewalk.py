@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 
 def make_program(n_nodes: int, order: str = "post") -> Program:
@@ -85,3 +86,16 @@ def random_tree(n_nodes: int, seed: int = 0):
 
 def initial() -> InitialTask:
     return InitialTask(task="walk", argi=(0,))
+
+
+@register_case("treewalk")
+def case() -> AppCase:
+    n = 21
+    left, right = random_tree(n, seed=11)
+    return AppCase(
+        name="treewalk",
+        program=make_program(n, "post"),
+        initial=initial(),
+        heap_init=dict(left=left, right=right),
+        capacity=1 << 10,
+    )

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.program import HeapVar, InitialTask, Program, TaskType
+from .registry import AppCase, register_case
 
 SCALE = 1024
 
@@ -99,3 +100,16 @@ def tsp_reference(dist: np.ndarray) -> int:
         cost += dist[perm[-1], 0]
         best = min(best, int(cost))
     return best
+
+
+@register_case("tsp")
+def case() -> AppCase:
+    n = 6
+    dist = random_instance(n, seed=3)
+    return AppCase(
+        name="tsp",
+        program=make_program(n),
+        initial=initial(),
+        heap_init=heap_init(dist),
+        capacity=1 << 14,
+    )

@@ -1,10 +1,24 @@
 # The paper's primary contribution: the TVM abstract machine and the TREES
 # epoch-synchronized task-parallel runtime, adapted from GPU/OpenCL to
-# TPU/JAX (see DESIGN.md section 2 for the adaptation table).
+# TPU/JAX (see DESIGN.md section 2 for the adaptation table).  The epoch
+# pipeline is layered (DESIGN.md section 1): engines (drivers) over the
+# scheduler (phase-1 policy: stacks, coalescing, dispatch sizing) over the
+# TVM (phase-2/3 execution substrate).
 from .engine import DeviceEngine, EngineError, HostEngine, RunStats
 from .interp import OracleStats, run_oracle
 from .program import HeapVar, InitialTask, MapType, Program, TaskType
 from .analysis import OverheadReport, compare
+from .scheduler import (
+    COMPACTED,
+    MASKED,
+    DispatchPolicy,
+    EpochScheduler,
+    NullStats,
+    RunStatsCollector,
+    StatsCollector,
+    launch_bucket,
+    resolve_policy,
+)
 
 __all__ = [
     "DeviceEngine",
@@ -20,4 +34,13 @@ __all__ = [
     "TaskType",
     "OverheadReport",
     "compare",
+    "COMPACTED",
+    "MASKED",
+    "DispatchPolicy",
+    "EpochScheduler",
+    "NullStats",
+    "RunStatsCollector",
+    "StatsCollector",
+    "launch_bucket",
+    "resolve_policy",
 ]

@@ -1,22 +1,38 @@
 """TREES epoch engines: host-loop (paper-faithful) and on-device.
 
+Both engines are thin drivers over the scheduling layer in ``scheduler.py``:
+the :class:`~repro.core.scheduler.EpochScheduler` owns the join/NDRange
+stacks, same-CEN range coalescing, and launch-bucket sizing (phase 1), and a
+pluggable :class:`~repro.core.scheduler.StatsCollector` owns the V1/V_inf
+accounting.  The engines only own *where* the loop runs.
+
 ``HostEngine`` reproduces the paper's CPU/GPU split: the Python host performs
 epoch phases 1 and 3 (stack bookkeeping, flag readback — the paper's
 ``joinScheduled``/``mapScheduled``/``nextFreeCore`` transfers) and dispatches
-one jitted XLA program per epoch, sized to the popped NDRange padded to a
-power-of-two bucket (the analogue of launching a kernel with that NDRange).
-Every host<->device scalar transfer in the paper has a counterpart here, so
-the paper's critical-path overhead V_inf stays measurable.
+one jitted XLA program per epoch, sized by the dispatch policy.  Every
+host<->device scalar transfer in the paper has a counterpart here, so the
+paper's critical-path overhead V_inf stays measurable.  Two dispatch
+policies:
+
+  * ``masked`` (seed behaviour) — the popped NDRange padded to a
+    power-of-two bucket; every task type executes full-width and masked.
+  * ``compacted`` — the §5.4 contiguity principle: a compaction pass
+    (``kernels.fork_compact.type_rank`` + ``fork_scan``) scatters active
+    lanes into contiguous per-type ranges, and each type launches as one
+    dense lane-exact slice.  Results are bit-identical to ``masked`` (the
+    commit still sees NDRange lane order); only lane utilization and the
+    V_inf dispatch/transfer counts differ — exactly the §5.4 trade.
 
 ``DeviceEngine`` is the beyond-paper variant the paper itself predicts
 ("future chips with tighter CPU/GPU coupling"): the entire epoch loop runs
 on-device inside one ``lax.while_loop`` with the join/NDRange stacks as fixed
-capacity device arrays, eliminating the per-epoch dispatch + transfer from
-the critical path entirely.
+capacity device arrays (``scheduler.device_stacks``), eliminating the
+per-epoch dispatch + transfer from the critical path entirely.  Because every
+launch shape is fixed at trace time, it supports only the ``masked``
+dispatch.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -26,42 +42,28 @@ import numpy as np
 
 from . import tvm
 from .program import InitialTask, Program
-
-
-@dataclasses.dataclass
-class RunStats:
-    """Work/critical-path accounting in the paper's terms (§4.4.1)."""
-
-    epochs: int = 0                 # critical path length T_inf (in epochs)
-    tasks_executed: int = 0         # work T_1 (in tasks)
-    lanes_launched: int = 0         # includes padding/invalid lanes
-    total_forks: int = 0
-    map_launches: int = 0
-    map_elements: int = 0
-    peak_tv_slots: int = 0          # space (paper §4.4.2)
-    dispatches: int = 0             # host->device program launches (V_inf)
-    scalar_transfers: int = 0       # device->host readbacks (V_inf)
-
-    @property
-    def utilization(self) -> float:
-        """Active lanes / launched lanes — the SIMT-divergence analogue."""
-        return self.tasks_executed / max(1, self.lanes_launched)
+from .scheduler import (  # noqa: F401  (RunStats re-exported for back-compat)
+    COMPACTED,
+    MASKED,
+    DispatchPolicy,
+    EpochScheduler,
+    NullStats,
+    RunStats,
+    RunStatsCollector,
+    StatsCollector,
+    device_push,
+    device_stacks,
+    launch_bucket,
+    resolve_policy,
+)
 
 
 class EngineError(RuntimeError):
     pass
 
 
-def _bucket(n: int, minimum: int = 8) -> int:
-    """Round the NDRange up to a power-of-two launch bucket."""
-    p = minimum
-    while p < n:
-        p *= 2
-    return p
-
-
 def _build_epoch_step(program: Program, fork_offsets_fn=None):
-    """Shared phase-2+3 step; specialized by jit on the lane count P."""
+    """Shared masked phase-2+3 step; specialized by jit on the lane count P."""
 
     def step(state: tvm.TVMState, heap, start, count, cen, P: int):
         idx = start + jnp.arange(P, dtype=jnp.int32)
@@ -77,6 +79,12 @@ def _build_epoch_step(program: Program, fork_offsets_fn=None):
     return step
 
 
+def _default_rank_fn(types, active, n_types):
+    from ..kernels import ops as kops
+
+    return kops.type_rank(types, active, n_types)
+
+
 class HostEngine:
     """Paper-faithful engine: host drives stacks, device runs bulk epochs."""
 
@@ -87,16 +95,31 @@ class HostEngine:
         collect_stats: bool = True,
         fork_offsets_fn: Optional[Callable] = None,
         donate: bool = False,
+        dispatch: Any = MASKED,
+        coalesce: bool = True,
+        rank_fn: Optional[Callable] = None,
+        stats_factory: Optional[Callable[[], StatsCollector]] = None,
     ):
         self.program = program
         self.capacity = capacity
         self.collect_stats = collect_stats
+        self.policy: DispatchPolicy = resolve_policy(dispatch)
+        self.coalesce = coalesce
+        self._fork_offsets_fn = fork_offsets_fn
+        self._rank_fn = rank_fn or _default_rank_fn
+        self._stats_factory = stats_factory
         self._raw_step = _build_epoch_step(program, fork_offsets_fn)
-        self._step_cache: Dict[int, Any] = {}
+        self._step_cache: Dict[Any, Any] = {}
+        self._compact_cache: Dict[int, Any] = {}
         self._map_cache: Dict[Tuple[int, int, int], Any] = {}
         self._donate = donate
 
     # ------------------------------------------------------------- steps
+    def _collector(self) -> StatsCollector:
+        if self._stats_factory is not None:
+            return self._stats_factory()
+        return RunStatsCollector() if self.collect_stats else NullStats()
+
     def _get_step(self, P: int):
         if P not in self._step_cache:
             fn = functools.partial(self._raw_step, P=P)
@@ -104,6 +127,53 @@ class HostEngine:
                 fn, donate_argnums=(0, 1) if self._donate else ()
             )
         return self._step_cache[P]
+
+    def _get_compact(self, P: int):
+        """Compaction pass: types -> (perm, per-type counts), one dispatch."""
+        if P not in self._compact_cache:
+            program, rank_fn = self.program, self._rank_fn
+            offsets_fn = self._fork_offsets_fn
+
+            def cfn(state, start, count, cen):
+                idx = start + jnp.arange(P, dtype=jnp.int32)
+                in_range = jnp.arange(P, dtype=jnp.int32) < count
+                cidx = jnp.clip(idx, 0, state.capacity - 1)
+                active = in_range & (state.epoch[cidx] == cen)
+                return tvm.compact_types(
+                    program, state, idx, active,
+                    rank_fn=rank_fn, offsets_fn=offsets_fn,
+                )
+
+            self._compact_cache[P] = jax.jit(cfn)
+        return self._compact_cache[P]
+
+    _MAX_STEP_CACHE = 256  # distinct (P, buckets) jit specializations kept
+
+    def _get_compacted_step(self, P: int, buckets: Tuple[int, ...]):
+        key = (P, buckets)
+        if key not in self._step_cache:
+            # Bucket combinations on k-type programs can be numerous; bound
+            # the cache (FIFO eviction — evicted shapes just recompile) so a
+            # long-running engine cannot grow it without limit.
+            while len(self._step_cache) >= self._MAX_STEP_CACHE:
+                self._step_cache.pop(next(iter(self._step_cache)))
+            program = self.program
+            fork_offsets_fn = self._fork_offsets_fn
+
+            def step(state, heap, start, count, cen, perm, toffs, tcounts):
+                per_type, idx, active = tvm.trace_tasks_compacted(
+                    program, state, heap, start, count, cen,
+                    perm, toffs, tcounts, buckets,
+                )
+                return tvm.commit_epoch(
+                    program, state, heap, idx, active, per_type, cen,
+                    fork_offsets_fn=fork_offsets_fn,
+                )
+
+            self._step_cache[key] = jax.jit(
+                step, donate_argnums=(0, 1) if self._donate else ()
+            )
+        return self._step_cache[key]
 
     def _get_map_step(self, mid: int, P: int, D: int):
         key = (mid, P, D)
@@ -134,22 +204,56 @@ class HostEngine:
         state = tvm.init_state(program, self.capacity, initial)
         heap = program.init_heap(**(heap_init or {}))
         # phase-1 state owned by the CPU, exactly as in the paper (§5.2.2)
-        join_stack = [1]
-        range_stack = [(0, 1)]
-        next_free_host = 1
-        stats = RunStats()
+        sched = EpochScheduler(coalesce=self.coalesce)
+        sched.reset()
+        col = self._collector()
+        task_names = [t.name for t in program.tasks]
+        compacted = self.policy.name == "compacted"
+        n_epochs = 0  # loop guard lives here, not in the pluggable collector
 
-        while join_stack:
-            if stats.epochs >= max_epochs:
+        while sched:
+            if n_epochs >= max_epochs:
                 raise EngineError(f"exceeded max_epochs={max_epochs}")
-            cen = join_stack.pop()
-            start, count = range_stack.pop()
-            P = _bucket(count)
-            step = self._get_step(P)
-            state, heap, summary, map_launches = step(
-                state, heap, jnp.asarray(start, jnp.int32),
-                jnp.asarray(count, jnp.int32), jnp.asarray(cen, jnp.int32),
-            )
+            n_epochs += 1
+            d = sched.pop()
+            cen, start, count = d.cen, d.start, d.count
+            P = self.policy.epoch_bucket(count)
+            start_j = jnp.asarray(start, jnp.int32)
+            count_j = jnp.asarray(count, jnp.int32)
+            cen_j = jnp.asarray(cen, jnp.int32)
+            by_type = None
+            if compacted:
+                # compaction pass + per-type-count readback (§5.4's extra
+                # V_inf dispatch/transfer, paid to make phase 2 lane-exact)
+                perm, counts_dev = self._get_compact(P)(
+                    state, start_j, count_j, cen_j
+                )
+                counts = np.asarray(jax.device_get(counts_dev), np.int64)
+                col.dispatch()
+                col.transfer()
+                buckets = tuple(
+                    self.policy.type_bucket(int(c)) for c in counts
+                )
+                toffs = np.zeros_like(counts)
+                toffs[1:] = np.cumsum(counts)[:-1]
+                step = self._get_compacted_step(P, buckets)
+                state, heap, summary, map_launches = step(
+                    state, heap, start_j, count_j, cen_j, perm,
+                    jnp.asarray(toffs, jnp.int32),
+                    jnp.asarray(counts, jnp.int32),
+                )
+                launched = int(sum(buckets))
+                by_type = {
+                    task_names[t]: (int(counts[t]), buckets[t])
+                    for t in range(len(buckets))
+                    if buckets[t] > 0
+                }
+            else:
+                step = self._get_step(P)
+                state, heap, summary, map_launches = step(
+                    state, heap, start_j, count_j, cen_j
+                )
+                launched = P
             # the paper's end-of-epoch readback: nextFreeCore, joinScheduled,
             # mapScheduled (§5.2.4) (+ stats counters when enabled)
             total_forks, join_sched, map_sched, n_active, overflow, nf = (
@@ -164,45 +268,49 @@ class HostEngine:
                     )
                 )
             )
-            stats.dispatches += 1
-            stats.scalar_transfers += 1
+            col.dispatch()
+            col.transfer()
             if overflow:
                 raise EngineError(
                     f"task vector overflow: capacity={self.capacity}"
                 )
             if join_sched:
-                join_stack.append(cen)
-                range_stack.append((start, count))
-            if total_forks > 0:
-                join_stack.append(cen + 1)
-                range_stack.append((int(nf) - int(total_forks), int(total_forks)))
-            next_free_host = int(nf)
+                sched.push_join(cen, start, count)
+            sched.push_forked(
+                cen + 1, int(nf) - int(total_forks), int(total_forks)
+            )
 
             if map_sched:
-                for ml in map_launches:
-                    where = np.asarray(jax.device_get(ml.where))
-                    if not where.any():
-                        continue
-                    argi = np.asarray(jax.device_get(ml.argi))
-                    dom = np.asarray(self.program.maps[ml.map_id].domain(argi))
-                    D = _bucket(int(dom[where].max()), minimum=8)
-                    mstep = self._get_map_step(ml.map_id, int(where.shape[0]), D)
-                    heap = mstep(heap, ml.where, ml.argi, ml.argf)
-                    stats.map_launches += 1
-                    stats.dispatches += 1
-                    if self.collect_stats:
-                        stats.map_elements += int(dom[where].sum())
+                heap = self._run_maps(map_launches, heap, col)
 
-            if self.collect_stats:
-                stats.epochs += 1
-                stats.tasks_executed += int(n_active)
-                stats.lanes_launched += P
-                stats.total_forks += int(total_forks)
-                stats.peak_tv_slots = max(stats.peak_tv_slots, next_free_host)
-            else:
-                stats.epochs += 1
+            col.epoch(cen, d.n_ranges)
+            col.lanes(int(n_active), launched, by_type)
+            col.forks(int(total_forks))
+            col.tv_peak(int(nf))
 
-        return heap, state.value, stats
+        return heap, state.value, col.result()
+
+    def _run_maps(self, map_launches, heap, col: StatsCollector):
+        """Launch each scheduled map payload, sized to its live domain."""
+        for ml in map_launches:
+            where = np.asarray(jax.device_get(ml.where))
+            if not where.any():
+                continue
+            argi = np.asarray(jax.device_get(ml.argi))
+            dom = np.asarray(self.program.maps[ml.map_id].domain(argi))
+            dmax = int(dom[where].max()) if dom[where].size else 0
+            if dmax <= 0:
+                # every scheduled lane has an empty element domain: a launch
+                # would dispatch a wasted payload (launch_bucket(0) lanes)
+                continue
+            D = launch_bucket(dmax, minimum=8)
+            mstep = self._get_map_step(ml.map_id, int(where.shape[0]), D)
+            heap = mstep(heap, ml.where, ml.argi, ml.argf)
+            col.dispatch()
+            # what to record is the collector's decision (NullStats ignores
+            # the element count), not an engine-level flag's
+            col.map_launch(int(dom[where].sum()))
+        return heap
 
 
 class DeviceEngine:
@@ -210,8 +318,9 @@ class DeviceEngine:
 
     Beyond-paper optimization (the paper's "tighter coupling" prediction):
     zero per-epoch dispatches/transfers on the critical path.  Constraints:
-    fixed TV capacity processed every epoch (no NDRange bucketing) and map
-    payloads sized by ``MapType.max_domain``.
+    fixed TV capacity processed every epoch (no NDRange bucketing — so only
+    the ``masked`` dispatch policy is traceable) and map payloads sized by
+    ``MapType.max_domain``.
     """
 
     def __init__(
@@ -220,10 +329,19 @@ class DeviceEngine:
         capacity: int = 1 << 12,
         stack_depth: int = 1 << 10,
         fork_offsets_fn: Optional[Callable] = None,
+        dispatch: Any = MASKED,
     ):
         self.program = program
         self.capacity = capacity
         self.stack_depth = stack_depth
+        self.policy = resolve_policy(dispatch)
+        if self.policy.name != "masked":
+            raise ValueError(
+                "DeviceEngine supports only the 'masked' dispatch: the "
+                "on-device while_loop needs launch shapes fixed at trace "
+                "time, but 'compacted' sizes per-type launches from runtime "
+                "populations (use HostEngine for compacted dispatch)"
+            )
         self._raw_step = _build_epoch_step(program, fork_offsets_fn)
         self._compiled = None
 
@@ -237,23 +355,13 @@ class DeviceEngine:
             state, heap, start, count, cen, P=self.capacity
         )
         # push join range back, then the forked range (LIFO order, §4.3.3)
-        def push(jstack, rstack, sp, e, s, c, pred):
-            ssp = jnp.clip(sp, 0, self.stack_depth - 1)
-            jstack = jnp.where(
-                pred, jstack.at[ssp].set(e), jstack
-            )
-            rstack = jnp.where(
-                pred, rstack.at[ssp].set(jnp.stack([s, c])), rstack
-            )
-            return jstack, rstack, sp + pred.astype(jnp.int32)
-
-        jstack, rstack, sp = push(
-            jstack, rstack, sp, cen, start, count, summary.join_scheduled
+        jstack, rstack, sp = device_push(
+            jstack, rstack, sp, cen, start, count,
+            summary.join_scheduled, self.stack_depth,
         )
-        forked = summary.total_forks > 0
-        jstack, rstack, sp = push(
+        jstack, rstack, sp = device_push(
             jstack, rstack, sp, cen + 1, old_next_free, summary.total_forks,
-            forked,
+            summary.total_forks > 0, self.stack_depth,
         )
         for ml in map_launches:
             mt = self.program.maps[ml.map_id]
@@ -282,11 +390,7 @@ class DeviceEngine:
         program = self.program
         state = tvm.init_state(program, self.capacity, initial)
         heap = program.init_heap(**(heap_init or {}))
-        jstack = jnp.zeros((self.stack_depth,), jnp.int32).at[0].set(1)
-        rstack = (
-            jnp.zeros((self.stack_depth, 2), jnp.int32)
-            .at[0].set(jnp.asarray([0, 1], jnp.int32))
-        )
+        jstack, rstack = device_stacks(self.stack_depth)
 
         def cond(carry):
             (_, _, _, _, sp, n_epochs, err) = carry

@@ -1,0 +1,287 @@
+"""Epoch scheduling layer: phase-1 policy above the TVM execution substrate.
+
+The paper fuses three concerns into each engine: (a) the join/NDRange stacks
+that decide *which* epoch number runs next (§4.3.3), (b) how many lanes the
+epoch's kernel launch covers (§5.2.2's NDRange sizing), and (c) how tasks are
+laid out inside that launch (§5.4's contiguity principle).  Atos-style
+designs show these are a *policy* layer that should be pluggable above the
+execution substrate, so this module owns all three:
+
+  * :class:`EpochScheduler` — the host-side join/NDRange stacks with
+    same-CEN range coalescing: every range sitting at the current epoch
+    number is merged into one dispatch, so the critical-path overhead
+    (launch + readback, the V_inf terms) is paid once for the whole system —
+    the paper's "work-together" point (a) of §3.
+  * :class:`DispatchPolicy` — launch-bucket sizing.  ``masked`` reproduces
+    the seed engine: the popped NDRange padded to a power-of-two bucket,
+    every task type executed full-width and masked.  ``compacted`` is the
+    §5.4 contiguity principle: active lanes are scattered into dense
+    per-type ranges (``kernels.fork_compact.type_rank`` + ``fork_scan``) and
+    each type launches as one dense slice sized to its own population.
+  * ``device_stacks`` / ``device_push`` — the same stack discipline as
+    fixed-capacity device arrays for the on-device engine's
+    ``lax.while_loop`` (GTaP-style fully resident dispatch).
+  * :class:`StatsCollector` — pluggable work/critical-path accounting
+    (:class:`RunStats`), including per-type occupancy for the compacted
+    dispatch, consumed by ``benchmarks/run.py`` and ``benchmarks/roofline.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Launch-bucket sizing (dispatch policy)
+# --------------------------------------------------------------------------
+def launch_bucket(n: int, minimum: int = 8) -> int:
+    """Round a launch size up to a power-of-two bucket (jit-cache friendly)."""
+    p = max(1, minimum)
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """How phase 2 lays tasks into lanes and sizes the launch.
+
+    ``epoch_min_bucket`` sizes the full-NDRange launch (and the compaction
+    pass itself); ``type_min_bucket`` sizes each dense per-type slice under
+    the compacted dispatch.  Compacted slices use minimum 1 because their
+    whole point is lane-exact launches.
+    """
+
+    name: str
+    epoch_min_bucket: int = 8
+    type_min_bucket: int = 1
+
+    def epoch_bucket(self, count: int) -> int:
+        return launch_bucket(count, self.epoch_min_bucket)
+
+    def type_bucket(self, count: int) -> int:
+        if count <= 0:
+            return 0
+        return launch_bucket(count, self.type_min_bucket)
+
+
+MASKED = DispatchPolicy("masked")
+COMPACTED = DispatchPolicy("compacted")
+_POLICIES = {p.name: p for p in (MASKED, COMPACTED)}
+
+
+def resolve_policy(dispatch) -> DispatchPolicy:
+    if isinstance(dispatch, DispatchPolicy):
+        return dispatch
+    try:
+        return _POLICIES[dispatch]
+    except KeyError:
+        raise ValueError(
+            f"unknown dispatch policy {dispatch!r}; "
+            f"expected one of {sorted(_POLICIES)}"
+        ) from None
+
+
+# --------------------------------------------------------------------------
+# Host-side epoch scheduler (paper phase 1, §5.2.2)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EpochDispatch:
+    """One popped unit of work: every range at epoch number ``cen``."""
+
+    cen: int
+    start: int
+    count: int
+    n_ranges: int = 1  # how many stack ranges were coalesced into this span
+
+
+class EpochScheduler:
+    """Owns the join/NDRange stacks the paper keeps on the CPU (§5.2.2).
+
+    LIFO pop order gives the paper's depth-first epoch order.  With
+    ``coalesce=True`` a pop also drains every other stack entry carrying the
+    same epoch number and merges the ranges into one covering span — holes
+    between ranges hold lanes with different epoch numbers and are filtered
+    by the epoch-number (TMS) check, so the merged dispatch is always
+    semantically identical, it just pays phase 1+3 once for the whole system.
+    """
+
+    def __init__(self, coalesce: bool = True):
+        self.coalesce = coalesce
+        self._join: List[int] = []
+        self._range: List[Tuple[int, int]] = []
+
+    def reset(self, cen: int = 1, start: int = 0, count: int = 1) -> None:
+        """Seed task in slot 0, eligible in the first epoch (paper §4.3)."""
+        self._join = [cen]
+        self._range = [(start, count)]
+
+    def __bool__(self) -> bool:
+        return bool(self._join)
+
+    def __len__(self) -> int:
+        return len(self._join)
+
+    def pop(self) -> EpochDispatch:
+        cen = self._join.pop()
+        start, count = self._range.pop()
+        lo, hi, n = start, start + count, 1
+        if self.coalesce:
+            while self._join and self._join[-1] == cen:
+                self._join.pop()
+                s, c = self._range.pop()
+                lo, hi, n = min(lo, s), max(hi, s + c), n + 1
+        return EpochDispatch(cen=cen, start=lo, count=hi - lo, n_ranges=n)
+
+    def push_join(self, cen: int, start: int, count: int) -> None:
+        """Re-arm the current range: a join continuation runs at the same CEN."""
+        self._join.append(cen)
+        self._range.append((start, count))
+
+    def push_forked(self, cen: int, base: int, count: int) -> None:
+        """Schedule this epoch's forked children (eligible at CEN+1)."""
+        if count > 0:
+            self._join.append(cen)
+            self._range.append((base, count))
+
+
+# --------------------------------------------------------------------------
+# Device-side stacks (the same discipline inside one lax.while_loop)
+# --------------------------------------------------------------------------
+def device_stacks(depth: int, cen: int = 1, start: int = 0, count: int = 1):
+    """Fixed-capacity join/NDRange stacks as device arrays, seeded like
+    :meth:`EpochScheduler.reset`; the stack pointer starts at 1."""
+    jstack = jnp.zeros((depth,), jnp.int32).at[0].set(cen)
+    rstack = (
+        jnp.zeros((depth, 2), jnp.int32)
+        .at[0]
+        .set(jnp.asarray([start, count], jnp.int32))
+    )
+    return jstack, rstack
+
+
+def device_push(jstack, rstack, sp, cen, start, count, pred, depth: int):
+    """Conditionally push one (cen, range) entry; traced, race-free."""
+    ssp = jnp.clip(sp, 0, depth - 1)
+    jstack = jnp.where(pred, jstack.at[ssp].set(cen), jstack)
+    rstack = jnp.where(
+        pred, rstack.at[ssp].set(jnp.stack([start, count])), rstack
+    )
+    return jstack, rstack, sp + pred.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Stats: work / critical-path accounting (paper §4.4.1)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunStats:
+    """Work/critical-path accounting in the paper's terms (§4.4.1)."""
+
+    epochs: int = 0                 # critical path length T_inf (in epochs)
+    tasks_executed: int = 0         # work T_1 (in tasks)
+    lanes_launched: int = 0         # includes padding/invalid lanes
+    total_forks: int = 0
+    map_launches: int = 0
+    map_elements: int = 0
+    peak_tv_slots: int = 0          # space (paper §4.4.2)
+    dispatches: int = 0             # host->device program launches (V_inf)
+    scalar_transfers: int = 0       # device->host readbacks (V_inf)
+    ranges_coalesced: int = 0       # extra same-CEN ranges merged into pops
+    tasks_by_type: Dict[str, int] = dataclasses.field(default_factory=dict)
+    lanes_by_type: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def utilization(self) -> float:
+        """Active lanes / launched lanes — the SIMT-divergence analogue."""
+        return self.tasks_executed / max(1, self.lanes_launched)
+
+    @property
+    def occupancy_by_type(self) -> Dict[str, float]:
+        """Per-type active/launched lanes (known under compacted dispatch)."""
+        return {
+            t: self.tasks_by_type.get(t, 0) / max(1, lanes)
+            for t, lanes in self.lanes_by_type.items()
+        }
+
+
+class StatsCollector:
+    """No-op base; engines call these hooks, collectors interpret them."""
+
+    def epoch(self, cen: int, n_ranges: int = 1) -> None:
+        pass
+
+    def lanes(self, n_active: int, launched: int,
+              by_type: Optional[Dict[str, Tuple[int, int]]] = None) -> None:
+        pass
+
+    def dispatch(self, n: int = 1) -> None:
+        pass
+
+    def transfer(self, n: int = 1) -> None:
+        pass
+
+    def forks(self, n: int) -> None:
+        pass
+
+    def map_launch(self, elements: int = 0) -> None:
+        pass
+
+    def tv_peak(self, slots: int) -> None:
+        pass
+
+    def result(self) -> RunStats:
+        return RunStats()
+
+
+class NullStats(StatsCollector):
+    """Counts only what the driver needs for control plus the V_inf terms
+    (epochs, dispatches, transfers, map launches) — no per-lane accounting."""
+
+    def __init__(self):
+        self._stats = RunStats()
+
+    def epoch(self, cen: int, n_ranges: int = 1) -> None:
+        self._stats.epochs += 1
+
+    def dispatch(self, n: int = 1) -> None:
+        self._stats.dispatches += n
+
+    def transfer(self, n: int = 1) -> None:
+        self._stats.scalar_transfers += n
+
+    def map_launch(self, elements: int = 0) -> None:
+        self._stats.map_launches += 1
+
+    def result(self) -> RunStats:
+        return self._stats
+
+
+class RunStatsCollector(NullStats):
+    """Full accounting, including per-type occupancy when the dispatch
+    policy knows per-type populations (compacted)."""
+
+    def lanes(self, n_active: int, launched: int,
+              by_type: Optional[Dict[str, Tuple[int, int]]] = None) -> None:
+        s = self._stats
+        s.tasks_executed += n_active
+        s.lanes_launched += launched
+        if by_type:
+            for name, (active, lanes) in by_type.items():
+                s.tasks_by_type[name] = s.tasks_by_type.get(name, 0) + active
+                s.lanes_by_type[name] = s.lanes_by_type.get(name, 0) + lanes
+
+    def epoch(self, cen: int, n_ranges: int = 1) -> None:
+        super().epoch(cen, n_ranges)
+        self._stats.ranges_coalesced += n_ranges - 1
+
+    def forks(self, n: int) -> None:
+        self._stats.total_forks += n
+
+    def map_launch(self, elements: int = 0) -> None:
+        super().map_launch(elements)
+        self._stats.map_elements += elements
+
+    def tv_peak(self, slots: int) -> None:
+        self._stats.peak_tv_slots = max(self._stats.peak_tv_slots, slots)

@@ -111,6 +111,17 @@ jax.tree_util.register_dataclass(
 )
 
 
+def _make_lane_fn(program: Program, ttype, heap, values):
+    """Per-lane task body -> fixed effects pytree (shared by both dispatches)."""
+
+    def lane_fn(ai, af, cb, cc, slot, _fn=ttype.fn):
+        ctx = EpochCtx(program, ai, af, cb, cc, slot, heap, values)
+        _fn(ctx)
+        return _effects_pytree(program, ctx)
+
+    return lane_fn
+
+
 def trace_tasks(
     program: Program,
     state: TVMState,
@@ -140,11 +151,7 @@ def trace_tasks(
 
     per_type = []
     for tid, ttype in enumerate(program.tasks):
-        def lane_fn(ai, af, cb, cc, slot, _fn=ttype.fn):
-            ctx = EpochCtx(program, ai, af, cb, cc, slot, heap, state.value)
-            _fn(ctx)
-            return _effects_pytree(program, ctx)
-
+        lane_fn = _make_lane_fn(program, ttype, heap, state.value)
         mask_t = active & (g_task == tid)
 
         def run_type(_):
@@ -162,6 +169,124 @@ def trace_tasks(
             eff = run_type(0)
         per_type.append((mask_t, eff))
     return per_type, cidx
+
+
+def compact_types(
+    program: Program,
+    state: TVMState,
+    idx: jnp.ndarray,
+    active: jnp.ndarray,
+    rank_fn: Optional[Callable] = None,
+    offsets_fn: Optional[Callable] = None,
+):
+    """Compaction stage: scatter active lanes into contiguous per-type ranges.
+
+    The §5.4 contiguity principle as a pipeline stage: each active lane gets
+    a destination ``dest = type_start[type] + rank`` where ``rank`` is its
+    stable within-type rank (``kernels.fork_compact.type_rank``) and
+    ``type_start`` is the exclusive prefix sum of the per-type populations
+    (``fork_scan`` — the same primitive that allocates fork slots).  The
+    resulting permutation groups same-type tasks into dense ranges, so phase
+    2 can execute each type as one coherent lane-exact launch instead of a
+    full-width masked vmap.
+
+    Returns ``(perm, counts)``:
+      * ``perm`` i32[P] — ``perm[d]`` is the *lane position* (offset within
+        the epoch's NDRange) of the d-th compacted lane; -1 beyond the
+        active population.
+      * ``counts`` i32[n_types] — per-type active populations; the host
+        reads these back to size the per-type launch buckets (one extra
+        V_inf transfer, the §5.4 trade).
+    """
+    P = idx.shape[0]
+    n_types = len(program.tasks)
+    cidx = jnp.clip(idx, 0, state.capacity - 1)
+    types = state.task[cidx]
+    if rank_fn is None:
+        from ..kernels import ref as _kref
+
+        rank, counts = _kref.type_rank_ref(types, active, n_types)
+    else:
+        rank, counts = rank_fn(types, active, n_types)
+    if offsets_fn is None:
+        type_start = _exclusive_cumsum(counts)
+    else:
+        type_start, _ = offsets_fn(counts)
+    dest = type_start[jnp.clip(types, 0, n_types - 1)] + rank
+    drop = jnp.asarray(P, jnp.int32)
+    perm = (
+        jnp.full((P,), -1, jnp.int32)
+        .at[jnp.where(active, dest, drop)]
+        .set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    )
+    return perm, counts.astype(jnp.int32)
+
+
+def trace_tasks_compacted(
+    program: Program,
+    state: TVMState,
+    heap: Dict[str, jnp.ndarray],
+    start: jnp.ndarray,
+    count: jnp.ndarray,
+    cen: jnp.ndarray,
+    perm: jnp.ndarray,
+    type_offsets: jnp.ndarray,
+    type_counts: jnp.ndarray,
+    buckets: Tuple[int, ...],
+):
+    """Phase 2 under the compacted dispatch: dense per-type slices.
+
+    Each task type with a nonzero launch bucket runs over a
+    ``lax.dynamic_slice`` of the compaction permutation — a contiguous range
+    holding only its own lanes — instead of the full padded NDRange.  Lane
+    utilization approaches 1 on heterogeneous epochs; types with zero active
+    lanes launch nothing at all.
+
+    The per-lane effects (computed at bucket width ``buckets[tid]``) are
+    scattered back to full NDRange lane positions so that
+    :func:`commit_epoch` observes exactly the same per-lane layout as the
+    masked dispatch — fork allocation order, and therefore every result, is
+    bit-identical between the two dispatches.
+
+    Returns ``(per_type, idx, active)`` compatible with :func:`commit_epoch`.
+    """
+    P = perm.shape[0]
+    C = state.capacity
+    idx = start + jnp.arange(P, dtype=jnp.int32)
+    in_range = jnp.arange(P, dtype=jnp.int32) < count
+    cidx = jnp.clip(idx, 0, C - 1)
+    active = in_range & (state.epoch[cidx] == cen)
+    g_task = state.task[cidx]
+
+    pad = max(buckets) if buckets else 1
+    perm_p = jnp.pad(perm, (0, max(pad, 1)), constant_values=-1)
+
+    per_type = []
+    for tid, ttype in enumerate(program.tasks):
+        B = buckets[tid] if tid < len(buckets) else 0
+        if B <= 0:
+            continue  # no active lanes of this type: no launch at all
+        mask_t = active & (g_task == tid)
+        ts = type_offsets[tid]
+        lanepos = jax.lax.dynamic_slice(perm_p, (ts,), (B,))
+        within = jnp.arange(B, dtype=jnp.int32) < type_counts[tid]
+        valid = within & (lanepos >= 0)
+        src = jnp.clip(start + lanepos, 0, C - 1)
+        lane_fn = _make_lane_fn(program, ttype, heap, state.value)
+        eff_small = jax.vmap(lane_fn)(
+            state.argi[src], state.argf[src],
+            state.child_base[src], state.child_count[src], src,
+        )
+        # scatter effects back to NDRange lane positions for the shared commit
+        pos = jnp.where(valid, lanepos, P)
+
+        def scatter(leaf, _pos=pos):
+            out = jnp.zeros((P,) + leaf.shape[1:], leaf.dtype)
+            return out.at[_pos].set(leaf, mode="drop")
+
+        eff = jax.tree.map(scatter, eff_small)
+        per_type.append((mask_t, eff))
+    return per_type, idx, active
 
 
 def _effects_pytree(program: Program, ctx: EpochCtx):

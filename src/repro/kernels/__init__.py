@@ -2,4 +2,4 @@
 # flash/decode attention, Mamba-2 SSD scan), each with a pure-jnp oracle in
 # ref.py and a dispatching wrapper in ops.py.
 from . import ops, ref  # noqa: F401
-from .ops import attention, fork_offsets, gqa_decode, ssd  # noqa: F401
+from .ops import attention, fork_offsets, gqa_decode, ssd, type_rank  # noqa: F401

@@ -19,6 +19,7 @@ from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import mha_flash as _flash_pallas
 from .fork_compact import fork_scan as _fork_scan_pallas
+from .fork_compact import type_rank as _type_rank_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
 
@@ -36,6 +37,23 @@ def fork_offsets(counts: jnp.ndarray, impl: str = "auto"):
     if impl == "ref":
         return ref.fork_scan_ref(counts)
     return _fork_scan_pallas(counts, interpret=(impl == "interpret"))
+
+
+def type_rank(
+    types: jnp.ndarray, active: jnp.ndarray, n_types: int, impl: str = "auto"
+):
+    """Stable within-type rank of each active lane + per-type counts.
+
+    The engine's type-compaction stage (§5.4 contiguity): ``dest =
+    type_start[type] + rank`` scatters same-type tasks into dense ranges so
+    each type executes as one coherent launch.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.type_rank_ref(types, active, n_types)
+    return _type_rank_pallas(
+        types, active, n_types, interpret=(impl == "interpret")
+    )
 
 
 def attention(

@@ -1,0 +1,97 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (dev-only fallback).
+
+The real dependency lives in ``requirements-dev.txt``; this stub exists so
+the tier-1 suite *collects and runs everywhere*, including hermetic
+containers where nothing can be pip-installed.  It implements just the
+surface this repo's property tests use — ``given`` (positional + keyword
+strategies), ``settings(max_examples=, deadline=)``, ``strategies.integers``
+and ``strategies.lists`` — drawing a fixed number of pseudo-random examples
+from a seeded PRNG.  No shrinking, no database: deterministic smoke coverage
+rather than true property search.  ``tests/conftest.py`` installs it into
+``sys.modules`` only when the real hypothesis is missing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(e.draw(rnd) for e in elements))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rnd: rnd.choice(options))
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Decorator recording max_examples on the (already-wrapped) test fn."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test body over N deterministic draws of the strategies."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(0xC0FFEE)
+            n = getattr(wrapper, "_stub_max_examples", 10)
+            for _ in range(n):
+                drawn = [s.draw(rnd) for s in pos_strategies]
+                drawn_kw = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # hide strategy-supplied parameters from pytest's fixture resolution:
+        # positional strategies fill the leading params, keyword strategies
+        # fill by name; whatever remains (e.g. real fixtures) stays visible
+        params = list(inspect.signature(fn).parameters.values())
+        remaining = [
+            p for p in params[len(pos_strategies):]
+            if p.name not in kw_strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.lists = lists
+strategies.booleans = booleans
+strategies.tuples = tuples
+strategies.sampled_from = sampled_from
+
+HealthCheck = types.SimpleNamespace(too_slow="too_slow", filter_too_much="filter_too_much")

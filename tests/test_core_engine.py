@@ -20,11 +20,12 @@ from repro.core import (
 )
 
 
+@pytest.mark.parametrize("dispatch", ["masked", "compacted"])
 @pytest.mark.parametrize("n,expect", [(0, 0), (1, 1), (2, 1), (10, 55), (14, 377)])
-def test_fib_host(n, expect):
-    heap, values, stats = HostEngine(fib.PROGRAM, capacity=1 << 12).run(
-        fib.initial(n)
-    )
+def test_fib_host(n, expect, dispatch):
+    heap, values, stats = HostEngine(
+        fib.PROGRAM, capacity=1 << 12, dispatch=dispatch
+    ).run(fib.initial(n))
     assert int(values[0, 0]) == expect
     # critical path = one epoch per level down + one per join level up
     assert stats.epochs == (2 * n - 1 if n >= 2 else 1)
@@ -139,6 +140,23 @@ def test_random_dag_engine_matches_oracle(seed, max_depth, fanout_mod):
     assert int(v_e[0, 0]) == int(v_o[0, 0])
     assert se.epochs == so.epochs
     assert se.tasks_executed == so.tasks_executed
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**15 - 1))
+def test_random_dag_compacted_matches_oracle(seed):
+    """Type-compacted dispatch on heterogeneous (node+gather) epochs must
+    stay bit-identical to the sequential oracle."""
+    prog = _make_random_dag_program(3, 3)
+    init = InitialTask(task="node", argi=(0, seed))
+    heap_o, v_o, so = run_oracle(prog, init, capacity=1 << 12)
+    heap_c, v_c, sc = HostEngine(
+        prog, capacity=1 << 12, dispatch="compacted"
+    ).run(init)
+    np.testing.assert_array_equal(np.asarray(heap_c["touch"]), heap_o["touch"])
+    assert int(v_c[0, 0]) == int(v_o[0, 0])
+    assert sc.epochs == so.epochs
+    assert sc.tasks_executed == so.tasks_executed
 
 
 @settings(max_examples=4, deadline=None)

@@ -7,6 +7,11 @@ import sys
 
 import pytest
 
+from conftest import multidevice_skip
+
+_SKIP, _REASON = multidevice_skip(required=4)
+pytestmark = pytest.mark.skipif(_SKIP, reason=_REASON)
+
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 

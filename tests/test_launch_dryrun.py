@@ -5,6 +5,10 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
+from conftest import multidevice_skip
+
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 
@@ -75,6 +79,10 @@ def test_loop_calibration_math():
     assert trips["ssd"]["eff"] == 12
 
 
+_SKIP, _REASON = multidevice_skip(required=8)
+
+
+@pytest.mark.skipif(_SKIP, reason=_REASON)
 def test_small_mesh_cell_lowers():
     """End-to-end: a reduced config lowers+compiles on a 2x4 mesh with the
     same code paths as the production dry-run (subprocess, 8 devices)."""

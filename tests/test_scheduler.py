@@ -1,0 +1,222 @@
+"""Scheduler-layer tests: EpochScheduler stack discipline + coalescing,
+dispatch policies, masked vs compacted equivalence across every registered
+app case, and the pluggable stats collectors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import all_cases, fib, get_case
+from repro.core import (
+    COMPACTED,
+    DeviceEngine,
+    EpochScheduler,
+    HeapVar,
+    HostEngine,
+    InitialTask,
+    MapType,
+    MASKED,
+    NullStats,
+    Program,
+    RunStatsCollector,
+    TaskType,
+    launch_bucket,
+    resolve_policy,
+)
+
+
+# ------------------------------------------------------------- scheduler
+def test_scheduler_lifo_order():
+    s = EpochScheduler(coalesce=False)
+    s.reset()
+    s.push_join(1, 0, 1)
+    s.push_forked(2, 1, 3)
+    d = s.pop()
+    assert (d.cen, d.start, d.count) == (2, 1, 3)  # forked first (LIFO)
+    d = s.pop()
+    assert (d.cen, d.start, d.count) == (1, 0, 1)
+    d = s.pop()  # the reset seed range
+    assert (d.cen, d.start, d.count) == (1, 0, 1)
+    assert not s
+
+
+def test_scheduler_default_coalesces_join_with_seed():
+    """With coalescing on, a re-armed join range at the same CEN as another
+    stacked range drains in a single pop."""
+    s = EpochScheduler()
+    s.reset()
+    s.push_join(1, 0, 1)
+    s.push_forked(2, 1, 3)
+    assert s.pop().cen == 2
+    d = s.pop()
+    assert (d.cen, d.start, d.count, d.n_ranges) == (1, 0, 1, 2)
+    assert not s
+
+
+def test_scheduler_coalesces_same_cen_ranges():
+    """All ranges at the current epoch number merge into one dispatch —
+    phase 1+3 overhead paid once for the whole system (§3 work-together a)."""
+    s = EpochScheduler(coalesce=True)
+    s.push_forked(3, 0, 4)
+    s.push_forked(3, 10, 6)
+    s.push_forked(3, 4, 2)
+    d = s.pop()
+    assert d.cen == 3
+    assert (d.start, d.count) == (0, 16)  # covering span of all three
+    assert d.n_ranges == 3
+    assert not s
+
+
+def test_scheduler_coalescing_stops_at_other_cen():
+    s = EpochScheduler(coalesce=True)
+    s.push_forked(2, 0, 4)
+    s.push_forked(3, 4, 4)
+    d = s.pop()
+    assert (d.cen, d.n_ranges) == (3, 1)
+    d = s.pop()
+    assert (d.cen, d.n_ranges) == (2, 1)
+
+
+def test_scheduler_no_coalesce_flag():
+    s = EpochScheduler(coalesce=False)
+    s.push_forked(3, 0, 4)
+    s.push_forked(3, 8, 2)
+    assert s.pop().n_ranges == 1
+    assert s.pop().n_ranges == 1
+
+
+def test_push_forked_ignores_empty_range():
+    s = EpochScheduler()
+    s.push_forked(2, 5, 0)
+    assert not s
+
+
+# -------------------------------------------------------------- policies
+def test_launch_bucket_sizing():
+    assert launch_bucket(0) == 8
+    assert launch_bucket(1) == 8
+    assert launch_bucket(9) == 16
+    assert launch_bucket(1, minimum=1) == 1
+    assert launch_bucket(3, minimum=1) == 4
+
+
+def test_policy_resolution():
+    assert resolve_policy("masked") is MASKED
+    assert resolve_policy(COMPACTED) is COMPACTED
+    assert MASKED.epoch_bucket(5) == 8
+    assert COMPACTED.type_bucket(5) == 8
+    assert COMPACTED.type_bucket(3) == 4  # lane-exact minimum of 1
+    assert COMPACTED.type_bucket(0) == 0  # idle type: no launch at all
+    with pytest.raises(ValueError):
+        resolve_policy("bogus")
+
+
+def test_device_engine_rejects_compacted():
+    with pytest.raises(ValueError):
+        DeviceEngine(fib.PROGRAM, dispatch="compacted")
+
+
+# -------------------------------- masked vs compacted: every app, identical
+@pytest.mark.parametrize("name", sorted(all_cases()))
+def test_compacted_matches_masked_everywhere(name):
+    """The §5.4 compaction stage may only change lane layout, never results:
+    heaps and the full TV value array must be bit-identical."""
+    case = get_case(name)
+    hm, vm, sm = case.run(dispatch="masked")
+    hc, vc, sc = case.run(dispatch="compacted")
+    for k in hm:
+        np.testing.assert_array_equal(
+            np.asarray(hm[k]), np.asarray(hc[k]), err_msg=f"{name}:{k}"
+        )
+    np.testing.assert_array_equal(np.asarray(vm), np.asarray(vc))
+    assert sc.epochs == sm.epochs
+    assert sc.tasks_executed == sm.tasks_executed
+    # dense per-type slices must not waste more lanes than full-width vmaps
+    assert sc.utilization >= sm.utilization
+
+
+def test_compacted_reports_per_type_occupancy():
+    _, _, stats = get_case("fib").run(dispatch="compacted")
+    occ = stats.occupancy_by_type
+    assert set(occ) == {"fib", "fibsum"}
+    for v in occ.values():
+        assert 0.0 < v <= 1.0
+    # compaction pays one extra dispatch + transfer per epoch (§5.4 trade)
+    _, _, masked = get_case("fib").run(dispatch="masked")
+    assert stats.dispatches == 2 * masked.dispatches
+    assert stats.scalar_transfers == 2 * masked.scalar_transfers
+
+
+def test_compacted_with_pallas_interpret_kernels():
+    """The compaction stage accepts the Pallas type_rank kernel (interpret
+    mode on CPU) and produces the same schedule as the jnp reference."""
+    from repro.kernels import ops as kops
+
+    def rank_interpret(types, active, n_types):
+        return kops.type_rank(types, active, n_types, impl="interpret")
+
+    _, v_ref, s_ref = HostEngine(
+        fib.PROGRAM, capacity=1 << 10, dispatch="compacted"
+    ).run(fib.initial(9))
+    _, v_pal, s_pal = HostEngine(
+        fib.PROGRAM, capacity=1 << 10, dispatch="compacted",
+        rank_fn=rank_interpret,
+    ).run(fib.initial(9))
+    assert int(v_ref[0, 0]) == int(v_pal[0, 0]) == fib.fib_reference(9)
+    assert s_ref.epochs == s_pal.epochs
+    assert s_ref.lanes_launched == s_pal.lanes_launched
+
+
+# ----------------------------------------------------------------- stats
+def test_null_stats_counts_only_control_terms():
+    _, _, stats = HostEngine(
+        fib.PROGRAM, capacity=1 << 10, collect_stats=False
+    ).run(fib.initial(8))
+    assert stats.epochs > 0 and stats.dispatches > 0
+    assert stats.tasks_executed == 0 and stats.lanes_launched == 0
+
+
+def test_stats_factory_plugs_in():
+    seen = []
+
+    def factory():
+        col = RunStatsCollector()
+        seen.append(col)
+        return col
+
+    eng = HostEngine(fib.PROGRAM, capacity=1 << 10, stats_factory=factory)
+    _, _, stats = eng.run(fib.initial(8))
+    assert len(seen) == 1
+    assert stats is seen[0].result()
+    assert stats.tasks_executed > 0
+
+
+# ------------------------------------------------- map launch edge cases
+def _zero_domain_map_program():
+    """A task that schedules a map whose element domain is empty."""
+
+    def _root(ctx):
+        ctx.map("noop", argi=(0,))
+        ctx.emit(1)
+
+    def _noop(mctx):
+        mctx.write("out", mctx.eid, 1, op="add")
+
+    return Program(
+        name="zero_dom",
+        tasks=(TaskType("root", _root),),
+        maps=(MapType("noop", _noop, domain=lambda ai: ai[..., 0], max_domain=8),),
+        n_arg_i=1,
+        heap=(HeapVar("out", (8,), jnp.int32),),
+    )
+
+
+def test_map_launch_skipped_when_domain_all_zero():
+    """A scheduled map whose lanes all have empty domains must not dispatch
+    a wasted payload (the dom[where].max()-on-zero sizing bug)."""
+    prog = _zero_domain_map_program()
+    heap, values, stats = HostEngine(prog, capacity=64).run(
+        InitialTask(task="root", argi=(0,))
+    )
+    assert int(values[0, 0]) == 1
+    assert stats.map_launches == 0
+    assert np.asarray(heap["out"]).sum() == 0
