@@ -266,6 +266,66 @@ def bench_dispatch():
         )
 
 
+# ------------------------------ epoch-multiplexing job service (DESIGN §8)
+def bench_service():
+    """Multi-tenant co-scheduling: fleet V_inf vs the sum of solo runs.
+
+    ``service_mixed3`` runs the registered mixed fleet (fib + treewalk +
+    bfs) through one shared TVM and reports the fused dispatch/readback
+    totals against the sum of the three solo runs — the work-together
+    principle extended across tenants.  ``service_fibxN`` scales a
+    homogeneous fleet to show throughput vs concurrency: fused dispatches
+    grow like the *max* of the members, not the sum.
+    """
+    from repro.apps import get_fleet
+    from repro.core import HostEngine
+    from repro.service import JobService
+
+    def run_service(fleet, n_jobs=None):
+        svc = JobService(
+            capacity=sum(q for _, q in fleet), dispatch=DISPATCH,
+            max_jobs=n_jobs or len(fleet),
+        )
+        for case, quota in fleet:
+            svc.submit_case(case, quota=quota)
+        svc.drain()
+        return svc
+
+    # mixed fleet vs sum-of-solo
+    fleet = get_fleet("mixed3")
+    solo_disp = solo_xfer = 0
+    for case, quota in fleet:
+        eng = HostEngine(case.program, capacity=quota, dispatch=DISPATCH)
+        _, _, s = eng.run(case.initial, heap_init=dict(case.heap_init) or None)
+        solo_disp += s.dispatches
+        solo_xfer += s.scalar_transfers
+    svc = run_service(fleet)
+    fs = svc.stats()
+    t = _time(lambda: run_service(get_fleet("mixed3")), repeats=1)
+    row(
+        f"service_mixed3_{DISPATCH}", t * 1e6,
+        f"jobs={len(fleet)};fleet_dispatches={fs.dispatches};"
+        f"solo_dispatches={solo_disp};"
+        f"fleet_transfers={fs.scalar_transfers};solo_transfers={solo_xfer};"
+        f"vinf_saving_x={(solo_disp + solo_xfer) / max(1, fs.dispatches + fs.scalar_transfers):.2f};"
+        f"util={fs.utilization:.2f}",
+    )
+
+    # throughput vs number of concurrent jobs (homogeneous fib fleet)
+    base = get_fleet("fib_fleet")[0]
+    for n in (1, 2, 4, 8):
+        fleet_n = [base] * n
+        svc = run_service(fleet_n)
+        fs = svc.stats()
+        t = _time(lambda f=fleet_n: run_service(f), repeats=1)
+        row(
+            f"service_fibx{n}_{DISPATCH}", t * 1e6,
+            f"jobs={n};fleet_dispatches={fs.dispatches};"
+            f"us_per_job={t * 1e6 / n:.1f};"
+            f"dispatches_per_job={fs.dispatches / n:.1f}",
+        )
+
+
 # --------------------------------------------------- TVM serving engine
 def bench_serving():
     import jax
@@ -335,6 +395,7 @@ BENCHES = {
     "sort": bench_sort,
     "overhead": bench_overhead,
     "dispatch": bench_dispatch,
+    "service": bench_service,
     "serving": bench_serving,
     "roofline": bench_roofline,
 }

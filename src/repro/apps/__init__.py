@@ -15,4 +15,11 @@ from . import (  # noqa: F401
     treewalk,
     tsp,
 )
-from .registry import AppCase, all_cases, get_case, register_case  # noqa: F401
+from .registry import (  # noqa: F401
+    AppCase,
+    all_cases,
+    get_case,
+    get_fleet,
+    register_case,
+    register_fleet,
+)

@@ -61,3 +61,35 @@ def all_cases() -> Dict[str, AppCase]:
     )
 
     return {name: fn() for name, fn in sorted(CASES.items())}
+
+
+# ---------------------------------------------------------------- fleets
+# A *fleet* is a named mix of cases meant to be co-scheduled by the
+# epoch-multiplexing job service (``repro.service``): the service benchmark
+# (`benchmarks/run.py` service rows) and the multi-tenant equivalence tests
+# iterate these so they drive identical mixes.  ``quota`` is the TV-region
+# the service grants each member (solo-equivalence runs use the same value
+# as the solo engine capacity, keeping layouts bit-comparable).
+FLEETS: Dict[str, tuple] = {}
+
+
+def register_fleet(name: str, members: tuple) -> None:
+    """Register a fleet: a tuple of (case_name, quota) pairs."""
+    FLEETS[name] = tuple(members)
+
+
+def get_fleet(name: str):
+    """Materialize a fleet as a list of (AppCase, quota) pairs."""
+    all_cases()  # ensure every app module has registered
+    return [(get_case(case), quota) for case, quota in FLEETS[name]]
+
+
+# mixed fleets: different programs co-scheduled in one shared TVM
+register_fleet("mixed3", (("fib", 512), ("treewalk", 256), ("bfs", 2048)))
+# mixed4 adds a map-bearing tenant (mergesort schedules bulk map payloads)
+register_fleet(
+    "mixed4",
+    (("fib", 512), ("treewalk", 256), ("bfs", 2048), ("mergesort", 512)),
+)
+# homogeneous fleet: the throughput-vs-concurrency scaling benchmark
+register_fleet("fib_fleet", (("fib", 512),) * 4)

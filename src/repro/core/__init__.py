@@ -4,19 +4,22 @@
 # pipeline is layered (DESIGN.md section 1): engines (drivers) over the
 # scheduler (phase-1 policy: stacks, coalescing, dispatch sizing) over the
 # TVM (phase-2/3 execution substrate).
-from .engine import DeviceEngine, EngineError, HostEngine, RunStats
+from .engine import DeviceEngine, EngineError, HostEngine, MapLauncher, RunStats
 from .interp import OracleStats, run_oracle
 from .program import HeapVar, InitialTask, MapType, Program, TaskType
 from .analysis import OverheadReport, compare
 from .scheduler import (
     COMPACTED,
+    FUSE_ALL,
     MASKED,
     DispatchPolicy,
     EpochScheduler,
+    MuxPopPolicy,
     NullStats,
     RunStatsCollector,
     StatsCollector,
     launch_bucket,
+    resolve_mux_policy,
     resolve_policy,
 )
 
@@ -35,12 +38,16 @@ __all__ = [
     "OverheadReport",
     "compare",
     "COMPACTED",
+    "FUSE_ALL",
     "MASKED",
     "DispatchPolicy",
     "EpochScheduler",
+    "MapLauncher",
+    "MuxPopPolicy",
     "NullStats",
     "RunStatsCollector",
     "StatsCollector",
     "launch_bucket",
+    "resolve_mux_policy",
     "resolve_policy",
 ]

@@ -55,6 +55,7 @@ from .scheduler import (  # noqa: F401  (RunStats re-exported for back-compat)
     device_stacks,
     launch_bucket,
     resolve_policy,
+    size_type_buckets,
 )
 
 
@@ -85,6 +86,57 @@ def _default_rank_fn(types, active, n_types):
     return kops.type_rank(types, active, n_types)
 
 
+class MapLauncher:
+    """Host-side launcher for scheduled ``map`` payloads (paper §5.2.4).
+
+    Sizes each payload launch to the *live* element domain of its scheduled
+    lanes, skips payloads whose lanes all have empty domains, and caches the
+    jitted step per (map, lane-count, domain-bucket).  Shared by
+    :class:`HostEngine` and the service-layer epoch multiplexer, which both
+    run phase 1/3 on the host.
+    """
+
+    def __init__(self, program: Program, donate: bool = False):
+        self.program = program
+        self._donate = donate
+        self._cache: Dict[Tuple[int, int, int], Any] = {}
+
+    def _get_step(self, mid: int, P: int, D: int):
+        key = (mid, P, D)
+        if key not in self._cache:
+            def mfn(heap, where, argi, argf):
+                return tvm.run_map_payload(
+                    self.program, heap, mid, where, argi, argf, D
+                )
+
+            self._cache[key] = jax.jit(
+                mfn, donate_argnums=(0,) if self._donate else ()
+            )
+        return self._cache[key]
+
+    def run(self, map_launches, heap, col: StatsCollector):
+        """Launch each scheduled map payload, sized to its live domain."""
+        for ml in map_launches:
+            where = np.asarray(jax.device_get(ml.where))
+            if not where.any():
+                continue
+            argi = np.asarray(jax.device_get(ml.argi))
+            dom = np.asarray(self.program.maps[ml.map_id].domain(argi))
+            dmax = int(dom[where].max()) if dom[where].size else 0
+            if dmax <= 0:
+                # every scheduled lane has an empty element domain: a launch
+                # would dispatch a wasted payload (launch_bucket(0) lanes)
+                continue
+            D = launch_bucket(dmax, minimum=8)
+            mstep = self._get_step(ml.map_id, int(where.shape[0]), D)
+            heap = mstep(heap, ml.where, ml.argi, ml.argf)
+            col.dispatch()
+            # what to record is the collector's decision (NullStats ignores
+            # the element count), not an engine-level flag's
+            col.map_launch(int(dom[where].sum()))
+        return heap
+
+
 class HostEngine:
     """Paper-faithful engine: host drives stacks, device runs bulk epochs."""
 
@@ -111,7 +163,7 @@ class HostEngine:
         self._raw_step = _build_epoch_step(program, fork_offsets_fn)
         self._step_cache: Dict[Any, Any] = {}
         self._compact_cache: Dict[int, Any] = {}
-        self._map_cache: Dict[Tuple[int, int, int], Any] = {}
+        self._maps = MapLauncher(program, donate=donate)
         self._donate = donate
 
     # ------------------------------------------------------------- steps
@@ -175,19 +227,6 @@ class HostEngine:
             )
         return self._step_cache[key]
 
-    def _get_map_step(self, mid: int, P: int, D: int):
-        key = (mid, P, D)
-        if key not in self._map_cache:
-            def mfn(heap, where, argi, argf):
-                return tvm.run_map_payload(
-                    self.program, heap, mid, where, argi, argf, D
-                )
-
-            self._map_cache[key] = jax.jit(
-                mfn, donate_argnums=(0,) if self._donate else ()
-            )
-        return self._map_cache[key]
-
     # --------------------------------------------------------------- run
     def run(
         self,
@@ -231,23 +270,15 @@ class HostEngine:
                 counts = np.asarray(jax.device_get(counts_dev), np.int64)
                 col.dispatch()
                 col.transfer()
-                buckets = tuple(
-                    self.policy.type_bucket(int(c)) for c in counts
+                buckets, toffs, launched, by_type = size_type_buckets(
+                    self.policy, counts, task_names
                 )
-                toffs = np.zeros_like(counts)
-                toffs[1:] = np.cumsum(counts)[:-1]
                 step = self._get_compacted_step(P, buckets)
                 state, heap, summary, map_launches = step(
                     state, heap, start_j, count_j, cen_j, perm,
                     jnp.asarray(toffs, jnp.int32),
                     jnp.asarray(counts, jnp.int32),
                 )
-                launched = int(sum(buckets))
-                by_type = {
-                    task_names[t]: (int(counts[t]), buckets[t])
-                    for t in range(len(buckets))
-                    if buckets[t] > 0
-                }
             else:
                 step = self._get_step(P)
                 state, heap, summary, map_launches = step(
@@ -281,7 +312,7 @@ class HostEngine:
             )
 
             if map_sched:
-                heap = self._run_maps(map_launches, heap, col)
+                heap = self._maps.run(map_launches, heap, col)
 
             col.epoch(cen, d.n_ranges)
             col.lanes(int(n_active), launched, by_type)
@@ -289,28 +320,6 @@ class HostEngine:
             col.tv_peak(int(nf))
 
         return heap, state.value, col.result()
-
-    def _run_maps(self, map_launches, heap, col: StatsCollector):
-        """Launch each scheduled map payload, sized to its live domain."""
-        for ml in map_launches:
-            where = np.asarray(jax.device_get(ml.where))
-            if not where.any():
-                continue
-            argi = np.asarray(jax.device_get(ml.argi))
-            dom = np.asarray(self.program.maps[ml.map_id].domain(argi))
-            dmax = int(dom[where].max()) if dom[where].size else 0
-            if dmax <= 0:
-                # every scheduled lane has an empty element domain: a launch
-                # would dispatch a wasted payload (launch_bucket(0) lanes)
-                continue
-            D = launch_bucket(dmax, minimum=8)
-            mstep = self._get_map_step(ml.map_id, int(where.shape[0]), D)
-            heap = mstep(heap, ml.where, ml.argi, ml.argf)
-            col.dispatch()
-            # what to record is the collector's decision (NullStats ignores
-            # the element count), not an engine-level flag's
-            col.map_launch(int(dom[where].sum()))
-        return heap
 
 
 class DeviceEngine:

@@ -31,6 +31,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 
 # --------------------------------------------------------------------------
@@ -65,6 +66,28 @@ class DispatchPolicy:
         if count <= 0:
             return 0
         return launch_bucket(count, self.type_min_bucket)
+
+
+def size_type_buckets(policy: "DispatchPolicy", counts, task_names):
+    """Per-type launch plan from the compaction counts readback (§5.4).
+
+    Shared by the solo ``HostEngine`` and the service multiplexer so bucket
+    sizing, slice offsets, and the per-type occupancy ledger can never
+    diverge between the two drivers.  Returns ``(buckets, toffs, launched,
+    by_type)``: the jit-key bucket tuple, the exclusive per-type offsets
+    into the compaction permutation, total lanes launched, and the
+    ``{name: (active, lanes)}`` dict fed to ``StatsCollector.lanes``.
+    """
+    counts = np.asarray(counts)
+    buckets = tuple(policy.type_bucket(int(c)) for c in counts)
+    toffs = np.zeros_like(counts)
+    toffs[1:] = np.cumsum(counts)[:-1]
+    by_type = {
+        task_names[t]: (int(counts[t]), buckets[t])
+        for t in range(len(buckets))
+        if buckets[t] > 0
+    }
+    return buckets, toffs, int(sum(buckets)), by_type
 
 
 MASKED = DispatchPolicy("masked")
@@ -125,6 +148,8 @@ class EpochScheduler:
         return len(self._join)
 
     def pop(self) -> EpochDispatch:
+        if not self._join:
+            raise RuntimeError("scheduler empty — program already drained")
         cen = self._join.pop()
         start, count = self._range.pop()
         lo, hi, n = start, start + count, 1
@@ -145,6 +170,63 @@ class EpochScheduler:
         if count > 0:
             self._join.append(cen)
             self._range.append((base, count))
+
+
+# --------------------------------------------------------------------------
+# Multi-stack pop policy (service layer: which jobs fuse into one epoch)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MuxPopPolicy:
+    """Which per-job scheduler stacks pop into one fused global epoch.
+
+    The epoch multiplexer (``repro.service``) keeps one
+    :class:`EpochScheduler` per admitted job; each global epoch it selects a
+    *gang* of ready jobs, pops one dispatch from each, and fuses them into a
+    single launch + readback.  ``gang`` bounds the fan-in (0 = unlimited);
+    the name picks the selection order when the gang is full:
+
+      * ``fuse_all``      — every ready job, maximal work-together fusion.
+      * ``round_robin``   — rotate the starting job each global epoch, so a
+        bounded gang shares the fused dispatches fairly.
+      * ``deepest_first`` — prefer jobs with the deepest stacks (most
+        pending frontiers), draining divergent jobs to bound their TV/stack
+        residency.
+    """
+
+    name: str
+    gang: int = 0  # max jobs fused per global epoch; 0 = no limit
+
+    def select(self, ready: List[int], depths: List[int], rotor: int) -> List[int]:
+        """Pick which of the ready job indices pop this global epoch."""
+        if self.gang <= 0 or len(ready) <= self.gang:
+            return list(ready)
+        if self.name == "round_robin":
+            k = rotor % len(ready)
+            rotated = ready[k:] + ready[:k]
+            return rotated[: self.gang]
+        if self.name == "deepest_first":
+            order = sorted(
+                range(len(ready)), key=lambda i: -depths[i]
+            )
+            return [ready[i] for i in order[: self.gang]]
+        return list(ready)[: self.gang]
+
+
+FUSE_ALL = MuxPopPolicy("fuse_all")
+_MUX_POLICIES = ("fuse_all", "round_robin", "deepest_first")
+
+
+def resolve_mux_policy(policy, gang: int = 0) -> MuxPopPolicy:
+    if isinstance(policy, MuxPopPolicy):
+        # an explicitly requested gang bound overrides the instance's
+        if gang and gang != policy.gang:
+            return dataclasses.replace(policy, gang=gang)
+        return policy
+    if policy in _MUX_POLICIES:
+        return MuxPopPolicy(policy, gang)
+    raise ValueError(
+        f"unknown mux pop policy {policy!r}; expected one of {_MUX_POLICIES}"
+    )
 
 
 # --------------------------------------------------------------------------

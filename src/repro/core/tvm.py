@@ -95,6 +95,75 @@ jax.tree_util.register_dataclass(
 
 
 @dataclasses.dataclass
+class JobArena:
+    """Per-job slot regions inside one shared Task Vector (service layer).
+
+    The epoch-multiplexing job service (``repro.service``) co-schedules many
+    independent programs in one :class:`TVMState`.  Each job ``j`` owns the
+    contiguous slot region ``[base[j], end[j])`` — its private Task Vector,
+    laid out exactly as a solo run of capacity ``end[j]-base[j]`` shifted by
+    ``base[j]`` — and ``slot_job`` tags every TV slot with its region index
+    (``J`` for slots outside every region).  ``next`` is the per-region
+    ``nextFreeCore`` cursor; :func:`commit_epoch` allocates each job's forks
+    from its own cursor with a segmented prefix sum, so no job's children
+    ever land in another job's region and per-job layout stays bit-identical
+    to the solo run.
+    """
+
+    slot_job: jnp.ndarray  # i32[C] region index per TV slot (J = unowned)
+    base: jnp.ndarray      # i32[J] region start (inclusive)
+    end: jnp.ndarray       # i32[J] region end (exclusive)
+    next: jnp.ndarray      # i32[J] per-region nextFreeCore (absolute slots)
+
+    @property
+    def n_jobs(self) -> int:
+        return self.base.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    JobArena,
+    data_fields=["slot_job", "base", "end", "next"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MuxEpochSummary:
+    """Per-job end-of-epoch scalars for the fused multi-tenant readback.
+
+    One ``device_get`` of this struct replaces J separate solo readbacks —
+    the work-together win extended across tenants: the whole fleet pays the
+    V_inf transfer once per global epoch.  The first five fields aggregate
+    exactly like :class:`EpochSummary`; the ``job_*`` arrays carry each
+    region's own ``nextFreeCore``/``joinScheduled``/fork totals so every
+    job's scheduler can push its continuations exactly as a solo engine
+    would.
+    """
+
+    total_forks: jnp.ndarray     # i32[]
+    join_scheduled: jnp.ndarray  # bool[]
+    map_scheduled: jnp.ndarray   # bool[]
+    n_active: jnp.ndarray        # i32[]
+    overflow: jnp.ndarray        # bool[]  any region exhausted
+    job_forks: jnp.ndarray       # i32[J]  forks allocated per region
+    job_join: jnp.ndarray        # bool[J] join scheduled per region
+    job_active: jnp.ndarray      # i32[J]  active lanes per region
+    job_overflow: jnp.ndarray    # bool[J] region capacity exhausted
+    job_next: jnp.ndarray        # i32[J]  post-commit region cursors
+
+
+jax.tree_util.register_dataclass(
+    MuxEpochSummary,
+    data_fields=[
+        "total_forks", "join_scheduled", "map_scheduled", "n_active",
+        "overflow", "job_forks", "job_join", "job_active", "job_overflow",
+        "job_next",
+    ],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass
 class MapLaunch:
     """One map site's scheduled lanes, for the payload launch."""
 
@@ -255,7 +324,11 @@ def trace_tasks_compacted(
     idx = start + jnp.arange(P, dtype=jnp.int32)
     in_range = jnp.arange(P, dtype=jnp.int32) < count
     cidx = jnp.clip(idx, 0, C - 1)
-    active = in_range & (state.epoch[cidx] == cen)
+    # ``cen`` may be per-lane (service multiplexer: each lane carries its own
+    # job's epoch number, 0 = lane not in any popped range); the cen>0 guard
+    # keeps 0-tagged lanes from matching invalid (epoch 0) slots.
+    cen_l = jnp.asarray(cen, jnp.int32)
+    active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
     g_task = state.task[cidx]
 
     pad = max(buckets) if buckets else 1
@@ -348,11 +421,24 @@ def commit_epoch(
     per_type,
     cen: jnp.ndarray,
     fork_offsets_fn: Optional[Callable] = None,
+    arena: Optional[JobArena] = None,
 ) -> Tuple[TVMState, Dict[str, jnp.ndarray], EpochSummary, List[MapLaunch]]:
     """Phase 3: prefix-sum fork allocation + TMS (epoch-number) update.
 
     ``fork_offsets_fn(counts) -> (excl_offsets, total)`` lets the engine swap
     the jnp cumsum for the ``fork_compact`` Pallas kernel.
+
+    With ``arena`` (the service's multi-tenant mode) the single global
+    ``nextFreeCore`` becomes one cursor per job region: every lane is tagged
+    with its region index (``arena.slot_job``), fork allocation is a
+    *segmented* prefix sum so each job's children stay contiguous inside its
+    own region, child scatters are bounded by the region end (an overflowing
+    job can never scribble into a neighbour), trailing-invalid reclamation
+    (paper §5.3) runs per region, ``cen`` may be a per-lane vector (each
+    lane's own job epoch number), and the summary is a
+    :class:`MuxEpochSummary` carrying the per-job readback scalars.
+    ``fork_offsets_fn`` is ignored in arena mode (the segmented scan has no
+    Pallas counterpart yet).
     """
     C = state.capacity
     P = idx.shape[0]
@@ -366,13 +452,31 @@ def commit_epoch(
             cnt = cnt + f["where"].astype(jnp.int32)
         lane_count = lane_count + jnp.where(mask_t, cnt, 0)
 
-    if fork_offsets_fn is None:
-        lane_excl = _exclusive_cumsum(lane_count)
-        total_forks = lane_count.sum().astype(jnp.int32)
+    lane_cap = None  # per-lane scatter bound (arena mode only)
+    if arena is None:
+        if fork_offsets_fn is None:
+            lane_excl = _exclusive_cumsum(lane_count)
+            total_forks = lane_count.sum().astype(jnp.int32)
+        else:
+            lane_excl, total_forks = fork_offsets_fn(lane_count)
+        lane_base = state.next_free + lane_excl
+        overflow = (state.next_free + total_forks) > C
     else:
-        lane_excl, total_forks = fork_offsets_fn(lane_count)
-    lane_base = state.next_free + lane_excl
-    overflow = (state.next_free + total_forks) > C
+        J = arena.n_jobs
+        jl = jnp.clip(arena.slot_job[cidx], 0, J - 1)  # region per lane
+        onehot = jl[:, None] == jnp.arange(J, dtype=jnp.int32)[None, :]
+        cnt1h = jnp.where(onehot, lane_count[:, None], 0)
+        # segmented exclusive scan: each lane's offset among *its own job's*
+        # forks — identical to the solo cumsum restricted to that region
+        lane_excl = jnp.take_along_axis(
+            jnp.cumsum(cnt1h, axis=0) - cnt1h, jl[:, None], axis=1
+        )[:, 0]
+        job_forks = cnt1h.sum(axis=0).astype(jnp.int32)
+        lane_base = arena.next[jl] + lane_excl
+        lane_cap = arena.end[jl]
+        job_overflow = (arena.next + job_forks) > arena.end
+        total_forks = job_forks.sum().astype(jnp.int32)
+        overflow = job_overflow.any()
 
     new_task = state.task
     new_argi = state.argi
@@ -383,6 +487,7 @@ def commit_epoch(
     new_cc = state.child_count
 
     join_any = jnp.asarray(False)
+    lane_join = jnp.zeros((P,), bool)
     map_any = jnp.asarray(False)
     map_launches: List[MapLaunch] = []
     drop = C  # out-of-range slot => dropped scatter
@@ -392,7 +497,10 @@ def commit_epoch(
         within = jnp.zeros((P,), jnp.int32)
         for f in eff["forks"]:
             fire = mask_t & f["where"]
-            slots = jnp.where(fire, lane_base + within, drop)
+            raw = lane_base + within
+            if lane_cap is not None:
+                fire = fire & (raw < lane_cap)
+            slots = jnp.where(fire, raw, drop)
             new_task = new_task.at[slots].set(f["task"], mode="drop")
             new_argi = new_argi.at[slots].set(f["argi"], mode="drop")
             new_argf = new_argf.at[slots].set(f["argf"], mode="drop")
@@ -411,6 +519,7 @@ def commit_epoch(
             new_argi = new_argi.at[jslots].set(j["argi"], mode="drop")
             new_argf = new_argf.at[jslots].set(j["argf"], mode="drop")
             join_any = jnp.logical_or(join_any, jw.any())
+            lane_join = lane_join | jw
 
         # -------- record children pointers on the (possibly joined) parent
         pslots = jnp.where(mask_t, cidx, drop)
@@ -452,13 +561,44 @@ def commit_epoch(
                 MapLaunch(map_id=mid, where=fire, argi=m["argi"], argf=m["argf"])
             )
 
-    next_free = state.next_free + total_forks
-
     # ---- trailing-invalid reclamation (paper §5.3, nextFreeCore decrease)
     iota = jnp.arange(C, dtype=jnp.int32)
     valid = new_epoch > 0
-    last_valid = jnp.max(jnp.where(valid, iota, -1))
-    next_free = jnp.minimum(next_free, last_valid + 1).astype(jnp.int32)
+    if arena is None:
+        next_free = state.next_free + total_forks
+        last_valid = jnp.max(jnp.where(valid, iota, -1))
+        next_free = jnp.minimum(next_free, last_valid + 1).astype(jnp.int32)
+        summary = EpochSummary(
+            total_forks=total_forks,
+            join_scheduled=join_any,
+            map_scheduled=map_any,
+            n_active=active.sum().astype(jnp.int32),
+            overflow=overflow,
+        )
+    else:
+        # per-region reclamation: each cursor shrinks to just past its own
+        # region's last valid slot, exactly the solo rule shifted by base
+        last_valid = jax.ops.segment_max(
+            jnp.where(valid, iota, -1), arena.slot_job, num_segments=J + 1
+        )[:J]
+        job_next = jnp.minimum(
+            arena.next + job_forks, jnp.maximum(last_valid + 1, arena.base)
+        ).astype(jnp.int32)
+        next_free = jnp.max(job_next).astype(jnp.int32)  # fleet high-water
+        summary = MuxEpochSummary(
+            total_forks=total_forks,
+            join_scheduled=join_any,
+            map_scheduled=map_any,
+            n_active=active.sum().astype(jnp.int32),
+            overflow=overflow,
+            job_forks=job_forks,
+            job_join=(onehot & lane_join[:, None]).any(axis=0),
+            job_active=jnp.where(onehot & active[:, None], 1, 0)
+            .sum(axis=0)
+            .astype(jnp.int32),
+            job_overflow=job_overflow,
+            job_next=job_next,
+        )
 
     new_state = TVMState(
         task=new_task,
@@ -469,13 +609,6 @@ def commit_epoch(
         child_base=new_cb,
         child_count=new_cc,
         next_free=next_free,
-    )
-    summary = EpochSummary(
-        total_forks=total_forks,
-        join_scheduled=join_any,
-        map_scheduled=map_any,
-        n_active=active.sum().astype(jnp.int32),
-        overflow=overflow,
     )
     return new_state, heap, summary, map_launches
 

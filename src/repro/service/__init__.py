@@ -1,0 +1,31 @@
+# Epoch-multiplexing job service: co-schedule many independent task-parallel
+# programs inside one shared TVM, paying the per-epoch launch + scalar
+# readback (the paper's V_inf critical-path terms) once for the whole fleet
+# instead of once per program — the §3 "work-together" principle extended
+# across tenants.  See DESIGN.md §8.
+from .api import JobService, merge_stats
+from .jobs import (
+    AdmissionError,
+    Job,
+    JobFailure,
+    JobHandle,
+    JobResult,
+    JobStats,
+    JobStatus,
+)
+from .multiplexer import EpochMultiplexer, TenantSlot, fuse_programs
+
+__all__ = [
+    "AdmissionError",
+    "EpochMultiplexer",
+    "Job",
+    "JobFailure",
+    "JobHandle",
+    "JobResult",
+    "JobService",
+    "JobStats",
+    "JobStatus",
+    "TenantSlot",
+    "fuse_programs",
+    "merge_stats",
+]

@@ -1,0 +1,225 @@
+"""Submission surface of the epoch-multiplexing job service.
+
+:class:`JobService` is the multi-tenant front door: ``submit`` enqueues a
+program (any app, any arguments) with a TV-region quota, ``poll`` reports
+its lifecycle state, ``result`` drives the fleet until that job finishes,
+and ``completions`` streams handles the moment each job's scheduler drains.
+
+The service runs jobs in *waves*: a wave is one fused
+:class:`~repro.service.multiplexer.EpochMultiplexer` fleet (up to
+``max_jobs`` jobs whose quotas fit the capacity budget and whose value
+dtypes agree).  While a wave is in flight, queued jobs whose program
+template matches a freed region are admitted mid-flight (streaming
+multi-tenancy, no retrace); everything else waits for the next wave.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, Iterator, List, Mapping, Optional
+
+from ..core.program import InitialTask, Program
+from ..core.scheduler import RunStats
+from .jobs import (
+    AdmissionError,
+    Job,
+    JobHandle,
+    JobResult,
+    JobStatus,
+    check_fleet_dtype,
+    validate_job,
+)
+from .multiplexer import EpochMultiplexer
+
+
+def merge_stats(into: RunStats, s: RunStats) -> RunStats:
+    """Accumulate one wave's fleet stats into a running total."""
+    into.epochs += s.epochs
+    into.tasks_executed += s.tasks_executed
+    into.lanes_launched += s.lanes_launched
+    into.total_forks += s.total_forks
+    into.map_launches += s.map_launches
+    into.map_elements += s.map_elements
+    into.peak_tv_slots = max(into.peak_tv_slots, s.peak_tv_slots)
+    into.dispatches += s.dispatches
+    into.scalar_transfers += s.scalar_transfers
+    into.ranges_coalesced += s.ranges_coalesced
+    for k, v in s.tasks_by_type.items():
+        into.tasks_by_type[k] = into.tasks_by_type.get(k, 0) + v
+    for k, v in s.lanes_by_type.items():
+        into.lanes_by_type[k] = into.lanes_by_type.get(k, 0) + v
+    return into
+
+
+class JobService:
+    """Multi-tenant job service over one shared TVM.
+
+    ``capacity`` is the slot budget a wave's quotas must fit in;
+    ``max_jobs`` bounds a wave's fan-in; ``dispatch``/``coalesce`` select
+    the phase-2 policy for the fused fleet exactly as on ``HostEngine``;
+    ``pop_policy``/``gang`` pick the multi-stack pop policy
+    (:class:`~repro.core.scheduler.MuxPopPolicy`).
+    """
+
+    def __init__(
+        self,
+        capacity: int = 1 << 14,
+        max_jobs: int = 8,
+        dispatch: Any = "masked",
+        coalesce: bool = True,
+        pop_policy: Any = "fuse_all",
+        gang: int = 0,
+        default_quota: int = 1 << 10,
+        collect_stats: bool = True,
+        rank_fn=None,
+    ):
+        self.capacity = capacity
+        self.max_jobs = max_jobs
+        self.dispatch = dispatch
+        self.coalesce = coalesce
+        self.pop_policy = pop_policy
+        self.gang = gang
+        self.default_quota = default_quota
+        self.collect_stats = collect_stats
+        self._rank_fn = rank_fn
+        self._ids = itertools.count()
+        self._queue: List[JobHandle] = []
+        self._handles: Dict[int, JobHandle] = {}
+        self._mux: Optional[EpochMultiplexer] = None
+        self._stats = RunStats()
+        self._admit_ready = False  # a region was freed since the last scan
+
+    # ------------------------------------------------------------- submit
+    def submit(
+        self,
+        program: Program,
+        initial: InitialTask,
+        heap_init: Optional[Mapping[str, Any]] = None,
+        quota: Optional[int] = None,
+        name: str = "",
+    ) -> JobHandle:
+        """Admit a job into the queue; raises AdmissionError if it can
+        never run on this service."""
+        job = Job(
+            program=program,
+            initial=initial,
+            heap_init=dict(heap_init or {}),
+            quota=int(quota or self.default_quota),
+            name=name or program.name,
+        )
+        validate_job(job, self.capacity)
+        handle = JobHandle(job_id=next(self._ids), job=job)
+        self._handles[handle.job_id] = handle
+        self._queue.append(handle)
+        return handle
+
+    def submit_case(self, case, quota: Optional[int] = None,
+                    name: str = "") -> JobHandle:
+        """Submit a registered :class:`~repro.apps.registry.AppCase`."""
+        return self.submit(
+            case.program,
+            case.initial,
+            heap_init=dict(case.heap_init),
+            quota=quota or case.capacity,
+            name=name or case.name,
+        )
+
+    # -------------------------------------------------------------- query
+    def poll(self, handle: JobHandle) -> JobStatus:
+        return handle.status
+
+    def result(self, handle: JobHandle) -> JobResult:
+        """Drive the service until this job finishes; raise on failure."""
+        while not handle.done:
+            if not self._pending():
+                raise RuntimeError(
+                    f"job {handle.job.name!r} cannot make progress"
+                )
+            self._pump()
+        if handle.status is JobStatus.FAILED:
+            raise handle.error
+        return handle.result
+
+    # ------------------------------------------------------------- driving
+    def completions(self) -> Iterator[JobHandle]:
+        """Stream handles as they complete (DONE or FAILED)."""
+        while self._pending():
+            for h in self._pump():
+                yield h
+
+    def drain(self) -> List[JobHandle]:
+        """Run every submitted job to completion; return all handles in
+        completion order."""
+        return list(self.completions())
+
+    def stats(self) -> RunStats:
+        """Fleet-level stats accumulated across every wave so far."""
+        total = merge_stats(RunStats(), self._stats)
+        if self._mux is not None:
+            merge_stats(total, self._mux.stats())
+        return total
+
+    # ------------------------------------------------------------ internal
+    def _pending(self) -> bool:
+        return bool(self._queue) or (self._mux is not None and self._mux.live)
+
+    def _pump(self) -> List[JobHandle]:
+        """Make one unit of progress: (re)build or refill the fleet, then
+        run one fused global epoch.  Returns newly completed handles."""
+        if self._mux is not None and not self._mux.live:
+            merge_stats(self._stats, self._mux.stats())
+            self._mux = None
+        if self._mux is None:
+            wave = self._take_wave()
+            if not wave:
+                return []
+            self._mux = EpochMultiplexer(
+                wave,
+                dispatch=self.dispatch,
+                coalesce=self.coalesce,
+                pop_policy=self.pop_policy,
+                gang=self.gang,
+                collect_stats=self.collect_stats,
+                rank_fn=self._rank_fn,
+            )
+            self._admit_ready = False
+        elif self._admit_ready and self._queue:
+            # streaming admission: seed queued jobs into regions freed by
+            # the completions of the previous step (a region can only free
+            # on a completion, so skip the scan on every other epoch)
+            still: List[JobHandle] = []
+            for h in self._queue:
+                if not self._mux.admit(h):
+                    still.append(h)
+            self._queue = still
+            self._admit_ready = False
+        done = self._mux.step()
+        if done:
+            self._admit_ready = True
+        return done
+
+    def _take_wave(self) -> List[JobHandle]:
+        """Greedy FIFO wave packing under the capacity/max_jobs budget.
+
+        The first queued job anchors the wave's value dtype; later queued
+        jobs join only if they fit the remaining budget and dtype.  Jobs
+        left behind simply wait for a later wave — admission control never
+        reorders a job ahead of a *compatible* earlier one.
+        """
+        wave: List[JobHandle] = []
+        left: List[JobHandle] = []
+        budget = self.capacity
+        for h in self._queue:
+            if len(wave) < self.max_jobs and h.job.quota <= budget:
+                try:
+                    check_fleet_dtype(
+                        [w.job.program for w in wave] + [h.job.program]
+                    )
+                except AdmissionError:
+                    left.append(h)
+                    continue
+                wave.append(h)
+                budget -= h.job.quota
+            else:
+                left.append(h)
+        self._queue = left
+        return wave

@@ -1,0 +1,141 @@
+"""Job lifecycle for the epoch-multiplexing service.
+
+A *job* is one tenant's task-parallel program — its own :class:`Program`,
+seed task, heap initialization, and a slot *quota* (the size of the private
+Task Vector region it is granted inside the shared TVM).  The service admits
+jobs against a capacity budget, runs them co-scheduled with every other
+admitted job (``multiplexer.py``), and reclaims the region the moment the
+job's scheduler drains, so a queued job can take its place.
+
+Admission control is deliberately *static*: everything checkable before the
+first epoch — quota bounds, seed-task resolution, value-dtype uniformity
+across the fleet — is checked at submit/fuse time and raises
+:class:`AdmissionError`; the only runtime failure mode left is a job
+outgrowing its own quota, which fails *that job alone* (its fork scatters
+are bounded by its region end, so a runaway tenant cannot corrupt a
+neighbour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Mapping, Optional
+
+import jax.numpy as jnp
+
+from ..core.program import InitialTask, Program
+
+
+class JobStatus(enum.Enum):
+    QUEUED = "queued"      # submitted, waiting for a region
+    RUNNING = "running"    # co-scheduled in the shared TVM
+    DONE = "done"          # scheduler drained; result extracted
+    FAILED = "failed"      # outgrew its quota (region overflow)
+
+
+class AdmissionError(ValueError):
+    """Job rejected before execution (quota / compatibility checks)."""
+
+
+class JobFailure(RuntimeError):
+    """Job failed at runtime (its own region overflowed)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One tenant program: what a solo ``HostEngine.run`` call would take,
+    plus the TV-region quota the service reserves for it."""
+
+    program: Program
+    initial: InitialTask
+    heap_init: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    quota: int = 1 << 10
+    name: str = ""
+
+
+@dataclasses.dataclass
+class JobStats:
+    """Per-job accounting in solo-comparable terms.
+
+    ``epochs``/``tasks_executed``/``total_forks``/``peak_tv_slots`` match the
+    solo run's :class:`~repro.core.RunStats` fields exactly (the region is a
+    bit-identical shifted copy of the solo TV).  ``shared_dispatches`` /
+    ``shared_transfers`` count the *fused* launches this job rode along on —
+    the whole point of the service is that these sum to far less across a
+    fleet than the solo runs' totals.
+    """
+
+    epochs: int = 0
+    tasks_executed: int = 0
+    total_forks: int = 0
+    peak_tv_slots: int = 0
+    shared_dispatches: int = 0
+    shared_transfers: int = 0
+
+
+@dataclasses.dataclass
+class JobResult:
+    """What a solo run returns, extracted from the job's region.
+
+    ``heap`` carries the job's *own* heap names (the service strips its
+    tenant namespace); ``value`` is the region's TV-value block, shape
+    ``[quota, value_width]`` in the job's own value width — bit-identical to
+    a solo ``HostEngine.run`` with ``capacity=quota``.
+    """
+
+    heap: Dict[str, jnp.ndarray]
+    value: jnp.ndarray
+    stats: JobStats
+
+
+@dataclasses.dataclass
+class JobHandle:
+    """Submission ticket: poll ``status``, read ``result`` when DONE."""
+
+    job_id: int
+    job: Job
+    status: JobStatus = JobStatus.QUEUED
+    result: Optional[JobResult] = None
+    error: Optional[Exception] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status in (JobStatus.DONE, JobStatus.FAILED)
+
+
+def validate_job(job: Job, capacity: int) -> None:
+    """Static admission checks for one job against the service capacity."""
+    if job.quota < 2:
+        raise AdmissionError(
+            f"job {job.name!r}: quota must be >= 2 (root slot + 1), "
+            f"got {job.quota}"
+        )
+    if job.quota > capacity:
+        raise AdmissionError(
+            f"job {job.name!r}: quota {job.quota} exceeds service "
+            f"capacity {capacity}"
+        )
+    try:
+        job.program.task_id(job.initial.task)
+    except KeyError:
+        raise AdmissionError(
+            f"job {job.name!r}: seed task {job.initial.task!r} not in "
+            f"program {job.program.name!r}"
+        ) from None
+
+
+def check_fleet_dtype(programs) -> Any:
+    """All co-scheduled programs must share one TV value dtype.
+
+    The shared value array has a single dtype; admitting a tenant whose
+    emits would be silently cast could not stay bit-identical to its solo
+    run, so mixed-dtype fleets are rejected up front (they can still run in
+    separate waves).
+    """
+    dtypes = {jnp.dtype(p.value_dtype) for p in programs}
+    if len(dtypes) > 1:
+        raise AdmissionError(
+            f"fleet mixes TV value dtypes {sorted(str(d) for d in dtypes)}; "
+            "co-scheduled jobs must share one value dtype"
+        )
+    return dtypes.pop()

@@ -1,0 +1,666 @@
+"""Epoch multiplexer: the fused phase-1/3 loop over many tenant programs.
+
+The paper's "work-together" principle (§3) says critical-path overhead
+should be paid by the entire system at once.  A solo ``HostEngine.run``
+already pays phase 1 (stack pop + launch) and phase 3 (scalar readback)
+once per epoch *for one program*; N concurrent tenants would pay N× that
+V_inf cost.  This module extends work-together **across tenants**:
+
+* :func:`fuse_programs` builds one fused :class:`Program` from N tenant
+  programs — task tables and map tables concatenate (task ids shifted by a
+  per-tenant offset), heap variables are namespaced ``j<k>/name``, and every
+  tenant task function runs behind a context shim that translates task ids,
+  map ids, and heap names back into the tenant's own vocabulary.  Phase 2
+  therefore needs *no new machinery*: the fused program is an ordinary
+  ``Program`` and both the masked and §5.4-compacted dispatches apply.
+
+* :class:`EpochMultiplexer` gives each admitted job a contiguous slot
+  region in one shared :class:`~repro.core.tvm.TVMState` (the region is the
+  job's private Task Vector: its layout is the solo run's, shifted by the
+  region base — see ``JobArena``), keeps one
+  :class:`~repro.core.scheduler.EpochScheduler` per job, and each *global*
+  epoch pops every ready job's frontier (``MuxPopPolicy`` selects the gang),
+  fuses the popped ranges into one launch with a per-lane epoch-number
+  vector, and reads back one :class:`~repro.core.tvm.MuxEpochSummary` for
+  the whole fleet.  The per-epoch dispatch + scalar readback is paid once
+  for the fleet instead of once per job, while per-job results stay
+  bit-identical to the solo runs.
+
+Completion is streamed: the moment a job's scheduler drains, its result is
+extracted from its region and the region is freed for re-admission (a new
+job reusing the *same* program template can be seeded into a freed region
+mid-flight, without retracing anything).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import tvm
+from ..core.engine import MapLauncher, _default_rank_fn
+from ..core.program import HeapVar, MapType, Program, TaskType, pack_args
+from ..core.scheduler import (
+    EpochScheduler,
+    NullStats,
+    RunStats,
+    RunStatsCollector,
+    StatsCollector,
+    resolve_mux_policy,
+    resolve_policy,
+    size_type_buckets,
+)
+from .jobs import (
+    Job,
+    JobFailure,
+    JobHandle,
+    JobResult,
+    JobStats,
+    JobStatus,
+    check_fleet_dtype,
+    validate_job,
+)
+
+
+# --------------------------------------------------------------------------
+# Tenant context shims: run a tenant task body against the fused program
+# --------------------------------------------------------------------------
+class _TenantEpochCtx:
+    """EpochCtx view in the tenant's own vocabulary.
+
+    Delegates every read/effect to the fused :class:`EpochCtx`, translating
+    task names/ids by the tenant's task-table offset, map names/ids by its
+    map-table offset, and heap names by its ``j<k>/`` namespace prefix.
+    """
+
+    __slots__ = ("_ctx", "_sub", "_task_off", "_map_off", "_prefix")
+
+    def __init__(self, ctx, sub: Program, task_off: int, map_off: int,
+                 prefix: str):
+        self._ctx = ctx
+        self._sub = sub
+        self._task_off = task_off
+        self._map_off = map_off
+        self._prefix = prefix
+
+    # reads -----------------------------------------------------------------
+    def argi(self, k: int):
+        return self._ctx.argi(k)
+
+    def argf(self, k: int):
+        return self._ctx.argf(k)
+
+    @property
+    def slot(self):
+        return self._ctx.slot
+
+    @property
+    def child_count(self):
+        return self._ctx.child_count
+
+    def child_values(self, n: int):
+        # slice the fused value rows down to the tenant's own width so a
+        # width-w program sees exactly the (n, w) a solo run returns
+        return self._ctx.child_values(n)[:, : self._sub.value_width]
+
+    def read(self, name: str, index):
+        return self._ctx.read(self._prefix + name, index)
+
+    # effects ---------------------------------------------------------------
+    def _code(self, task):
+        if isinstance(task, str):
+            return self._task_off + self._sub.task_id(task)
+        return self._task_off + task
+
+    def fork(self, task, argi=(), argf=(), where=True):
+        self._ctx.fork(self._code(task), argi=argi, argf=argf, where=where)
+
+    def join(self, task, argi=(), argf=(), where=True):
+        self._ctx.join(self._code(task), argi=argi, argf=argf, where=where)
+
+    def emit(self, value, where=True):
+        # enforce the tenant's own value width (the fused width may be
+        # larger; a solo run would reject the overflow, so must we)
+        v = jnp.asarray(value).reshape(-1)
+        if v.shape[0] > self._sub.value_width:
+            raise ValueError("emit value wider than program.value_width")
+        self._ctx.emit(value, where=where)
+
+    def write(self, name: str, index, value, op: str = "set", where=True):
+        self._ctx.write(self._prefix + name, index, value, op=op, where=where)
+
+    def map(self, map_fn, argi=(), argf=(), where=True):
+        mid = (
+            self._sub.map_id(map_fn)
+            if isinstance(map_fn, str)
+            else int(map_fn)
+        )
+        self._ctx.map(self._map_off + mid, argi=argi, argf=argf, where=where)
+
+
+class _TenantMapCtx:
+    """MapCtx view with the tenant's heap namespace."""
+
+    __slots__ = ("_ctx", "_prefix")
+
+    def __init__(self, ctx, prefix: str):
+        self._ctx = ctx
+        self._prefix = prefix
+
+    def argi(self, k: int):
+        return self._ctx.argi(k)
+
+    def argf(self, k: int):
+        return self._ctx.argf(k)
+
+    @property
+    def eid(self):
+        return self._ctx.eid
+
+    def read(self, name: str, index):
+        return self._ctx.read(self._prefix + name, index)
+
+    def write(self, name: str, index, value, op: str = "set", where=True):
+        self._ctx.write(self._prefix + name, index, value, op=op, where=where)
+
+
+def _wrap_task(fn, sub: Program, task_off: int, map_off: int, prefix: str):
+    def wrapped(ctx, _fn=fn):
+        _fn(_TenantEpochCtx(ctx, sub, task_off, map_off, prefix))
+
+    return wrapped
+
+
+def _wrap_map(fn, prefix: str):
+    def wrapped(mctx, _fn=fn):
+        _fn(_TenantMapCtx(mctx, prefix))
+
+    return wrapped
+
+
+# --------------------------------------------------------------------------
+# Program fusion
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TenantSlot:
+    """One tenant's compile-time contribution to the fused program, plus its
+    slot region in the shared TV.  The region is sized by the job's quota at
+    fuse time; a later tenant re-admitted into this region may use less."""
+
+    index: int
+    program: Program
+    task_offset: int
+    map_offset: int
+    prefix: str
+    base: int
+    quota: int
+
+    @property
+    def end(self) -> int:
+        return self.base + self.quota
+
+
+def fuse_programs(
+    programs: Sequence[Program], quotas: Sequence[int]
+) -> Tuple[Program, List[TenantSlot]]:
+    """Concatenate N tenant programs into one fused :class:`Program`.
+
+    Argument-register widths and the value width are the fleet maxima (a
+    tenant's own args/emits occupy a prefix; the padding columns stay zero,
+    so the tenant-visible slice is bit-identical to solo).  The value dtype
+    must be uniform across the fleet (:func:`check_fleet_dtype`).
+    """
+    value_dtype = check_fleet_dtype(programs)
+    tasks: List[TaskType] = []
+    maps: List[MapType] = []
+    heap: List[HeapVar] = []
+    slots: List[TenantSlot] = []
+    base = 0
+    for j, (p, q) in enumerate(zip(programs, quotas)):
+        prefix = f"j{j}/"
+        slot = TenantSlot(
+            index=j, program=p, task_offset=len(tasks),
+            map_offset=len(maps), prefix=prefix, base=base, quota=int(q),
+        )
+        for t in p.tasks:
+            tasks.append(
+                TaskType(
+                    prefix + t.name,
+                    _wrap_task(t.fn, p, slot.task_offset, slot.map_offset,
+                               prefix),
+                )
+            )
+        for m in p.maps:
+            maps.append(
+                MapType(
+                    prefix + m.name,
+                    _wrap_map(m.fn, prefix),
+                    domain=m.domain,
+                    max_domain=m.max_domain,
+                )
+            )
+        for hv in p.heap:
+            heap.append(HeapVar(prefix + hv.name, hv.shape, hv.dtype))
+        slots.append(slot)
+        base += int(q)
+
+    fused = Program(
+        name="mux[" + "+".join(p.name for p in programs) + "]",
+        tasks=tuple(tasks),
+        n_arg_i=max(p.n_arg_i for p in programs),
+        n_arg_f=max(p.n_arg_f for p in programs),
+        value_width=max(p.value_width for p in programs),
+        value_dtype=value_dtype,
+        maps=tuple(maps),
+        heap=tuple(heap),
+    )
+    return fused, slots
+
+
+# --------------------------------------------------------------------------
+# The multiplexer
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Region:
+    """Runtime state of one slot region: the tenant currently in it (if
+    any), its scheduler stacks, and its solo-comparable stats."""
+
+    slot: TenantSlot
+    handle: Optional[JobHandle] = None
+    sched: Optional[EpochScheduler] = None
+    stats: Optional[JobStats] = None
+    active_quota: int = 0
+
+    @property
+    def running(self) -> bool:
+        return (
+            self.handle is not None
+            and self.handle.status is JobStatus.RUNNING
+        )
+
+
+class EpochMultiplexer:
+    """Co-schedule a fleet of jobs inside one shared TVM.
+
+    Each global epoch: select a gang of ready jobs (``pop_policy``), pop one
+    dispatch from each job's own scheduler, fuse the ranges into a single
+    launch over their covering span with a per-lane epoch-number vector
+    (lanes outside every popped range carry 0 and stay inactive), commit
+    with the :class:`~repro.core.tvm.JobArena` segmented allocator, and read
+    back one fused :class:`~repro.core.tvm.MuxEpochSummary`.  Dispatch +
+    readback are counted once per global epoch — the fleet's V_inf — while
+    each job's scheduler sees exactly the solo sequence of pops and pushes.
+    """
+
+    _MAX_STEP_CACHE = 256  # distinct (P, buckets) jit specializations kept
+
+    def __init__(
+        self,
+        handles: Sequence[JobHandle],
+        capacity: Optional[int] = None,
+        dispatch: Any = "masked",
+        coalesce: bool = True,
+        pop_policy: Any = "fuse_all",
+        gang: int = 0,
+        collect_stats: bool = True,
+        stats_factory=None,
+        rank_fn=None,
+    ):
+        if not handles:
+            raise ValueError("EpochMultiplexer needs at least one job")
+        jobs = [h.job for h in handles]
+        quota_total = sum(j.quota for j in jobs)
+        self.capacity = int(capacity) if capacity else quota_total
+        if quota_total > self.capacity:
+            raise ValueError(
+                f"sum of job quotas ({quota_total}) exceeds TV capacity "
+                f"({self.capacity})"
+            )
+        for j in jobs:
+            validate_job(j, self.capacity)
+        self.policy = resolve_policy(dispatch)
+        self.pop_policy = resolve_mux_policy(pop_policy, gang)
+        self.coalesce = coalesce
+        self._rank_fn = rank_fn or _default_rank_fn
+        self._stats_factory = stats_factory
+        self._collect_stats = collect_stats
+
+        self.program, self._slots = fuse_programs(
+            [j.program for j in jobs], [j.quota for j in jobs]
+        )
+        self._task_names = [t.name for t in self.program.tasks]
+        self._maps = MapLauncher(self.program)
+        self._col = self._collector()
+        self._step_cache: Dict[Any, Any] = {}
+        self._compact_cache: Dict[int, Any] = {}
+        self._rotor = 0
+        self._global_epochs = 0
+
+        self._init_fleet(handles)
+
+    # ------------------------------------------------------------ plumbing
+    def _collector(self) -> StatsCollector:
+        if self._stats_factory is not None:
+            return self._stats_factory()
+        return RunStatsCollector() if self._collect_stats else NullStats()
+
+    def _init_fleet(self, handles: Sequence[JobHandle]) -> None:
+        """Build the shared TVM state, arena, heap, and per-job schedulers."""
+        fused, C = self.program, self.capacity
+        J = len(self._slots)
+        npdtype = jnp.dtype(fused.value_dtype)
+        task = np.zeros(C, np.int32)
+        argi = np.zeros((C, fused.n_arg_i), np.int32)
+        argf = np.zeros((C, fused.n_arg_f), np.float32)
+        epoch = np.zeros(C, np.int32)
+        value = np.zeros((C, fused.value_width), npdtype)
+        slot_job = np.full(C, J, np.int32)
+
+        self._regions: List[_Region] = []
+        self._heap: Dict[str, jnp.ndarray] = {}
+        for slot, h in zip(self._slots, handles):
+            job = h.job
+            slot_job[slot.base : slot.end] = slot.index
+            tid = slot.task_offset + slot.program.task_id(job.initial.task)
+            ai, af = pack_args(fused, job.initial.argi, job.initial.argf)
+            task[slot.base] = tid
+            argi[slot.base] = ai
+            argf[slot.base] = af
+            epoch[slot.base] = 1
+            for k, v in slot.program.init_heap(**dict(job.heap_init)).items():
+                self._heap[slot.prefix + k] = v
+            sched = EpochScheduler(coalesce=self.coalesce)
+            sched.reset(cen=1, start=slot.base, count=1)
+            h.status = JobStatus.RUNNING
+            self._regions.append(
+                _Region(
+                    slot=slot, handle=h, sched=sched, stats=JobStats(),
+                    active_quota=job.quota,
+                )
+            )
+
+        self._state = tvm.TVMState(
+            task=jnp.asarray(task),
+            argi=jnp.asarray(argi),
+            argf=jnp.asarray(argf),
+            epoch=jnp.asarray(epoch),
+            value=jnp.asarray(value),
+            child_base=jnp.zeros((C,), jnp.int32),
+            child_count=jnp.zeros((C,), jnp.int32),
+            next_free=jnp.asarray(max(s.base for s in self._slots) + 1,
+                                  jnp.int32),
+        )
+        self._arena = tvm.JobArena(
+            slot_job=jnp.asarray(slot_job),
+            base=jnp.asarray([s.base for s in self._slots], jnp.int32),
+            end=jnp.asarray([s.end for s in self._slots], jnp.int32),
+            next=jnp.asarray([s.base + 1 for s in self._slots], jnp.int32),
+        )
+
+    # ----------------------------------------------------------- jit steps
+    def _get_step(self, P: int):
+        """Masked fused step: full covering span, per-lane epoch numbers."""
+        key = ("m", P)
+        if key not in self._step_cache:
+            program = self.program
+
+            def step(state, heap, arena, lo, cen_lane):
+                idx = lo + jnp.arange(P, dtype=jnp.int32)
+                cidx = jnp.clip(idx, 0, state.capacity - 1)
+                active = (cen_lane > 0) & (state.epoch[cidx] == cen_lane)
+                # fused fleets have many task types but type-homogeneous
+                # epochs stay common, so idle types skip via lax.cond
+                per_type, _ = tvm.trace_tasks(
+                    program, state, heap, idx, active, skip_idle_types=True
+                )
+                return tvm.commit_epoch(
+                    program, state, heap, idx, active, per_type, cen_lane,
+                    arena=arena,
+                )
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    def _get_compact(self, P: int):
+        """Compaction pass over the fused span (one dispatch + count
+        readback, exactly the solo §5.4 trade)."""
+        if P not in self._compact_cache:
+            program, rank_fn = self.program, self._rank_fn
+
+            def cfn(state, lo, cen_lane):
+                idx = lo + jnp.arange(P, dtype=jnp.int32)
+                cidx = jnp.clip(idx, 0, state.capacity - 1)
+                active = (cen_lane > 0) & (state.epoch[cidx] == cen_lane)
+                return tvm.compact_types(
+                    program, state, idx, active, rank_fn=rank_fn
+                )
+
+            self._compact_cache[P] = jax.jit(cfn)
+        return self._compact_cache[P]
+
+    def _get_compacted_step(self, P: int, buckets: Tuple[int, ...]):
+        key = ("c", P, buckets)
+        if key not in self._step_cache:
+            while len(self._step_cache) >= self._MAX_STEP_CACHE:
+                self._step_cache.pop(next(iter(self._step_cache)))
+            program = self.program
+
+            def step(state, heap, arena, lo, count, cen_lane, perm, toffs,
+                     tcounts):
+                per_type, idx, active = tvm.trace_tasks_compacted(
+                    program, state, heap, lo, count, cen_lane,
+                    perm, toffs, tcounts, buckets,
+                )
+                return tvm.commit_epoch(
+                    program, state, heap, idx, active, per_type, cen_lane,
+                    arena=arena,
+                )
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    # ------------------------------------------------------------ stepping
+    @property
+    def live(self) -> bool:
+        return any(r.running for r in self._regions)
+
+    def step(self) -> List[JobHandle]:
+        """Run one fused global epoch; return handles that completed."""
+        ready = [
+            j for j, r in enumerate(self._regions) if r.running and r.sched
+        ]
+        if not ready:
+            return []
+        depths = [len(self._regions[j].sched) for j in ready]
+        chosen = self.pop_policy.select(ready, depths, self._rotor)
+        self._rotor += 1
+        self._global_epochs += 1
+        col = self._col
+
+        pops = {j: self._regions[j].sched.pop() for j in chosen}
+        lo = min(d.start for d in pops.values())
+        hi = max(d.start + d.count for d in pops.values())
+        P = self.policy.epoch_bucket(hi - lo)
+        cen_np = np.zeros(P, np.int32)
+        for d in pops.values():
+            cen_np[d.start - lo : d.start - lo + d.count] = d.cen
+        cen_lane = jnp.asarray(cen_np)
+        lo_j = jnp.asarray(lo, jnp.int32)
+
+        compacted = self.policy.name == "compacted"
+        by_type = None
+        shared_dispatches = 1
+        if compacted:
+            perm, counts_dev = self._get_compact(P)(
+                self._state, lo_j, cen_lane
+            )
+            counts = np.asarray(jax.device_get(counts_dev), np.int64)
+            col.dispatch()
+            col.transfer()
+            shared_dispatches += 1
+            buckets, toffs, launched, by_type = size_type_buckets(
+                self.policy, counts, self._task_names
+            )
+            step = self._get_compacted_step(P, buckets)
+            self._state, self._heap, summary, map_launches = step(
+                self._state, self._heap, self._arena, lo_j,
+                jnp.asarray(hi - lo, jnp.int32), cen_lane, perm,
+                jnp.asarray(toffs, jnp.int32), jnp.asarray(counts, jnp.int32),
+            )
+        else:
+            step = self._get_step(P)
+            self._state, self._heap, summary, map_launches = step(
+                self._state, self._heap, self._arena, lo_j, cen_lane
+            )
+            launched = P
+
+        # one fused readback for the whole fleet (the cross-tenant V_inf win)
+        job_forks, job_join, job_active, job_overflow, job_next, map_sched = (
+            jax.device_get(
+                (
+                    summary.job_forks, summary.job_join, summary.job_active,
+                    summary.job_overflow, summary.job_next,
+                    summary.map_scheduled,
+                )
+            )
+        )
+        col.dispatch()
+        col.transfer()
+        self._arena = dataclasses.replace(self._arena, next=summary.job_next)
+
+        done: List[JobHandle] = []
+        for j in chosen:
+            r = self._regions[j]
+            d = pops[j]
+            if bool(job_overflow[j]):
+                r.handle.error = JobFailure(
+                    f"job {r.handle.job.name!r} overflowed its region: "
+                    f"quota={r.active_quota}"
+                )
+                r.handle.status = JobStatus.FAILED
+                done.append(self._release(j))
+                continue
+            if bool(job_join[j]):
+                r.sched.push_join(d.cen, d.start, d.count)
+            forks = int(job_forks[j])
+            r.sched.push_forked(d.cen + 1, int(job_next[j]) - forks, forks)
+            st = r.stats
+            st.epochs += 1
+            st.tasks_executed += int(job_active[j])
+            st.total_forks += forks
+            st.peak_tv_slots = max(
+                st.peak_tv_slots, int(job_next[j]) - r.slot.base
+            )
+            st.shared_dispatches += shared_dispatches
+            st.shared_transfers += shared_dispatches
+
+        if bool(map_sched):
+            self._heap = self._maps.run(map_launches, self._heap, col)
+
+        col.epoch(self._global_epochs,
+                  sum(d.n_ranges for d in pops.values()))
+        col.lanes(int(job_active.sum()), launched, by_type)
+        col.forks(int(job_forks.sum()))
+        col.tv_peak(int(job_next.max()))
+
+        for j in chosen:
+            r = self._regions[j]
+            if r.running and not r.sched:
+                done.append(self._finalize(j))
+        return done
+
+    def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
+        """Drive every admitted job to completion; return finished handles."""
+        out: List[JobHandle] = []
+        while self.live:
+            if self._global_epochs >= max_epochs:
+                raise RuntimeError(f"exceeded max_epochs={max_epochs}")
+            out.extend(self.step())
+        return out
+
+    def stats(self) -> RunStats:
+        """Fleet-level stats: V_inf terms counted once per global epoch."""
+        return self._col.result()
+
+    # ------------------------------------------------- completion / reuse
+    def _finalize(self, j: int) -> JobHandle:
+        """Extract the region's solo-equivalent result; free the region."""
+        r = self._regions[j]
+        s = r.slot
+        sub = s.program
+        value = self._state.value[
+            s.base : s.base + r.active_quota, : sub.value_width
+        ]
+        heap = {
+            hv.name: self._heap[s.prefix + hv.name] for hv in sub.heap
+        }
+        r.handle.result = JobResult(heap=heap, value=value, stats=r.stats)
+        r.handle.status = JobStatus.DONE
+        return self._release(j)
+
+    def _release(self, j: int) -> JobHandle:
+        r = self._regions[j]
+        h = r.handle
+        r.handle = None
+        r.sched = None
+        r.stats = None
+        r.active_quota = 0
+        return h
+
+    def admit(self, handle: JobHandle) -> bool:
+        """Seed a queued job into a freed region, mid-flight.
+
+        Only a region fused for the *same program template* can be reused
+        (the fused task table is compiled in); the new job may carry its own
+        initial task, heap init, and a quota up to the region size.  Returns
+        False when no compatible free region exists.
+        """
+        job = handle.job
+        for r in self._regions:
+            if r.handle is not None:
+                continue
+            s = r.slot
+            if s.program is not job.program and s.program != job.program:
+                continue
+            if job.quota > s.quota:
+                continue
+            self._seed_region(r, handle)
+            return True
+        return False
+
+    def _seed_region(self, r: _Region, handle: JobHandle) -> None:
+        """Clear a freed region and seed the new tenant's root task."""
+        job = handle.job
+        s = r.slot
+        sub = s.program
+        sl = slice(s.base, s.end)
+        tid = s.task_offset + sub.task_id(job.initial.task)
+        ai, af = pack_args(self.program, job.initial.argi, job.initial.argf)
+        st = self._state
+        self._state = tvm.TVMState(
+            task=st.task.at[sl].set(0).at[s.base].set(tid),
+            argi=st.argi.at[sl].set(0).at[s.base].set(jnp.asarray(ai)),
+            argf=st.argf.at[sl].set(0.0).at[s.base].set(jnp.asarray(af)),
+            epoch=st.epoch.at[sl].set(0).at[s.base].set(1),
+            value=st.value.at[sl].set(0),
+            child_base=st.child_base.at[sl].set(0),
+            child_count=st.child_count.at[sl].set(0),
+            next_free=st.next_free,
+        )
+        self._arena = dataclasses.replace(
+            self._arena,
+            end=self._arena.end.at[s.index].set(s.base + job.quota),
+            next=self._arena.next.at[s.index].set(s.base + 1),
+        )
+        for k, v in sub.init_heap(**dict(job.heap_init)).items():
+            self._heap[s.prefix + k] = v
+        sched = EpochScheduler(coalesce=self.coalesce)
+        sched.reset(cen=1, start=s.base, count=1)
+        r.handle = handle
+        r.sched = sched
+        r.stats = JobStats()
+        r.active_quota = job.quota
+        handle.status = JobStatus.RUNNING

@@ -90,6 +90,16 @@ def test_push_forked_ignores_empty_range():
     assert not s
 
 
+def test_pop_on_empty_scheduler_raises_clear_error():
+    s = EpochScheduler()
+    with pytest.raises(RuntimeError, match="scheduler empty"):
+        s.pop()
+    s.push_forked(2, 0, 1)
+    s.pop()
+    with pytest.raises(RuntimeError, match="already drained"):
+        s.pop()
+
+
 # -------------------------------------------------------------- policies
 def test_launch_bucket_sizing():
     assert launch_bucket(0) == 8
@@ -113,6 +123,26 @@ def test_policy_resolution():
 def test_device_engine_rejects_compacted():
     with pytest.raises(ValueError):
         DeviceEngine(fib.PROGRAM, dispatch="compacted")
+
+
+def test_mux_pop_policy_resolution_and_selection():
+    from repro.core import FUSE_ALL, MuxPopPolicy, resolve_mux_policy
+
+    # an explicit gang bound overrides a pre-built instance's
+    assert resolve_mux_policy(FUSE_ALL, 2).gang == 2
+    assert resolve_mux_policy(FUSE_ALL).gang == 0
+    assert resolve_mux_policy("round_robin", 3) == MuxPopPolicy("round_robin", 3)
+    with pytest.raises(ValueError):
+        resolve_mux_policy("bogus")
+
+    ready, depths = [0, 1, 2, 3], [5, 1, 9, 2]
+    assert MuxPopPolicy("fuse_all").select(ready, depths, 0) == ready
+    rr = MuxPopPolicy("round_robin", 2)
+    assert rr.select(ready, depths, 0) == [0, 1]
+    assert rr.select(ready, depths, 1) == [1, 2]
+    assert rr.select(ready, depths, 5) == [1, 2]  # rotor wraps
+    df = MuxPopPolicy("deepest_first", 2)
+    assert df.select(ready, depths, 0) == [2, 0]  # depths 9, 5 first
 
 
 # -------------------------------- masked vs compacted: every app, identical
@@ -167,6 +197,65 @@ def test_compacted_with_pallas_interpret_kernels():
 
 
 # ----------------------------------------------------------------- stats
+def test_ranges_coalesced_accounting():
+    """RunStatsCollector credits every extra same-CEN range merged into a
+    pop — the work-together fusion count — while NullStats ignores it."""
+    col = RunStatsCollector()
+    col.epoch(cen=3, n_ranges=3)  # 2 extra ranges merged
+    col.epoch(cen=2, n_ranges=1)  # plain pop
+    col.epoch(cen=1, n_ranges=4)
+    stats = col.result()
+    assert stats.epochs == 3
+    assert stats.ranges_coalesced == (3 - 1) + (1 - 1) + (4 - 1)
+
+    null = NullStats()
+    null.epoch(cen=3, n_ranges=5)
+    assert null.result().ranges_coalesced == 0
+
+
+def test_coalescing_scheduler_feeds_ranges_into_stats():
+    """Drive a coalescing scheduler's pops straight into the collector:
+    the merged-range count must match what the scheduler actually fused."""
+    s = EpochScheduler(coalesce=True)
+    s.push_forked(2, 0, 2)
+    s.push_forked(3, 4, 2)
+    s.push_forked(3, 8, 2)
+    s.push_forked(3, 2, 2)
+    col = RunStatsCollector()
+    while s:
+        d = s.pop()
+        col.epoch(d.cen, d.n_ranges)
+    stats = col.result()
+    assert stats.epochs == 2         # three CEN-3 ranges fused into one pop
+    assert stats.ranges_coalesced == 2
+
+
+def test_occupancy_by_type_accounting():
+    """occupancy_by_type is per-type active/launched from the lanes() hook;
+    types never reported stay absent rather than defaulting to 0/0."""
+    col = RunStatsCollector()
+    col.lanes(5, 8, {"a": (3, 4), "b": (2, 4)})
+    col.lanes(3, 4, {"a": (3, 4)})
+    stats = col.result()
+    assert stats.tasks_executed == 8 and stats.lanes_launched == 12
+    assert stats.tasks_by_type == {"a": 6, "b": 2}
+    assert stats.lanes_by_type == {"a": 8, "b": 4}
+    occ = stats.occupancy_by_type
+    assert occ == {"a": 6 / 8, "b": 2 / 4}
+    assert "c" not in occ
+
+
+def test_engine_occupancy_consistent_with_totals():
+    """Under the compacted dispatch the per-type lane ledger must tile the
+    global counters exactly: sums over types equal tasks/lanes launched."""
+    _, _, stats = get_case("fib").run(dispatch="compacted")
+    assert sum(stats.tasks_by_type.values()) == stats.tasks_executed
+    assert sum(stats.lanes_by_type.values()) == stats.lanes_launched
+    for t, occ in stats.occupancy_by_type.items():
+        assert occ == stats.tasks_by_type[t] / stats.lanes_by_type[t]
+        assert 0.0 < occ <= 1.0
+
+
 def test_null_stats_counts_only_control_terms():
     _, _, stats = HostEngine(
         fib.PROGRAM, capacity=1 << 10, collect_stats=False

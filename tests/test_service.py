@@ -1,0 +1,323 @@
+"""Epoch-multiplexing job service tests (DESIGN.md §8).
+
+The load-bearing property: co-scheduling N independent programs in one
+shared TVM must be *observationally invisible* to each tenant — per-job
+heaps, TV-value blocks, and work stats bit-identical to a solo
+``HostEngine.run`` with ``capacity=quota`` — while the fleet pays strictly
+fewer fused dispatches + scalar readbacks than the sum of the solo runs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import fib, get_fleet
+from repro.core import HostEngine, Program, TaskType, InitialTask
+from repro.service import (
+    AdmissionError,
+    EpochMultiplexer,
+    Job,
+    JobFailure,
+    JobHandle,
+    JobService,
+    JobStatus,
+    fuse_programs,
+)
+
+
+def _solo(case, quota, dispatch="masked"):
+    eng = HostEngine(case.program, capacity=quota, dispatch=dispatch)
+    return eng.run(case.initial, heap_init=dict(case.heap_init) or None)
+
+
+def _assert_job_matches_solo(handle, solo_heap, solo_value, name):
+    r = handle.result
+    np.testing.assert_array_equal(
+        np.asarray(r.value), np.asarray(solo_value), err_msg=f"{name}:value"
+    )
+    assert set(r.heap) == set(solo_heap)
+    for k in solo_heap:
+        np.testing.assert_array_equal(
+            np.asarray(r.heap[k]), np.asarray(solo_heap[k]),
+            err_msg=f"{name}:{k}",
+        )
+
+
+# ------------------------------------------- the multi-tenant equivalence
+@pytest.mark.parametrize("dispatch", ["masked", "compacted"])
+def test_mixed_fleet_bit_identical_and_cheaper(dispatch):
+    """Acceptance: a mixed fleet of 3 registered apps through the service is
+    bit-identical per job to solo runs, with fleet V_inf (dispatches +
+    scalar transfers) strictly below the sum of the solo runs'."""
+    fleet = get_fleet("mixed3")
+    assert len(fleet) >= 3
+    solo = {}
+    solo_vinf = 0
+    for case, quota in fleet:
+        heap, value, stats = _solo(case, quota, dispatch)
+        solo[case.name] = (heap, value, stats)
+        solo_vinf += stats.dispatches + stats.scalar_transfers
+
+    svc = JobService(
+        capacity=sum(q for _, q in fleet), dispatch=dispatch
+    )
+    handles = [svc.submit_case(case, quota=q) for case, q in fleet]
+    done = svc.drain()
+    assert {h.job_id for h in done} == {h.job_id for h in handles}
+
+    for h in handles:
+        sh, sv, ss = solo[h.job.name]
+        assert h.status is JobStatus.DONE
+        _assert_job_matches_solo(h, sh, sv, h.job.name)
+        # per-job work accounting matches the solo run exactly
+        assert h.result.stats.epochs == ss.epochs
+        assert h.result.stats.tasks_executed == ss.tasks_executed
+        assert h.result.stats.total_forks == ss.total_forks
+        assert h.result.stats.peak_tv_slots == ss.peak_tv_slots
+
+    fs = svc.stats()
+    assert fs.dispatches + fs.scalar_transfers < solo_vinf
+    # fused global epochs = max over members, not the sum
+    assert fs.epochs == max(s[2].epochs for s in solo.values())
+    # cross-job frontier fusion is recorded as coalesced ranges
+    assert fs.ranges_coalesced > 0
+
+
+def test_fused_maps_match_solo():
+    """A map-bearing tenant (mergesort bulk payloads) stays bit-identical
+    when its map launches run against the fused, namespaced heap."""
+    fleet = [(c, q) for c, q in get_fleet("mixed4")
+             if c.name in ("mergesort", "fib")]
+    solo = {c.name: _solo(c, q) for c, q in fleet}
+    svc = JobService(capacity=sum(q for _, q in fleet))
+    handles = [svc.submit_case(c, quota=q) for c, q in fleet]
+    svc.drain()
+    for h in handles:
+        sh, sv, ss = solo[h.job.name]
+        _assert_job_matches_solo(h, sh, sv, h.job.name)
+        assert h.result.stats.epochs == ss.epochs
+    # the sorted output really is sorted (guard against trivially-equal
+    # garbage comparisons)
+    ms = [h for h in handles if h.job.name == "mergesort"][0]
+    n = ms.result.heap["inp"].shape[0]
+    out = np.asarray(ms.result.heap["src"])[:n]
+    np.testing.assert_array_equal(out, np.sort(np.asarray(ms.result.heap["inp"])))
+
+
+@pytest.mark.parametrize(
+    "policy,gang", [("round_robin", 1), ("round_robin", 2),
+                    ("deepest_first", 2)]
+)
+def test_pop_policies_preserve_results(policy, gang):
+    """Gang-limited pop policies change only the fusion schedule, never any
+    job's results."""
+    fleet = get_fleet("mixed3")
+    solo = {c.name: _solo(c, q) for c, q in fleet}
+    svc = JobService(
+        capacity=sum(q for _, q in fleet), pop_policy=policy, gang=gang
+    )
+    handles = [svc.submit_case(c, quota=q) for c, q in fleet]
+    svc.drain()
+    for h in handles:
+        sh, sv, _ = solo[h.job.name]
+        _assert_job_matches_solo(h, sh, sv, f"{policy}:{h.job.name}")
+
+
+def test_gang1_round_robin_is_fair_serialization():
+    """gang=1 degenerates to interleaved solo execution: fleet dispatches
+    equal the sum of per-job epochs (no fusion), and rotation gives every
+    job progress (completion order follows job size)."""
+    fleet = get_fleet("mixed3")
+    solo_epochs = {c.name: _solo(c, q)[2].epochs for c, q in fleet}
+    svc = JobService(
+        capacity=sum(q for _, q in fleet), pop_policy="round_robin", gang=1
+    )
+    for c, q in fleet:
+        svc.submit_case(c, quota=q)
+    svc.drain()
+    assert svc.stats().epochs == sum(solo_epochs.values())
+
+
+# --------------------------------------------------- streaming / reuse
+def test_streaming_admission_reuses_regions():
+    """More jobs than regions: completed regions are reclaimed and queued
+    jobs of the same program template are seeded mid-flight."""
+    ns = (8, 9, 10, 11, 12)
+    svc = JobService(capacity=1024, max_jobs=2)
+    handles = [
+        svc.submit(fib.PROGRAM, fib.initial(n), quota=512, name=f"fib{n}")
+        for n in ns
+    ]
+    seen = []
+    for h in svc.completions():  # streaming completion order
+        seen.append(h.job.name)
+    assert sorted(seen) == sorted(f"fib{n}" for n in ns)
+    for h, n in zip(handles, ns):
+        assert h.status is JobStatus.DONE
+        assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
+    # 5 jobs through 2 regions: at least one region was reseeded in place
+    # (fib8/fib9 finish first; fib10+ ride the same multiplexer)
+    assert len(seen) == len(ns)
+
+
+def test_result_drives_single_job():
+    svc = JobService(capacity=512)
+    h = svc.submit(fib.PROGRAM, fib.initial(9), quota=256)
+    assert svc.poll(h) is JobStatus.QUEUED
+    res = svc.result(h)
+    assert svc.poll(h) is JobStatus.DONE
+    assert int(np.asarray(res.value)[0, 0]) == fib.fib_reference(9)
+
+
+# -------------------------------------------------- admission / failure
+def test_quota_overflow_fails_only_that_job():
+    """A job outgrowing its own region fails alone; its neighbour's result
+    is untouched (bounded scatters: no cross-region corruption)."""
+    svc = JobService(capacity=1024)
+    bad = svc.submit(fib.PROGRAM, fib.initial(12), quota=8, name="bad")
+    good = svc.submit(fib.PROGRAM, fib.initial(10), quota=512, name="good")
+    svc.drain()
+    assert bad.status is JobStatus.FAILED
+    assert isinstance(bad.error, JobFailure)
+    assert good.status is JobStatus.DONE
+    assert int(np.asarray(good.result.value)[0, 0]) == fib.fib_reference(10)
+    with pytest.raises(JobFailure):
+        svc.result(bad)
+
+
+def test_admission_rejects_bad_jobs():
+    svc = JobService(capacity=1024)
+    with pytest.raises(AdmissionError):  # quota above service capacity
+        svc.submit(fib.PROGRAM, fib.initial(8), quota=4096)
+    with pytest.raises(AdmissionError):  # quota below the minimum
+        svc.submit(fib.PROGRAM, fib.initial(8), quota=1)
+    with pytest.raises(AdmissionError):  # unknown seed task
+        svc.submit(fib.PROGRAM, InitialTask(task="nope", argi=(1,)), quota=64)
+
+
+def _f32_program():
+    def _emit(ctx):
+        ctx.emit(jnp.float32(1.5))
+
+    return Program(
+        name="f32emit", tasks=(TaskType("emit", _emit),),
+        value_dtype=jnp.float32,
+    )
+
+
+def test_mixed_value_dtypes_split_into_waves():
+    """Fleets must share one TV value dtype; incompatible jobs are not
+    rejected — the service runs them in a later wave."""
+    with pytest.raises(AdmissionError):
+        fuse_programs([fib.PROGRAM, _f32_program()], [64, 64])
+    svc = JobService(capacity=1024, max_jobs=4)
+    a = svc.submit(fib.PROGRAM, fib.initial(8), quota=256, name="i32")
+    b = svc.submit(_f32_program(), InitialTask(task="emit"), quota=64,
+                   name="f32")
+    svc.drain()
+    assert a.status is JobStatus.DONE and b.status is JobStatus.DONE
+    assert int(np.asarray(a.result.value)[0, 0]) == fib.fib_reference(8)
+    assert float(np.asarray(b.result.value)[0, 0]) == 1.5
+    # two waves ran: one per dtype
+    assert svc.stats().epochs > 0
+
+
+def _w1_shape_sensitive_program():
+    """value_width=1 program whose result depends on the *row shape* of
+    child_values — catches fused-width leakage into a tenant's view."""
+
+    def _root(ctx):
+        leaf = ctx.argi(0) < 0
+        ctx.emit(ctx.argi(0), where=leaf)
+        ctx.fork("root", argi=(-1,), where=~leaf)
+        ctx.fork("root", argi=(-2,), where=~leaf)
+        ctx.join("gather", where=~leaf)
+
+    def _gather(ctx):
+        cv = ctx.child_values(2)  # solo shape (2, 1)
+        # flat index 1 is the *second child* only at width 1
+        ctx.emit(cv.reshape(-1)[1])
+
+    return Program(
+        name="w1shape",
+        tasks=(TaskType("root", _root), TaskType("gather", _gather)),
+        n_arg_i=1,
+    )
+
+
+def _w2_program():
+    def _emit2(ctx):
+        ctx.emit(jnp.asarray([3, 4], jnp.int32))
+
+    return Program(
+        name="w2", tasks=(TaskType("emit2", _emit2),), value_width=2
+    )
+
+
+def test_mixed_value_width_tenant_sees_own_shape():
+    """A width-1 tenant co-scheduled with a width-2 tenant must see its own
+    (n, 1) child_values rows, not the fused (n, 2)."""
+    w1, w2 = _w1_shape_sensitive_program(), _w2_program()
+    solo = HostEngine(w1, capacity=16).run(InitialTask(task="root", argi=(0,)))
+    svc = JobService(capacity=64, max_jobs=2)
+    a = svc.submit(w1, InitialTask(task="root", argi=(0,)), quota=16)
+    b = svc.submit(w2, InitialTask(task="emit2"), quota=8)
+    svc.drain()
+    np.testing.assert_array_equal(
+        np.asarray(a.result.value), np.asarray(solo[1])
+    )
+    assert int(np.asarray(a.result.value)[0, 0]) == -2  # the second child
+    np.testing.assert_array_equal(
+        np.asarray(b.result.value)[0], np.asarray([3, 4], np.int32)
+    )
+
+
+def test_tenant_emit_wider_than_own_width_rejected():
+    """A tenant emitting wider than its own value_width must fail exactly
+    as it would solo, even when the fused width could hold it."""
+
+    def _bad(ctx):
+        ctx.emit(jnp.asarray([1, 2], jnp.int32))  # width 2 in a width-1 prog
+
+    bad = Program(name="bad", tasks=(TaskType("bad", _bad),))
+    svc = JobService(capacity=64, max_jobs=2)
+    svc.submit(bad, InitialTask(task="bad"), quota=8)
+    svc.submit(_w2_program(), InitialTask(task="emit2"), quota=8)
+    with pytest.raises(ValueError, match="wider than"):
+        svc.drain()
+
+
+# ----------------------------------------------------------- fusion unit
+def test_fuse_programs_namespacing():
+    fleet = get_fleet("mixed3")
+    programs = [c.program for c, _ in fleet]
+    fused, slots = fuse_programs(programs, [q for _, q in fleet])
+    assert len(fused.tasks) == sum(len(p.tasks) for p in programs)
+    assert fused.n_arg_i == max(p.n_arg_i for p in programs)
+    # tenant namespaces are disjoint and offsets index the fused table
+    for slot, p in zip(slots, programs):
+        for t in p.tasks:
+            fid = fused.task_id(slot.prefix + t.name)
+            assert fid == slot.task_offset + p.task_id(t.name)
+        for hv in p.heap:
+            assert any(f.name == slot.prefix + hv.name for f in fused.heap)
+    # regions tile the capacity contiguously
+    assert slots[0].base == 0
+    for a, b in zip(slots, slots[1:]):
+        assert b.base == a.end
+
+
+def test_multiplexer_direct_single_job_matches_engine():
+    """The multiplexer with J=1 is exactly a solo HostEngine."""
+    heap, value, stats = _solo_fib9 = (
+        HostEngine(fib.PROGRAM, capacity=256).run(fib.initial(9))
+    )
+    h = JobHandle(0, Job(fib.PROGRAM, fib.initial(9), quota=256))
+    mux = EpochMultiplexer([h])
+    mux.run()
+    np.testing.assert_array_equal(
+        np.asarray(h.result.value), np.asarray(value)
+    )
+    fs = mux.stats()
+    assert fs.epochs == stats.epochs
+    assert fs.dispatches == stats.dispatches
+    assert fs.scalar_transfers == stats.scalar_transfers
