@@ -10,6 +10,7 @@ from the dry-run artifacts, not timed here.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Callable, List, Tuple
 
@@ -20,6 +21,10 @@ ROWS: List[Tuple[str, float, str]] = []
 # set by main() from --dispatch; every HostEngine below follows it so the
 # whole harness can be A/B'd masked vs compacted (§5.4 contiguity)
 DISPATCH = "masked"
+
+# set by main() from --smoke: shrink every group to a CI-sized subset so the
+# workflow's benchmarks step can guard the rows against bit-rot in minutes
+SMOKE = False
 
 
 def _time(fn: Callable, repeats: int = 3) -> float:
@@ -40,7 +45,7 @@ def bench_fib():
     from repro.apps import fib
     from repro.core import HostEngine, DeviceEngine, run_oracle, compare
 
-    for n in (12, 14, 16):
+    for n in (10,) if SMOKE else (12, 14, 16):
         _, _, ostats = run_oracle(fib.PROGRAM, fib.initial(n), capacity=1 << 14)
 
         def run_host():
@@ -291,6 +296,20 @@ def bench_service():
         svc.drain()
         return svc
 
+    if SMOKE:
+        # smoke: only the x2 homogeneous point (compile-light, still
+        # exercises fusion + the V_inf accounting)
+        base = get_fleet("fib_fleet")[0]
+        svc = run_service([base] * 2)
+        fs = svc.stats()
+        t = _time(lambda: run_service([base] * 2), repeats=1)
+        row(
+            f"service_fibx2_{DISPATCH}", t * 1e6,
+            f"jobs=2;fleet_dispatches={fs.dispatches};"
+            f"dispatches_per_job={fs.dispatches / 2:.1f}",
+        )
+        return
+
     # mixed fleet vs sum-of-solo
     fleet = get_fleet("mixed3")
     solo_disp = solo_xfer = 0
@@ -323,6 +342,64 @@ def bench_service():
             f"jobs={n};fleet_dispatches={fs.dispatches};"
             f"us_per_job={t * 1e6 / n:.1f};"
             f"dispatches_per_job={fs.dispatches / n:.1f}",
+        )
+
+
+# ---------------------- device-resident fleet execution (DESIGN.md §9)
+def bench_device_service():
+    """Resident fleet vs host-mux vs sum-of-solo: the V_inf ladder.
+
+    Each ``device_service_*`` row runs the same fleet three ways — N solo
+    ``HostEngine`` runs (V_inf paid per job per epoch), the host-loop
+    multiplexer (paid once per fused global epoch), and the resident
+    ``lax.while_loop`` wave (paid once per *wave*: one dispatch + one
+    readback, O(1)) — and reports all three dispatch+transfer totals plus
+    the resident path's map-lane waste (its measurable work overhead).
+    """
+    from repro.apps import get_fleet
+    from repro.core import HostEngine
+    from repro.service import JobService
+
+    def run_svc(fleet, engine):
+        svc = JobService(
+            capacity=sum(q for _, q in fleet), engine=engine,
+            dispatch="masked" if engine == "device" else DISPATCH,
+        )
+        for case, quota in fleet:
+            svc.submit_case(case, quota=quota)
+        svc.drain()
+        return svc
+
+    if SMOKE:
+        fleets = [("fibx2", [get_fleet("fib_fleet")[0]] * 2)]
+    else:
+        fleets = [
+            ("mixed3", get_fleet("mixed3")),
+            ("fibx4", get_fleet("fib_fleet")),
+        ]
+    for fname, fleet in fleets:
+        solo_vinf = 0
+        for case, quota in fleet:
+            eng = HostEngine(case.program, capacity=quota, dispatch=DISPATCH)
+            _, _, s = eng.run(
+                case.initial, heap_init=dict(case.heap_init) or None
+            )
+            solo_vinf += s.dispatches + s.scalar_transfers
+        hs = run_svc(fleet, "host").stats()
+        ds = run_svc(fleet, "device").stats()
+        t_host = _time(lambda f=fleet: run_svc(f, "host"), repeats=1)
+        t_dev = _time(lambda f=fleet: run_svc(f, "device"), repeats=1)
+        host_vinf = hs.dispatches + hs.scalar_transfers
+        dev_vinf = ds.dispatches + ds.scalar_transfers
+        row(
+            f"device_service_{fname}", t_dev * 1e6,
+            f"jobs={len(fleet)};resident_vinf={dev_vinf};"
+            f"hostmux_vinf={host_vinf};solo_vinf={solo_vinf};"
+            f"vinf_vs_hostmux_x={host_vinf / max(1, dev_vinf):.1f};"
+            f"vinf_vs_solo_x={solo_vinf / max(1, dev_vinf):.1f};"
+            f"host_mux_us={t_host * 1e6:.1f};"
+            f"map_lanes_wasted={ds.map_lanes_wasted};"
+            f"map_util={ds.map_utilization:.3f}",
         )
 
 
@@ -396,13 +473,39 @@ BENCHES = {
     "overhead": bench_overhead,
     "dispatch": bench_dispatch,
     "service": bench_service,
+    "device_service": bench_device_service,
     "serving": bench_serving,
     "roofline": bench_roofline,
 }
 
+# the CI-sized subset --smoke restricts to (each group also shrinks its own
+# sizes when SMOKE is set)
+SMOKE_GROUPS = ("fib", "service", "device_service")
+
+
+def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
+    """Machine-readable artifact alongside the CSV stdout, so the perf
+    trajectory (V_inf ladders, utilization, map waste) is diffable across
+    PRs instead of living only in scrollback.  ``groups`` records which
+    benchmark groups actually ran — two artifacts are only comparable row
+    set to row set, never across different group selections."""
+    payload = {
+        "schema": "trees-bench-v1",
+        "dispatch": dispatch,
+        "smoke": smoke,
+        "groups": sorted(groups),
+        "rows": [
+            {"name": n, "us_per_call": round(us, 1), "derived": d}
+            for n, us, d in ROWS
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
 
 def main(argv=None) -> None:
-    global DISPATCH
+    global DISPATCH, SMOKE
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--dispatch", choices=("masked", "compacted"), default="masked",
@@ -414,13 +517,35 @@ def main(argv=None) -> None:
         "--only", nargs="+", choices=sorted(BENCHES), default=None,
         help="run only these benchmark groups",
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized subset: tiny problem sizes, groups "
+        f"{SMOKE_GROUPS} only (unless --only overrides)",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write the rows as a machine-readable JSON artifact; defaults "
+        "to BENCH_3.json for full or --smoke runs, off for --only subset "
+        "runs (pass a path to force, '' to disable)",
+    )
     args = ap.parse_args(argv)
     DISPATCH = args.dispatch
+    SMOKE = args.smoke
+    only = args.only or (list(SMOKE_GROUPS) if args.smoke else None)
+    ran = []
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and name not in args.only:
+        if only and name not in only:
             continue
+        ran.append(name)
         fn()
+    json_path = args.json
+    if json_path is None:
+        # don't silently clobber the cross-PR artifact with a subset or
+        # smoke run (CI's smoke job passes --json explicitly)
+        json_path = "" if (args.only or args.smoke) else "BENCH_3.json"
+    if json_path:
+        write_json(json_path, args.dispatch, args.smoke, ran)
 
 
 if __name__ == "__main__":

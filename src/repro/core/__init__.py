@@ -4,7 +4,15 @@
 # pipeline is layered (DESIGN.md section 1): engines (drivers) over the
 # scheduler (phase-1 policy: stacks, coalescing, dispatch sizing) over the
 # TVM (phase-2/3 execution substrate).
-from .engine import DeviceEngine, EngineError, HostEngine, MapLauncher, RunStats
+from .engine import (
+    DeviceEngine,
+    EngineError,
+    EpochLoop,
+    HostEngine,
+    MapLauncher,
+    ResidentCarry,
+    RunStats,
+)
 from .interp import OracleStats, run_oracle
 from .program import HeapVar, InitialTask, MapType, Program, TaskType
 from .analysis import OverheadReport, compare
@@ -18,6 +26,9 @@ from .scheduler import (
     NullStats,
     RunStatsCollector,
     StatsCollector,
+    batched_device_pop,
+    batched_device_push,
+    batched_device_stacks,
     launch_bucket,
     resolve_mux_policy,
     resolve_policy,
@@ -26,7 +37,9 @@ from .scheduler import (
 __all__ = [
     "DeviceEngine",
     "EngineError",
+    "EpochLoop",
     "HostEngine",
+    "ResidentCarry",
     "RunStats",
     "OracleStats",
     "run_oracle",
@@ -47,6 +60,9 @@ __all__ = [
     "NullStats",
     "RunStatsCollector",
     "StatsCollector",
+    "batched_device_pop",
+    "batched_device_push",
+    "batched_device_stacks",
     "launch_bucket",
     "resolve_mux_policy",
     "resolve_policy",

@@ -1,40 +1,45 @@
-"""TREES epoch engines: host-loop (paper-faithful) and on-device.
+"""TREES epoch engines: one ``EpochLoop`` driver core, many configurations.
 
-Both engines are thin drivers over the scheduling layer in ``scheduler.py``:
-the :class:`~repro.core.scheduler.EpochScheduler` owns the join/NDRange
-stacks, same-CEN range coalescing, and launch-bucket sizing (phase 1), and a
-pluggable :class:`~repro.core.scheduler.StatsCollector` owns the V1/V_inf
-accounting.  The engines only own *where* the loop runs.
+Every engine in this codebase is the same machine driven three ways.  The
+scheduling layer in ``scheduler.py`` owns phase-1 policy (join/NDRange
+stacks, same-CEN coalescing, launch-bucket sizing) and the V1/V_inf
+accounting; the TVM in ``tvm.py`` owns phase 2/3 execution.  This module
+owns the *driver*: :class:`EpochLoop` is the shared core — step builders
+(masked full-width, or the §5.4 compaction pass + dense per-type step), a
+readback policy (which end-of-epoch scalars the host fetches), and a
+termination predicate — and each engine is one configuration of it:
 
-``HostEngine`` reproduces the paper's CPU/GPU split: the Python host performs
-epoch phases 1 and 3 (stack bookkeeping, flag readback — the paper's
-``joinScheduled``/``mapScheduled``/``nextFreeCore`` transfers) and dispatches
-one jitted XLA program per epoch, sized by the dispatch policy.  Every
-host<->device scalar transfer in the paper has a counterpart here, so the
-paper's critical-path overhead V_inf stays measurable.  Two dispatch
-policies:
+  * :class:`HostEngine` — the paper-faithful CPU/GPU split: the Python host
+    performs phases 1 and 3 (stack bookkeeping, flag readback — the paper's
+    ``joinScheduled``/``mapScheduled``/``nextFreeCore`` transfers) and
+    dispatches one jitted XLA program per epoch.  Readback policy: the
+    :class:`~repro.core.tvm.EpochSummary` scalars, once per epoch.
+    Termination: the host scheduler drains.  Supports both the ``masked``
+    (seed) and ``compacted`` (§5.4 contiguity) dispatch policies.
 
-  * ``masked`` (seed behaviour) — the popped NDRange padded to a
-    power-of-two bucket; every task type executes full-width and masked.
-  * ``compacted`` — the §5.4 contiguity principle: a compaction pass
-    (``kernels.fork_compact.type_rank`` + ``fork_scan``) scatters active
-    lanes into contiguous per-type ranges, and each type launches as one
-    dense lane-exact slice.  Results are bit-identical to ``masked`` (the
-    commit still sees NDRange lane order); only lane utilization and the
-    V_inf dispatch/transfer counts differ — exactly the §5.4 trade.
+  * :class:`DeviceEngine` — the beyond-paper resident variant ("future
+    chips with tighter CPU/GPU coupling"): the entire epoch loop runs
+    on-device inside one ``lax.while_loop``, with the stacks as
+    fixed-capacity device arrays (``scheduler.batched_device_stacks`` with
+    ``n_regions=1``).  Readback policy: nothing per epoch — every scalar a
+    host loop would fetch accumulates in the :class:`ResidentCarry` and is
+    read once at the end (dispatches = transfers = 1).  Termination: the
+    traced all-stacks-empty ``while_loop`` cond.  Masked dispatch only
+    (launch shapes must be fixed at trace time).
 
-``DeviceEngine`` is the beyond-paper variant the paper itself predicts
-("future chips with tighter CPU/GPU coupling"): the entire epoch loop runs
-on-device inside one ``lax.while_loop`` with the join/NDRange stacks as fixed
-capacity device arrays (``scheduler.device_stacks``), eliminating the
-per-epoch dispatch + transfer from the critical path entirely.  Because every
-launch shape is fixed at trace time, it supports only the ``masked``
-dispatch.
+  * the service-layer drivers (``repro.service.multiplexer``) — the host
+    ``EpochMultiplexer`` and the resident ``DeviceMultiplexer`` reuse the
+    same two configurations with a :class:`~repro.core.tvm.JobArena` and a
+    per-lane epoch-number vector, fusing many tenant regions into each
+    epoch.  The resident fleet is the work-together principle taken to its
+    limit: the whole fleet's critical-path overhead is one dispatch + one
+    readback per *wave*.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +47,7 @@ import numpy as np
 
 from . import tvm
 from .program import InitialTask, Program
-from .scheduler import (  # noqa: F401  (RunStats re-exported for back-compat)
+from .scheduler import (  # noqa: F401  (re-exports kept for back-compat)
     COMPACTED,
     MASKED,
     DispatchPolicy,
@@ -51,6 +56,9 @@ from .scheduler import (  # noqa: F401  (RunStats re-exported for back-compat)
     RunStats,
     RunStatsCollector,
     StatsCollector,
+    batched_device_pop,
+    batched_device_push,
+    batched_device_stacks,
     device_push,
     device_stacks,
     launch_bucket,
@@ -63,21 +71,12 @@ class EngineError(RuntimeError):
     pass
 
 
-def _build_epoch_step(program: Program, fork_offsets_fn=None):
-    """Shared masked phase-2+3 step; specialized by jit on the lane count P."""
-
-    def step(state: tvm.TVMState, heap, start, count, cen, P: int):
-        idx = start + jnp.arange(P, dtype=jnp.int32)
-        in_range = jnp.arange(P, dtype=jnp.int32) < count
-        cidx = jnp.clip(idx, 0, state.capacity - 1)
-        active = in_range & (state.epoch[cidx] == cen)
-        per_type, _ = tvm.trace_tasks(program, state, heap, idx, active)
-        return tvm.commit_epoch(
-            program, state, heap, idx, active, per_type, cen,
-            fork_offsets_fn=fork_offsets_fn,
-        )
-
-    return step
+_COMPACTED_RESIDENT_MSG = (
+    "resident (device) execution supports only the 'masked' dispatch: the "
+    "on-device while_loop needs launch shapes fixed at trace time, but "
+    "'compacted' sizes per-type launches from runtime populations (use a "
+    "host-loop driver for compacted dispatch)"
+)
 
 
 def _default_rank_fn(types, active, n_types):
@@ -91,9 +90,10 @@ class MapLauncher:
 
     Sizes each payload launch to the *live* element domain of its scheduled
     lanes, skips payloads whose lanes all have empty domains, and caches the
-    jitted step per (map, lane-count, domain-bucket).  Shared by
-    :class:`HostEngine` and the service-layer epoch multiplexer, which both
-    run phase 1/3 on the host.
+    jitted step per (map, lane-count, domain-bucket).  Shared by every
+    host-loop driver (``HostEngine`` and the service epoch multiplexer);
+    resident drivers launch payloads in-loop at ``MapType.max_domain``
+    instead (see :meth:`EpochLoop.resident_body`).
     """
 
     def __init__(self, program: Program, donate: bool = False):
@@ -128,13 +128,434 @@ class MapLauncher:
                 # would dispatch a wasted payload (launch_bucket(0) lanes)
                 continue
             D = launch_bucket(dmax, minimum=8)
-            mstep = self._get_step(ml.map_id, int(where.shape[0]), D)
+            P = int(where.shape[0])
+            mstep = self._get_step(ml.map_id, P, D)
             heap = mstep(heap, ml.where, ml.argi, ml.argf)
             col.dispatch()
             # what to record is the collector's decision (NullStats ignores
             # the element count), not an engine-level flag's
-            col.map_launch(int(dom[where].sum()))
+            col.map_launch(int(dom[where].sum()), P * D)
         return heap
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ResidentCarry:
+    """``lax.while_loop`` carry of the resident drivers.
+
+    The TVM + heap + (optional) :class:`~repro.core.tvm.JobArena`, the
+    ``[n_regions, depth]`` scheduler stacks with per-region stack pointers,
+    and on-device accumulators for every scalar a host loop would have read
+    back per epoch — the resident "readback policy" is to fetch them once,
+    after the loop.
+    """
+
+    state: Any         # TVMState
+    heap: Any          # Dict[str, jnp.ndarray]
+    arena: Any         # JobArena (fleet) or None (solo)
+    jstack: Any        # i32[J, depth]
+    rstack: Any        # i32[J, depth, 2]
+    sp: Any            # i32[J]   per-region stack pointers
+    failed: Any        # bool[J]  region failed (TV or stack overflow)
+    failed_stack: Any  # bool[J]  the failure was scheduler stack depth
+    n_epochs: Any      # i32[]    global epochs (loop iterations)
+    job_epochs: Any    # i32[J]   per-region epochs (== solo epochs)
+    job_tasks: Any     # i32[J]   per-region tasks executed (T1)
+    job_forks: Any     # i32[J]   per-region total forks
+    job_peak: Any      # i32[J]   per-region peak TV cursor (region-relative)
+    map_launches: Any  # i32[]    map payload launches
+    map_elements: Any  # i32[2]   live map element-lanes (hi/lo, base 2^20)
+    map_lanes: Any     # i32[2]   launched element-lanes (hi/lo, base 2^20)
+
+
+_HILO_BASE = 1 << 20  # split radix: i32 hi/lo pairs count exactly to ~2^51
+
+
+def _hilo_add(acc, n):
+    """Add ``n`` (i32, < 2^31 - 2^20) into an exact i32 (hi, lo) pair.
+
+    x64 is typically disabled under JAX, so there is no int64 on device;
+    long resident waves would wrap a plain i32 lane counter (capacity x
+    max_domain per epoch).  The pair holds hi * 2^20 + lo exactly."""
+    lo = acc[1] + n
+    return jnp.stack([acc[0] + lo // _HILO_BASE, lo % _HILO_BASE])
+
+
+def _hilo_value(acc) -> int:
+    return int(acc[0]) * _HILO_BASE + int(acc[1])
+
+
+def _fresh_resident_carry(
+    state, heap, arena, jstack, rstack, sp, n_regions: int
+) -> ResidentCarry:
+    z = jnp.zeros((n_regions,), jnp.int32)
+    zs = jnp.asarray(0, jnp.int32)
+    z2 = jnp.zeros((2,), jnp.int32)
+    return ResidentCarry(
+        state=state, heap=heap, arena=arena,
+        jstack=jstack, rstack=rstack, sp=sp,
+        failed=jnp.zeros((n_regions,), bool),
+        failed_stack=jnp.zeros((n_regions,), bool),
+        n_epochs=zs, job_epochs=z, job_tasks=z, job_forks=z, job_peak=z,
+        map_launches=zs, map_elements=z2, map_lanes=z2,
+    )
+
+
+class EpochLoop:
+    """The shared epoch-driver core (step builder x readback policy x
+    termination predicate).  See the module docstring for the three
+    configurations; no engine owns jit caches or phase-2/3 plumbing of its
+    own — they all borrow this class's.
+    """
+
+    _MAX_STEP_CACHE = 256  # distinct (P, buckets) jit specializations kept
+
+    def __init__(
+        self,
+        program: Program,
+        dispatch: Any = MASKED,
+        *,
+        rank_fn: Optional[Callable] = None,
+        fork_offsets_fn: Optional[Callable] = None,
+        seg_offsets_fn: Optional[Callable] = None,
+        donate: bool = False,
+        skip_idle_types: bool = False,
+    ):
+        self.program = program
+        self.policy: DispatchPolicy = resolve_policy(dispatch)
+        self.task_names = [t.name for t in program.tasks]
+        self._rank_fn = rank_fn or _default_rank_fn
+        self._fork_offsets_fn = fork_offsets_fn
+        self._seg_offsets_fn = seg_offsets_fn
+        self._donate = donate
+        self._skip_idle_types = skip_idle_types
+        self.maps = MapLauncher(program, donate=donate)
+        self._step_cache: Dict[Any, Any] = {}
+        self._compact_cache: Dict[int, Any] = {}
+        self._resident_cache: Dict[Any, Any] = {}
+
+    # ---------------------------------------------------- traced step bodies
+    def _masked_step_fn(self, P: int):
+        """Phase 2+3 masked step; pure traced fn, usable both under jit
+        (host loop) and inside a resident ``lax.while_loop``.
+
+        ``cen`` may be a scalar (solo NDRange frontier) or a per-lane i32
+        vector (fused multi-region frontier; 0 = lane in no popped range —
+        the ``cen > 0`` guard keeps 0-tagged lanes from matching invalid
+        TV slots).  ``arena`` is ``None`` (solo: one global ``nextFreeCore``)
+        or a :class:`~repro.core.tvm.JobArena` (per-region cursors).
+        """
+        program = self.program
+        skip = self._skip_idle_types
+
+        def step(state, heap, arena, start, count, cen):
+            idx = start + jnp.arange(P, dtype=jnp.int32)
+            in_range = jnp.arange(P, dtype=jnp.int32) < count
+            cidx = jnp.clip(idx, 0, state.capacity - 1)
+            cen_l = jnp.asarray(cen, jnp.int32)
+            active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
+            per_type, _ = tvm.trace_tasks(
+                program, state, heap, idx, active, skip_idle_types=skip
+            )
+            return tvm.commit_epoch(
+                program, state, heap, idx, active, per_type, cen_l,
+                fork_offsets_fn=self._fork_offsets_fn,
+                seg_offsets_fn=self._seg_offsets_fn,
+                arena=arena,
+            )
+
+        return step
+
+    def _evict(self):
+        # Bucket combinations on k-type programs can be numerous; bound the
+        # cache (FIFO eviction — evicted shapes just recompile) so a
+        # long-running driver cannot grow it without limit.
+        while len(self._step_cache) >= self._MAX_STEP_CACHE:
+            self._step_cache.pop(next(iter(self._step_cache)))
+
+    def masked_step(self, P: int):
+        key = ("m", P)
+        if key not in self._step_cache:
+            self._evict()
+            self._step_cache[key] = jax.jit(
+                self._masked_step_fn(P),
+                donate_argnums=(0, 1) if self._donate else (),
+            )
+        return self._step_cache[key]
+
+    def compact_pass(self, P: int):
+        """Compaction pass: types -> (perm, per-type counts), one dispatch
+        (§5.4's extra V_inf dispatch + transfer, paid to make phase 2
+        lane-exact)."""
+        if P not in self._compact_cache:
+            program, rank_fn = self.program, self._rank_fn
+            offsets_fn = self._fork_offsets_fn
+
+            def cfn(state, start, count, cen):
+                idx = start + jnp.arange(P, dtype=jnp.int32)
+                in_range = jnp.arange(P, dtype=jnp.int32) < count
+                cidx = jnp.clip(idx, 0, state.capacity - 1)
+                cen_l = jnp.asarray(cen, jnp.int32)
+                active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
+                return tvm.compact_types(
+                    program, state, idx, active,
+                    rank_fn=rank_fn, offsets_fn=offsets_fn,
+                )
+
+            self._compact_cache[P] = jax.jit(cfn)
+        return self._compact_cache[P]
+
+    def compacted_step(self, P: int, buckets: Tuple[int, ...]):
+        key = ("c", P, buckets)
+        if key not in self._step_cache:
+            self._evict()
+            program = self.program
+
+            def step(state, heap, arena, start, count, cen, perm, toffs,
+                     tcounts):
+                per_type, idx, active = tvm.trace_tasks_compacted(
+                    program, state, heap, start, count, cen,
+                    perm, toffs, tcounts, buckets,
+                )
+                return tvm.commit_epoch(
+                    program, state, heap, idx, active, per_type, cen,
+                    fork_offsets_fn=self._fork_offsets_fn,
+                    seg_offsets_fn=self._seg_offsets_fn,
+                    arena=arena,
+                )
+
+            self._step_cache[key] = jax.jit(
+                step, donate_argnums=(0, 1) if self._donate else ()
+            )
+        return self._step_cache[key]
+
+    # ------------------------------------------------- one host-driven epoch
+    def run_epoch(self, state, heap, arena, start, span, cen, col, readback):
+        """One fused host-driven epoch: optional compaction pass (+ count
+        readback), the phase-2/3 step, then the end-of-epoch readback.
+
+        ``cen`` is an int (solo frontier) or an i32 vector of length
+        ``span`` (fused multi-region frontier; padded to the launch bucket
+        with inert zeros).  ``readback`` is the readback policy:
+        ``(summary, state) -> pytree`` of device scalars; its single
+        ``device_get`` is the epoch's scalar transfer — the paper's
+        ``nextFreeCore``/``joinScheduled``/``mapScheduled`` fetch.
+
+        Returns ``(state, heap, summary, fetched, map_launches, launched,
+        by_type, n_dispatches)`` where ``summary`` stays on device (drivers
+        that thread device state — the multiplexer's arena — use it) and
+        ``fetched`` is the host-side readback.
+        """
+        P = self.policy.epoch_bucket(span)
+        start_j = jnp.asarray(start, jnp.int32)
+        count_j = jnp.asarray(span, jnp.int32)
+        if np.ndim(cen) == 0:
+            cen_j = jnp.asarray(cen, jnp.int32)
+        else:
+            cen_np = np.zeros(P, np.int32)
+            cen_np[: np.shape(cen)[0]] = np.asarray(cen)
+            cen_j = jnp.asarray(cen_np)
+        dispatches = 1
+        by_type = None
+        if self.policy.name == "compacted":
+            perm, counts_dev = self.compact_pass(P)(
+                state, start_j, count_j, cen_j
+            )
+            counts = np.asarray(jax.device_get(counts_dev), np.int64)
+            col.dispatch()
+            col.transfer()
+            dispatches += 1
+            buckets, toffs, launched, by_type = size_type_buckets(
+                self.policy, counts, self.task_names
+            )
+            state, heap, summary, map_launches = self.compacted_step(
+                P, buckets
+            )(
+                state, heap, arena, start_j, count_j, cen_j, perm,
+                jnp.asarray(toffs, jnp.int32), jnp.asarray(counts, jnp.int32),
+            )
+        else:
+            state, heap, summary, map_launches = self.masked_step(P)(
+                state, heap, arena, start_j, count_j, cen_j
+            )
+            launched = P
+        fetched = jax.device_get(readback(summary, state))
+        col.dispatch()
+        col.transfer()
+        return (
+            state, heap, summary, fetched, map_launches, launched, by_type,
+            dispatches,
+        )
+
+    # --------------------------------------------------- resident while_loop
+    def resident_cond(self, max_epochs: int):
+        """Traced termination predicate: any region stack non-empty and the
+        epoch guard not yet hit (failed regions zero their own sp)."""
+
+        def cond(carry: ResidentCarry):
+            return (carry.sp > 0).any() & (carry.n_epochs < max_epochs)
+
+        return cond
+
+    def resident_body(self, capacity: int, stack_depth: int):
+        """Body of the resident epoch loop.
+
+        The device "readback policy" is *nothing per epoch*: every scalar a
+        host loop fetches accrues in the :class:`ResidentCarry` instead.
+        Handles both configurations:
+
+          * solo (``carry.arena is None``): one region; its popped NDRange
+            ``[start, start+count)`` is processed masked, exactly the seed
+            ``DeviceEngine`` body.
+          * fleet (``JobArena``): every live region's pop is fused into one
+            per-lane epoch-number vector over the whole TV and committed
+            with the segmented per-region allocator; the arena's region
+            cursors ride the carry, so the whole wave runs without the host.
+
+        Region failure (TV-region or stack overflow) zeroes that region's
+        stack pointer: the job stops, its neighbours keep running — the same
+        isolation the host multiplexer provides.
+        """
+        if self.policy.name != "masked":
+            raise ValueError(_COMPACTED_RESIDENT_MSG)
+        program = self.program
+        step_fn = self._masked_step_fn(capacity)
+
+        def body(carry: ResidentCarry):
+            cen, start, count, live, sp = batched_device_pop(
+                carry.jstack, carry.rstack, carry.sp
+            )
+            arena = carry.arena
+            if arena is None:
+                step_cen = jnp.where(live[0], cen[0], 0)
+                st, ct = start[0], count[0]
+            else:
+                # fuse every live region's pop into a per-lane CEN vector
+                # over the full TV (work-together across regions)
+                J = arena.n_jobs
+                lanes = jnp.arange(capacity, dtype=jnp.int32)
+                jl = jnp.clip(arena.slot_job, 0, J - 1)
+                owned = arena.slot_job < J
+                in_pop = (
+                    owned & live[jl]
+                    & (lanes >= start[jl])
+                    & (lanes < start[jl] + count[jl])
+                )
+                step_cen = jnp.where(in_pop, cen[jl], 0)
+                st = jnp.asarray(0, jnp.int32)
+                ct = jnp.asarray(capacity, jnp.int32)
+            state, heap, summary, map_launches = step_fn(
+                carry.state, carry.heap, arena, st, ct, step_cen
+            )
+            if arena is None:
+                job_join = summary.join_scheduled[None]
+                job_forks = summary.total_forks[None]
+                job_next = state.next_free[None]
+                job_over = summary.overflow[None]
+                job_active = summary.n_active[None]
+                job_peak = jnp.maximum(carry.job_peak, job_next)
+            else:
+                job_join = summary.job_join
+                job_forks = summary.job_forks
+                job_next = summary.job_next
+                job_over = summary.job_overflow
+                job_active = summary.job_active
+                job_peak = jnp.maximum(
+                    carry.job_peak, summary.job_next - arena.base
+                )
+                # the region cursors ride the carry — the device-side
+                # equivalent of the host multiplexer's arena.next update
+                arena = dataclasses.replace(arena, next=summary.job_next)
+            failed = carry.failed | (live & job_over)
+            ok = live & ~failed
+            # LIFO push order exactly as the host scheduler (§4.3.3): join
+            # continuation below, this epoch's forked range on top
+            jstack, rstack, sp, of1 = batched_device_push(
+                carry.jstack, carry.rstack, sp,
+                cen, start, count, ok & job_join, stack_depth,
+            )
+            jstack, rstack, sp, of2 = batched_device_push(
+                jstack, rstack, sp,
+                cen + 1, job_next - job_forks, job_forks,
+                ok & (job_forks > 0), stack_depth,
+            )
+            failed_stack = carry.failed_stack | of1 | of2
+            failed = failed | of1 | of2
+            sp = jnp.where(failed, 0, sp)
+
+            # map payloads sized by MapType.max_domain (live-domain waste is
+            # accounted so the resident trade stays measurable in RunStats)
+            map_ct = carry.map_launches
+            map_el = carry.map_elements
+            map_ln = carry.map_lanes
+            for ml in map_launches:
+                mt = program.maps[ml.map_id]
+                if mt.max_domain <= 0:
+                    raise EngineError(
+                        f"map '{mt.name}' needs max_domain>0 for resident "
+                        "(device) execution"
+                    )
+                fired = ml.where.any()
+                dom = jnp.clip(
+                    jnp.asarray(mt.domain(ml.argi), jnp.int32),
+                    0, mt.max_domain,
+                )
+                fire_i = fired.astype(jnp.int32)
+                map_ct = map_ct + fire_i
+                map_el = _hilo_add(
+                    map_el,
+                    fire_i * jnp.where(ml.where, dom, 0).sum().astype(
+                        jnp.int32
+                    ),
+                )
+                map_ln = _hilo_add(
+                    map_ln,
+                    fire_i * jnp.asarray(
+                        int(ml.where.shape[0]) * mt.max_domain, jnp.int32
+                    ),
+                )
+                heap = jax.lax.cond(
+                    fired,
+                    lambda h, _ml=ml, _mt=mt: tvm.run_map_payload(
+                        program, h, _ml.map_id, _ml.where, _ml.argi,
+                        _ml.argf, _mt.max_domain,
+                    ),
+                    lambda h: h,
+                    heap,
+                )
+
+            return ResidentCarry(
+                state=state, heap=heap, arena=arena,
+                jstack=jstack, rstack=rstack, sp=sp, failed=failed,
+                failed_stack=failed_stack,
+                n_epochs=carry.n_epochs + 1,
+                job_epochs=carry.job_epochs + live.astype(jnp.int32),
+                job_tasks=carry.job_tasks + job_active,
+                job_forks=carry.job_forks + job_forks,
+                job_peak=job_peak,
+                map_launches=map_ct, map_elements=map_el, map_lanes=map_ln,
+            )
+
+        return body
+
+    def run_resident(self, carry: ResidentCarry, max_epochs: int,
+                     n_regions: int) -> ResidentCarry:
+        """Run the resident loop to completion: one dispatch for the whole
+        program (or wave).  The compiled loop is cached per (n_regions,
+        capacity, stack_depth, max_epochs)."""
+        capacity = carry.state.capacity
+        depth = carry.jstack.shape[1]
+        key = (n_regions, capacity, depth, max_epochs)
+        if key not in self._resident_cache:
+            body = self.resident_body(capacity, depth)
+            cond = self.resident_cond(max_epochs)
+
+            @jax.jit
+            def loop(c):
+                return jax.lax.while_loop(cond, body, c)
+
+            self._resident_cache[key] = loop
+        return self._resident_cache[key](carry)
 
 
 class HostEngine:
@@ -155,77 +576,28 @@ class HostEngine:
         self.program = program
         self.capacity = capacity
         self.collect_stats = collect_stats
-        self.policy: DispatchPolicy = resolve_policy(dispatch)
         self.coalesce = coalesce
-        self._fork_offsets_fn = fork_offsets_fn
-        self._rank_fn = rank_fn or _default_rank_fn
         self._stats_factory = stats_factory
-        self._raw_step = _build_epoch_step(program, fork_offsets_fn)
-        self._step_cache: Dict[Any, Any] = {}
-        self._compact_cache: Dict[int, Any] = {}
-        self._maps = MapLauncher(program, donate=donate)
-        self._donate = donate
+        self.loop = EpochLoop(
+            program, dispatch,
+            rank_fn=rank_fn, fork_offsets_fn=fork_offsets_fn, donate=donate,
+        )
+        self.policy = self.loop.policy
 
-    # ------------------------------------------------------------- steps
     def _collector(self) -> StatsCollector:
         if self._stats_factory is not None:
             return self._stats_factory()
         return RunStatsCollector() if self.collect_stats else NullStats()
 
-    def _get_step(self, P: int):
-        if P not in self._step_cache:
-            fn = functools.partial(self._raw_step, P=P)
-            self._step_cache[P] = jax.jit(
-                fn, donate_argnums=(0, 1) if self._donate else ()
-            )
-        return self._step_cache[P]
-
-    def _get_compact(self, P: int):
-        """Compaction pass: types -> (perm, per-type counts), one dispatch."""
-        if P not in self._compact_cache:
-            program, rank_fn = self.program, self._rank_fn
-            offsets_fn = self._fork_offsets_fn
-
-            def cfn(state, start, count, cen):
-                idx = start + jnp.arange(P, dtype=jnp.int32)
-                in_range = jnp.arange(P, dtype=jnp.int32) < count
-                cidx = jnp.clip(idx, 0, state.capacity - 1)
-                active = in_range & (state.epoch[cidx] == cen)
-                return tvm.compact_types(
-                    program, state, idx, active,
-                    rank_fn=rank_fn, offsets_fn=offsets_fn,
-                )
-
-            self._compact_cache[P] = jax.jit(cfn)
-        return self._compact_cache[P]
-
-    _MAX_STEP_CACHE = 256  # distinct (P, buckets) jit specializations kept
-
-    def _get_compacted_step(self, P: int, buckets: Tuple[int, ...]):
-        key = (P, buckets)
-        if key not in self._step_cache:
-            # Bucket combinations on k-type programs can be numerous; bound
-            # the cache (FIFO eviction — evicted shapes just recompile) so a
-            # long-running engine cannot grow it without limit.
-            while len(self._step_cache) >= self._MAX_STEP_CACHE:
-                self._step_cache.pop(next(iter(self._step_cache)))
-            program = self.program
-            fork_offsets_fn = self._fork_offsets_fn
-
-            def step(state, heap, start, count, cen, perm, toffs, tcounts):
-                per_type, idx, active = tvm.trace_tasks_compacted(
-                    program, state, heap, start, count, cen,
-                    perm, toffs, tcounts, buckets,
-                )
-                return tvm.commit_epoch(
-                    program, state, heap, idx, active, per_type, cen,
-                    fork_offsets_fn=fork_offsets_fn,
-                )
-
-            self._step_cache[key] = jax.jit(
-                step, donate_argnums=(0, 1) if self._donate else ()
-            )
-        return self._step_cache[key]
+    @staticmethod
+    def _readback(summary, state):
+        # the paper's end-of-epoch readback: nextFreeCore, joinScheduled,
+        # mapScheduled (§5.2.4) (+ stats counters when enabled)
+        return (
+            summary.total_forks, summary.join_scheduled,
+            summary.map_scheduled, summary.n_active, summary.overflow,
+            state.next_free,
+        )
 
     # --------------------------------------------------------------- run
     def run(
@@ -246,75 +618,35 @@ class HostEngine:
         sched = EpochScheduler(coalesce=self.coalesce)
         sched.reset()
         col = self._collector()
-        task_names = [t.name for t in program.tasks]
-        compacted = self.policy.name == "compacted"
         n_epochs = 0  # loop guard lives here, not in the pluggable collector
 
-        while sched:
+        while sched:  # termination predicate: host stacks drained
             if n_epochs >= max_epochs:
                 raise EngineError(f"exceeded max_epochs={max_epochs}")
             n_epochs += 1
             d = sched.pop()
-            cen, start, count = d.cen, d.start, d.count
-            P = self.policy.epoch_bucket(count)
-            start_j = jnp.asarray(start, jnp.int32)
-            count_j = jnp.asarray(count, jnp.int32)
-            cen_j = jnp.asarray(cen, jnp.int32)
-            by_type = None
-            if compacted:
-                # compaction pass + per-type-count readback (§5.4's extra
-                # V_inf dispatch/transfer, paid to make phase 2 lane-exact)
-                perm, counts_dev = self._get_compact(P)(
-                    state, start_j, count_j, cen_j
-                )
-                counts = np.asarray(jax.device_get(counts_dev), np.int64)
-                col.dispatch()
-                col.transfer()
-                buckets, toffs, launched, by_type = size_type_buckets(
-                    self.policy, counts, task_names
-                )
-                step = self._get_compacted_step(P, buckets)
-                state, heap, summary, map_launches = step(
-                    state, heap, start_j, count_j, cen_j, perm,
-                    jnp.asarray(toffs, jnp.int32),
-                    jnp.asarray(counts, jnp.int32),
-                )
-            else:
-                step = self._get_step(P)
-                state, heap, summary, map_launches = step(
-                    state, heap, start_j, count_j, cen_j
-                )
-                launched = P
-            # the paper's end-of-epoch readback: nextFreeCore, joinScheduled,
-            # mapScheduled (§5.2.4) (+ stats counters when enabled)
-            total_forks, join_sched, map_sched, n_active, overflow, nf = (
-                jax.device_get(
-                    (
-                        summary.total_forks,
-                        summary.join_scheduled,
-                        summary.map_scheduled,
-                        summary.n_active,
-                        summary.overflow,
-                        state.next_free,
-                    )
-                )
+            (state, heap, _summary, fetched, map_launches, launched,
+             by_type, _disp) = self.loop.run_epoch(
+                state, heap, None, d.start, d.count, d.cen, col,
+                self._readback,
             )
-            col.dispatch()
-            col.transfer()
+            total_forks, join_sched, map_sched, n_active, overflow, nf = (
+                fetched
+            )
             if overflow:
                 raise EngineError(
                     f"task vector overflow: capacity={self.capacity}"
                 )
             if join_sched:
-                sched.push_join(cen, start, count)
+                sched.push_join(d.cen, d.start, d.count)
             sched.push_forked(
-                cen + 1, int(nf) - int(total_forks), int(total_forks)
+                d.cen + 1, int(nf) - int(total_forks), int(total_forks)
             )
 
             if map_sched:
-                heap = self._maps.run(map_launches, heap, col)
+                heap = self.loop.maps.run(map_launches, heap, col)
 
-            col.epoch(cen, d.n_ranges)
+            col.epoch(d.cen, d.n_ranges)
             col.lanes(int(n_active), launched, by_type)
             col.forks(int(total_forks))
             col.tv_peak(int(nf))
@@ -326,10 +658,12 @@ class DeviceEngine:
     """Whole-program engine: stacks + epoch loop inside one XLA program.
 
     Beyond-paper optimization (the paper's "tighter coupling" prediction):
-    zero per-epoch dispatches/transfers on the critical path.  Constraints:
-    fixed TV capacity processed every epoch (no NDRange bucketing — so only
-    the ``masked`` dispatch policy is traceable) and map payloads sized by
-    ``MapType.max_domain``.
+    zero per-epoch dispatches/transfers on the critical path — the
+    :class:`EpochLoop` resident configuration with ``n_regions=1``.
+    Constraints: fixed TV capacity processed every epoch (no NDRange
+    bucketing — so only the ``masked`` dispatch policy is traceable) and map
+    payloads sized by ``MapType.max_domain`` (the live-domain divergence is
+    surfaced in ``RunStats.map_lanes_wasted``).
     """
 
     def __init__(
@@ -343,52 +677,16 @@ class DeviceEngine:
         self.program = program
         self.capacity = capacity
         self.stack_depth = stack_depth
-        self.policy = resolve_policy(dispatch)
-        if self.policy.name != "masked":
+        if resolve_policy(dispatch).name != "masked":
             raise ValueError(
                 "DeviceEngine supports only the 'masked' dispatch: the "
                 "on-device while_loop needs launch shapes fixed at trace "
                 "time, but 'compacted' sizes per-type launches from runtime "
                 "populations (use HostEngine for compacted dispatch)"
             )
-        self._raw_step = _build_epoch_step(program, fork_offsets_fn)
-        self._compiled = None
-
-    def _body(self, carry):
-        (state, heap, jstack, rstack, sp, n_epochs, err) = carry
-        cen = jstack[sp - 1]
-        start, count = rstack[sp - 1, 0], rstack[sp - 1, 1]
-        sp = sp - 1
-        old_next_free = state.next_free
-        state, heap, summary, map_launches = self._raw_step(
-            state, heap, start, count, cen, P=self.capacity
-        )
-        # push join range back, then the forked range (LIFO order, §4.3.3)
-        jstack, rstack, sp = device_push(
-            jstack, rstack, sp, cen, start, count,
-            summary.join_scheduled, self.stack_depth,
-        )
-        jstack, rstack, sp = device_push(
-            jstack, rstack, sp, cen + 1, old_next_free, summary.total_forks,
-            summary.total_forks > 0, self.stack_depth,
-        )
-        for ml in map_launches:
-            mt = self.program.maps[ml.map_id]
-            if mt.max_domain <= 0:
-                raise EngineError(
-                    f"map '{mt.name}' needs max_domain>0 for DeviceEngine"
-                )
-            heap = jax.lax.cond(
-                ml.where.any(),
-                lambda h: tvm.run_map_payload(
-                    self.program, h, ml.map_id, ml.where, ml.argi, ml.argf,
-                    mt.max_domain,
-                ),
-                lambda h: h,
-                heap,
-            )
-        err = err | summary.overflow | (sp >= self.stack_depth)
-        return (state, heap, jstack, rstack, sp, n_epochs + 1, err)
+        self.loop = EpochLoop(program, dispatch,
+                              fork_offsets_fn=fork_offsets_fn)
+        self.policy = self.loop.policy
 
     def run(
         self,
@@ -399,24 +697,32 @@ class DeviceEngine:
         program = self.program
         state = tvm.init_state(program, self.capacity, initial)
         heap = program.init_heap(**(heap_init or {}))
-        jstack, rstack = device_stacks(self.stack_depth)
-
-        def cond(carry):
-            (_, _, _, _, sp, n_epochs, err) = carry
-            return (sp > 0) & (n_epochs < max_epochs) & (~err)
-
-        @jax.jit
-        def loop(state, heap, jstack, rstack):
-            carry = (
-                state, heap, jstack, rstack,
-                jnp.asarray(1, jnp.int32), jnp.asarray(0, jnp.int32),
-                jnp.asarray(False),
+        jstack, rstack, sp = batched_device_stacks(1, self.stack_depth)
+        carry = _fresh_resident_carry(
+            state, heap, None, jstack, rstack, sp, n_regions=1
+        )
+        out = self.loop.run_resident(carry, max_epochs, n_regions=1)
+        # the one scalar transfer of the whole run
+        failed, sp_left, n_epochs, tasks, forks, peak, m_ct, m_el, m_ln = (
+            jax.device_get(
+                (
+                    out.failed, out.sp, out.n_epochs, out.job_tasks,
+                    out.job_forks, out.job_peak, out.map_launches,
+                    out.map_elements, out.map_lanes,
+                )
             )
-            return jax.lax.while_loop(cond, self._body, carry)
-
-        state, heap, _, _, sp, n_epochs, err = loop(state, heap, jstack, rstack)
-        if bool(err):
+        )
+        if failed.any():
             raise EngineError("TV capacity or stack depth exhausted")
-        stats = RunStats(epochs=int(n_epochs), dispatches=1, scalar_transfers=1)
-        stats.peak_tv_slots = int(jax.device_get(state.next_free))
-        return heap, state.value, stats
+        if sp_left.any():
+            raise EngineError(f"exceeded max_epochs={max_epochs}")
+        stats = RunStats(
+            epochs=int(n_epochs), dispatches=1, scalar_transfers=1,
+            tasks_executed=int(tasks[0]),
+            lanes_launched=int(n_epochs) * self.capacity,
+            total_forks=int(forks[0]),
+            map_launches=int(m_ct), map_elements=_hilo_value(m_el),
+            map_lanes_launched=_hilo_value(m_ln),
+        )
+        stats.peak_tv_slots = int(peak[0])
+        return out.heap, out.state.value, stats

@@ -18,9 +18,12 @@ execution substrate, so this module owns all three:
     §5.4 contiguity principle: active lanes are scattered into dense
     per-type ranges (``kernels.fork_compact.type_rank`` + ``fork_scan``) and
     each type launches as one dense slice sized to its own population.
-  * ``device_stacks`` / ``device_push`` — the same stack discipline as
-    fixed-capacity device arrays for the on-device engine's
-    ``lax.while_loop`` (GTaP-style fully resident dispatch).
+  * ``batched_device_stacks`` / ``batched_device_pop`` /
+    ``batched_device_push`` — the same stack discipline as fixed-capacity
+    ``[n_regions, depth]`` device arrays with per-region stack pointers, for
+    the resident engines' ``lax.while_loop`` (GTaP-style fully resident
+    dispatch; ``n_regions=1`` is the solo ``DeviceEngine``, ``n_regions=J``
+    is the device-resident fleet of the service layer).
   * :class:`StatsCollector` — pluggable work/critical-path accounting
     (:class:`RunStats`), including per-type occupancy for the compacted
     dispatch, consumed by ``benchmarks/run.py`` and ``benchmarks/roofline.py``.
@@ -232,26 +235,101 @@ def resolve_mux_policy(policy, gang: int = 0) -> MuxPopPolicy:
 # --------------------------------------------------------------------------
 # Device-side stacks (the same discipline inside one lax.while_loop)
 # --------------------------------------------------------------------------
-def device_stacks(depth: int, cen: int = 1, start: int = 0, count: int = 1):
-    """Fixed-capacity join/NDRange stacks as device arrays, seeded like
-    :meth:`EpochScheduler.reset`; the stack pointer starts at 1."""
-    jstack = jnp.zeros((depth,), jnp.int32).at[0].set(cen)
+def batched_device_stacks(
+    n_regions: int,
+    depth: int,
+    cens=None,
+    starts=None,
+    counts=None,
+):
+    """``[n_regions, depth]`` join/NDRange stacks as device arrays.
+
+    Every region's stack is seeded like :meth:`EpochScheduler.reset` — one
+    entry ``(cen, start, count)`` with its stack pointer at 1.  Defaults seed
+    region ``j`` with ``(1, 0, 1)``; the resident fleet drivers pass each
+    region's base slot as its start.  Returns ``(jstack i32[J, depth],
+    rstack i32[J, depth, 2], sp i32[J])``.
+    """
+    J = n_regions
+    cens = jnp.ones((J,), jnp.int32) if cens is None else jnp.asarray(
+        cens, jnp.int32)
+    starts = jnp.zeros((J,), jnp.int32) if starts is None else jnp.asarray(
+        starts, jnp.int32)
+    counts = jnp.ones((J,), jnp.int32) if counts is None else jnp.asarray(
+        counts, jnp.int32)
+    jstack = jnp.zeros((J, depth), jnp.int32).at[:, 0].set(cens)
     rstack = (
-        jnp.zeros((depth, 2), jnp.int32)
-        .at[0]
-        .set(jnp.asarray([start, count], jnp.int32))
+        jnp.zeros((J, depth, 2), jnp.int32)
+        .at[:, 0, 0].set(starts)
+        .at[:, 0, 1].set(counts)
     )
-    return jstack, rstack
+    return jstack, rstack, jnp.ones((J,), jnp.int32)
+
+
+def batched_device_pop(jstack, rstack, sp):
+    """Pop the top entry of every non-empty region stack at once; traced.
+
+    Returns ``(cen, start, count, live, sp')``, all ``[n_regions]``; regions
+    with an empty stack report ``live=False`` and zeroed pop values (an
+    all-zero range is inert: epoch number 0 matches no valid TV slot).
+    """
+    J, depth = jstack.shape
+    live = sp > 0
+    top = jnp.clip(sp - 1, 0, depth - 1)
+    rows = jnp.arange(J)
+    cen = jnp.where(live, jstack[rows, top], 0)
+    start = jnp.where(live, rstack[rows, top, 0], 0)
+    count = jnp.where(live, rstack[rows, top, 1], 0)
+    return cen, start, count, live, sp - live.astype(jnp.int32)
+
+
+def batched_device_push(jstack, rstack, sp, cen, start, count, pred, depth: int):
+    """Conditionally push one (cen, range) entry per region; traced.
+
+    ``cen``/``start``/``count``/``pred`` are ``[n_regions]``.  Returns
+    ``(jstack, rstack, sp', overflow)`` where ``overflow[j]`` flags a push
+    attempted on a full stack (the write is clipped; the caller must fail
+    that region — its schedule is no longer trustworthy).
+    """
+    J = jstack.shape[0]
+    rows = jnp.arange(J)
+    overflow = pred & (sp >= depth)
+    ssp = jnp.clip(sp, 0, depth - 1)
+    jstack = jstack.at[rows, ssp].set(
+        jnp.where(pred, cen, jstack[rows, ssp])
+    )
+    entry = jnp.stack([start, count], axis=-1)
+    rstack = rstack.at[rows, ssp].set(
+        jnp.where(pred[:, None], entry, rstack[rows, ssp])
+    )
+    return jstack, rstack, sp + pred.astype(jnp.int32), overflow
+
+
+def device_stacks(depth: int, cen: int = 1, start: int = 0, count: int = 1):
+    """Single-region stacks (legacy layout: no leading region axis), seeded
+    like :meth:`EpochScheduler.reset`; the stack pointer starts at 1."""
+    jstack, rstack, _ = batched_device_stacks(
+        1, depth, cens=[cen], starts=[start], counts=[count]
+    )
+    return jstack[0], rstack[0]
 
 
 def device_push(jstack, rstack, sp, cen, start, count, pred, depth: int):
-    """Conditionally push one (cen, range) entry; traced, race-free."""
-    ssp = jnp.clip(sp, 0, depth - 1)
-    jstack = jnp.where(pred, jstack.at[ssp].set(cen), jstack)
-    rstack = jnp.where(
-        pred, rstack.at[ssp].set(jnp.stack([start, count])), rstack
+    """Conditionally push one (cen, range) entry; traced, race-free.
+
+    Single-region wrapper over :func:`batched_device_push` (overflow is the
+    caller's ``sp >= depth`` check, as in the seed engine)."""
+    j, r, sp_out, _ = batched_device_push(
+        jstack[None],
+        rstack[None],
+        jnp.reshape(jnp.asarray(sp, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(cen, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(start, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(count, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(pred), (1,)),
+        depth,
     )
-    return jstack, rstack, sp + pred.astype(jnp.int32)
+    return j[0], r[0], sp_out[0]
 
 
 # --------------------------------------------------------------------------
@@ -266,7 +344,8 @@ class RunStats:
     lanes_launched: int = 0         # includes padding/invalid lanes
     total_forks: int = 0
     map_launches: int = 0
-    map_elements: int = 0
+    map_elements: int = 0           # live map element-lanes (useful work)
+    map_lanes_launched: int = 0     # incl. padding to the launch domain
     peak_tv_slots: int = 0          # space (paper §4.4.2)
     dispatches: int = 0             # host->device program launches (V_inf)
     scalar_transfers: int = 0       # device->host readbacks (V_inf)
@@ -280,6 +359,23 @@ class RunStats:
         return self.tasks_executed / max(1, self.lanes_launched)
 
     @property
+    def map_lanes_wasted(self) -> int:
+        """Map element-lanes launched beyond the live domains.
+
+        Host launchers size payloads to the live-domain bucket, so waste is
+        just padding; resident drivers size them to ``MapType.max_domain``,
+        so this surfaces the max-domain vs live-domain divergence — the
+        resident path's silent work overhead, made measurable."""
+        return max(0, self.map_lanes_launched - self.map_elements)
+
+    @property
+    def map_utilization(self) -> float:
+        """Live map elements / launched map lanes (1.0 when no maps ran)."""
+        if self.map_lanes_launched <= 0:
+            return 1.0
+        return self.map_elements / self.map_lanes_launched
+
+    @property
     def occupancy_by_type(self) -> Dict[str, float]:
         """Per-type active/launched lanes (known under compacted dispatch)."""
         return {
@@ -289,9 +385,14 @@ class RunStats:
 
 
 class StatsCollector:
-    """No-op base; engines call these hooks, collectors interpret them."""
+    """No-op base; engines call these hooks, collectors interpret them.
 
-    def epoch(self, cen: int, n_ranges: int = 1) -> None:
+    ``epoch``/``map_launch`` take bulk counts (``n``) so resident drivers —
+    which learn a whole wave's totals from one readback — can record them in
+    O(1) host work instead of replaying the loop.
+    """
+
+    def epoch(self, cen: int, n_ranges: int = 1, n: int = 1) -> None:
         pass
 
     def lanes(self, n_active: int, launched: int,
@@ -307,7 +408,8 @@ class StatsCollector:
     def forks(self, n: int) -> None:
         pass
 
-    def map_launch(self, elements: int = 0) -> None:
+    def map_launch(self, elements: int = 0, lanes: int = 0,
+                   n: int = 1) -> None:
         pass
 
     def tv_peak(self, slots: int) -> None:
@@ -324,8 +426,8 @@ class NullStats(StatsCollector):
     def __init__(self):
         self._stats = RunStats()
 
-    def epoch(self, cen: int, n_ranges: int = 1) -> None:
-        self._stats.epochs += 1
+    def epoch(self, cen: int, n_ranges: int = 1, n: int = 1) -> None:
+        self._stats.epochs += n
 
     def dispatch(self, n: int = 1) -> None:
         self._stats.dispatches += n
@@ -333,8 +435,9 @@ class NullStats(StatsCollector):
     def transfer(self, n: int = 1) -> None:
         self._stats.scalar_transfers += n
 
-    def map_launch(self, elements: int = 0) -> None:
-        self._stats.map_launches += 1
+    def map_launch(self, elements: int = 0, lanes: int = 0,
+                   n: int = 1) -> None:
+        self._stats.map_launches += n
 
     def result(self) -> RunStats:
         return self._stats
@@ -354,16 +457,18 @@ class RunStatsCollector(NullStats):
                 s.tasks_by_type[name] = s.tasks_by_type.get(name, 0) + active
                 s.lanes_by_type[name] = s.lanes_by_type.get(name, 0) + lanes
 
-    def epoch(self, cen: int, n_ranges: int = 1) -> None:
-        super().epoch(cen, n_ranges)
-        self._stats.ranges_coalesced += n_ranges - 1
+    def epoch(self, cen: int, n_ranges: int = 1, n: int = 1) -> None:
+        super().epoch(cen, n_ranges, n)
+        self._stats.ranges_coalesced += n_ranges - n
 
     def forks(self, n: int) -> None:
         self._stats.total_forks += n
 
-    def map_launch(self, elements: int = 0) -> None:
-        super().map_launch(elements)
+    def map_launch(self, elements: int = 0, lanes: int = 0,
+                   n: int = 1) -> None:
+        super().map_launch(elements, lanes, n)
         self._stats.map_elements += elements
+        self._stats.map_lanes_launched += lanes
 
     def tv_peak(self, slots: int) -> None:
         self._stats.peak_tv_slots = max(self._stats.peak_tv_slots, slots)

@@ -421,12 +421,13 @@ def commit_epoch(
     per_type,
     cen: jnp.ndarray,
     fork_offsets_fn: Optional[Callable] = None,
+    seg_offsets_fn: Optional[Callable] = None,
     arena: Optional[JobArena] = None,
 ) -> Tuple[TVMState, Dict[str, jnp.ndarray], EpochSummary, List[MapLaunch]]:
     """Phase 3: prefix-sum fork allocation + TMS (epoch-number) update.
 
     ``fork_offsets_fn(counts) -> (excl_offsets, total)`` lets the engine swap
-    the jnp cumsum for the ``fork_compact`` Pallas kernel.
+    the jnp cumsum for the ``fork_compact.fork_scan`` Pallas kernel.
 
     With ``arena`` (the service's multi-tenant mode) the single global
     ``nextFreeCore`` becomes one cursor per job region: every lane is tagged
@@ -437,8 +438,12 @@ def commit_epoch(
     (paper §5.3) runs per region, ``cen`` may be a per-lane vector (each
     lane's own job epoch number), and the summary is a
     :class:`MuxEpochSummary` carrying the per-job readback scalars.
-    ``fork_offsets_fn`` is ignored in arena mode (the segmented scan has no
-    Pallas counterpart yet).
+    ``seg_offsets_fn(counts, seg, n_segs) -> (excl_offsets, seg_totals)`` is
+    the arena counterpart of ``fork_offsets_fn``: it defaults to the jnp
+    reference and can be swapped for the ``fork_compact.segmented_fork_scan``
+    Pallas kernel (``kernels.ops.segmented_fork_offsets``).  This whole
+    function is ``lax.while_loop``-traceable in both modes — the resident
+    drivers carry the arena (cursors included) through the loop.
     """
     C = state.capacity
     P = idx.shape[0]
@@ -464,14 +469,17 @@ def commit_epoch(
     else:
         J = arena.n_jobs
         jl = jnp.clip(arena.slot_job[cidx], 0, J - 1)  # region per lane
-        onehot = jl[:, None] == jnp.arange(J, dtype=jnp.int32)[None, :]
-        cnt1h = jnp.where(onehot, lane_count[:, None], 0)
         # segmented exclusive scan: each lane's offset among *its own job's*
         # forks — identical to the solo cumsum restricted to that region
-        lane_excl = jnp.take_along_axis(
-            jnp.cumsum(cnt1h, axis=0) - cnt1h, jl[:, None], axis=1
-        )[:, 0]
-        job_forks = cnt1h.sum(axis=0).astype(jnp.int32)
+        if seg_offsets_fn is None:
+            from ..kernels import ref as _kref
+
+            lane_excl, job_forks = _kref.segmented_fork_scan_ref(
+                lane_count, jl, J
+            )
+        else:
+            lane_excl, job_forks = seg_offsets_fn(lane_count, jl, J)
+        job_forks = job_forks.astype(jnp.int32)
         lane_base = arena.next[jl] + lane_excl
         lane_cap = arena.end[jl]
         job_overflow = (arena.next + job_forks) > arena.end
@@ -592,10 +600,12 @@ def commit_epoch(
             n_active=active.sum().astype(jnp.int32),
             overflow=overflow,
             job_forks=job_forks,
-            job_join=(onehot & lane_join[:, None]).any(axis=0),
-            job_active=jnp.where(onehot & active[:, None], 1, 0)
-            .sum(axis=0)
-            .astype(jnp.int32),
+            job_join=jax.ops.segment_max(
+                lane_join.astype(jnp.int32), jl, num_segments=J
+            ) > 0,
+            job_active=jax.ops.segment_sum(
+                active.astype(jnp.int32), jl, num_segments=J
+            ).astype(jnp.int32),
             job_overflow=job_overflow,
             job_next=job_next,
         )

@@ -77,6 +77,88 @@ def fork_scan(
     return offs.reshape(-1)[:c], total[0, 0]
 
 
+def _seg_scan_kernel(counts_ref, seg_ref, offs_ref, totals_ref, carry_ref,
+                     *, n_segs):
+    """Segmented exclusive scan: each lane's offset among *its own segment's*
+    counts.  One (n_segs,)-wide running total in SMEM replaces n_segs atomic
+    cursors (the ``JobArena`` per-region ``nextFreeCore``); TPU's sequential
+    grid makes the carry race-free, exactly as in ``_fork_scan_kernel``."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        for s in range(n_segs):
+            carry_ref[s] = jnp.int32(0)
+
+    cnt = counts_ref[...]  # (1, B) i32
+    seg = seg_ref[...]     # (1, B) i32
+    offs = jnp.zeros_like(cnt)
+    for s in range(n_segs):  # n_segs = fleet size: small and static
+        m = seg == s
+        x = jnp.where(m, cnt, 0)
+        excl = jnp.cumsum(x, axis=-1) - x
+        offs = jnp.where(m, excl + carry_ref[s], offs)
+        carry_ref[s] = carry_ref[s] + jnp.sum(x)
+    offs_ref[...] = offs
+
+    @pl.when(i == n - 1)
+    def _fini():
+        for s in range(n_segs):
+            totals_ref[0, s] = carry_ref[s]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_segs", "block", "interpret")
+)
+def segmented_fork_scan(
+    counts: jnp.ndarray,
+    seg: jnp.ndarray,
+    n_segs: int,
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """Per-segment exclusive prefix sum + per-segment totals.
+
+    The multi-tenant fork allocator (``JobArena`` in ``core.tvm``): lane
+    ``i``'s fork slots start at ``region_cursor[seg[i]] + offsets[i]``, and
+    each region's cursor advances by ``totals[seg]``.  Lanes of one segment
+    need not be contiguous.  ``seg`` ids outside ``[0, n_segs)`` contribute
+    to no segment and read offset 0.
+
+    Returns (offsets i32[C], totals i32[n_segs]).
+    """
+    (c,) = counts.shape
+    pad = (-c) % block
+    x = jnp.pad(counts.astype(jnp.int32), (0, pad)).reshape(-1, block)
+    # pad with segment id n_segs: matches no segment, contributes nothing
+    s = jnp.pad(
+        seg.astype(jnp.int32), (0, pad), constant_values=n_segs
+    ).reshape(-1, block)
+    nb = x.shape[0]
+    ns = max(n_segs, 1)
+    kernel = functools.partial(_seg_scan_kernel, n_segs=n_segs)
+    offs, totals = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, ns), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int32),
+            jax.ShapeDtypeStruct((1, ns), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((ns,), jnp.int32)],
+        interpret=interpret,
+    )(x, s)
+    return offs.reshape(-1)[:c], totals[0, :n_segs]
+
+
 def _type_rank_kernel(types_ref, active_ref, rank_ref, counts_ref, carry_ref,
                       *, n_types):
     """Per-type stable ranks: rank[i] = #active lanes of the same type before

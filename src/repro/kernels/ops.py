@@ -19,6 +19,7 @@ from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import mha_flash as _flash_pallas
 from .fork_compact import fork_scan as _fork_scan_pallas
+from .fork_compact import segmented_fork_scan as _seg_scan_pallas
 from .fork_compact import type_rank as _type_rank_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
@@ -37,6 +38,24 @@ def fork_offsets(counts: jnp.ndarray, impl: str = "auto"):
     if impl == "ref":
         return ref.fork_scan_ref(counts)
     return _fork_scan_pallas(counts, interpret=(impl == "interpret"))
+
+
+def segmented_fork_offsets(
+    counts: jnp.ndarray, seg: jnp.ndarray, n_segs: int, impl: str = "auto"
+):
+    """Per-region exclusive fork allocation (the ``JobArena`` segmented scan).
+
+    ``seg`` tags each lane with its TV region; each region's forks get
+    contiguous offsets among that region's own counts, so the service's
+    multi-tenant commit stays bit-identical to the solo cumsum per region.
+    Returns (offsets i32[C], per-region totals i32[n_segs]).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.segmented_fork_scan_ref(counts, seg, n_segs)
+    return _seg_scan_pallas(
+        counts, seg, n_segs, interpret=(impl == "interpret")
+    )
 
 
 def type_rank(

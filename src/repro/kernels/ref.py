@@ -17,6 +17,25 @@ def fork_scan_ref(counts: jnp.ndarray):
     return incl - counts, incl[-1] if counts.shape[0] else jnp.int32(0)
 
 
+def segmented_fork_scan_ref(counts: jnp.ndarray, seg: jnp.ndarray, n_segs: int):
+    """Oracle for fork_compact.segmented_fork_scan: per-segment exclusive
+    prefix sum of ``counts`` + per-segment totals.
+
+    ``seg[i]`` is lane i's segment (TV region) id; ids outside
+    ``[0, n_segs)`` contribute to no segment and read offset 0.  This is the
+    ``JobArena`` fork allocator: each lane's offset among *its own region's*
+    forks equals the solo cumsum restricted to that region.  Returns
+    (offsets i32[C], totals i32[n_segs]).
+    """
+    counts = counts.astype(jnp.int32)
+    seg = seg.astype(jnp.int32)
+    onehot = seg[:, None] == jnp.arange(n_segs, dtype=jnp.int32)[None, :]
+    cnt1h = jnp.where(onehot, counts[:, None], 0)
+    excl = jnp.cumsum(cnt1h, axis=0) - cnt1h
+    offs = jnp.where(onehot, excl, 0).sum(axis=1).astype(jnp.int32)
+    return offs, cnt1h.sum(axis=0).astype(jnp.int32)
+
+
 def type_rank_ref(types: jnp.ndarray, active: jnp.ndarray, n_types: int):
     """Oracle for fork_compact.type_rank: stable within-type ranks."""
     types = types.astype(jnp.int32)

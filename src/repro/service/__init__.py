@@ -2,7 +2,10 @@
 # programs inside one shared TVM, paying the per-epoch launch + scalar
 # readback (the paper's V_inf critical-path terms) once for the whole fleet
 # instead of once per program — the §3 "work-together" principle extended
-# across tenants.  See DESIGN.md §8.
+# across tenants.  Two wave drivers: the host-loop EpochMultiplexer
+# (DESIGN.md §8; streaming completions, region reuse, compacted dispatch)
+# and the device-resident DeviceMultiplexer (DESIGN.md §9; the whole wave
+# in one lax.while_loop, O(1) dispatches + readbacks per wave).
 from .api import JobService, merge_stats
 from .jobs import (
     AdmissionError,
@@ -13,10 +16,16 @@ from .jobs import (
     JobStats,
     JobStatus,
 )
-from .multiplexer import EpochMultiplexer, TenantSlot, fuse_programs
+from .multiplexer import (
+    DeviceMultiplexer,
+    EpochMultiplexer,
+    TenantSlot,
+    fuse_programs,
+)
 
 __all__ = [
     "AdmissionError",
+    "DeviceMultiplexer",
     "EpochMultiplexer",
     "Job",
     "JobFailure",

@@ -28,7 +28,7 @@ from .jobs import (
     check_fleet_dtype,
     validate_job,
 )
-from .multiplexer import EpochMultiplexer
+from .multiplexer import DeviceMultiplexer, EpochMultiplexer
 
 
 def merge_stats(into: RunStats, s: RunStats) -> RunStats:
@@ -39,6 +39,7 @@ def merge_stats(into: RunStats, s: RunStats) -> RunStats:
     into.total_forks += s.total_forks
     into.map_launches += s.map_launches
     into.map_elements += s.map_elements
+    into.map_lanes_launched += s.map_lanes_launched
     into.peak_tv_slots = max(into.peak_tv_slots, s.peak_tv_slots)
     into.dispatches += s.dispatches
     into.scalar_transfers += s.scalar_transfers
@@ -58,6 +59,15 @@ class JobService:
     the phase-2 policy for the fused fleet exactly as on ``HostEngine``;
     ``pop_policy``/``gang`` pick the multi-stack pop policy
     (:class:`~repro.core.scheduler.MuxPopPolicy`).
+
+    ``engine`` picks the wave driver: ``"host"`` (default) runs each wave
+    on the host-loop :class:`~repro.service.multiplexer.EpochMultiplexer` —
+    per-global-epoch V_inf, with streaming completion and mid-flight region
+    reuse; ``"device"`` runs each wave to completion inside one
+    ``lax.while_loop``
+    (:class:`~repro.service.multiplexer.DeviceMultiplexer`, DESIGN.md §9) —
+    O(1) V_inf per wave, but completions surface per wave and queued jobs
+    wait for the next wave.
     """
 
     def __init__(
@@ -71,7 +81,28 @@ class JobService:
         default_quota: int = 1 << 10,
         collect_stats: bool = True,
         rank_fn=None,
+        engine: str = "host",
+        stack_depth: int = 1 << 10,
     ):
+        if engine not in ("host", "device"):
+            raise ValueError(
+                f"engine must be 'host' or 'device', got {engine!r}"
+            )
+        if engine == "device":
+            from ..core.scheduler import resolve_policy
+
+            if resolve_policy(dispatch).name != "masked":
+                raise ValueError(
+                    "engine='device' supports only dispatch='masked' "
+                    "(resident launch shapes are fixed at trace time)"
+                )
+            if gang or pop_policy != "fuse_all":
+                raise ValueError(
+                    "engine='device' runs every live region each epoch "
+                    "(fuse_all); gang/pop_policy are host-engine options"
+                )
+        self.engine = engine
+        self.stack_depth = stack_depth
         self.capacity = capacity
         self.max_jobs = max_jobs
         self.dispatch = dispatch
@@ -172,15 +203,23 @@ class JobService:
             wave = self._take_wave()
             if not wave:
                 return []
-            self._mux = EpochMultiplexer(
-                wave,
-                dispatch=self.dispatch,
-                coalesce=self.coalesce,
-                pop_policy=self.pop_policy,
-                gang=self.gang,
-                collect_stats=self.collect_stats,
-                rank_fn=self._rank_fn,
-            )
+            if self.engine == "device":
+                self._mux = DeviceMultiplexer(
+                    wave,
+                    dispatch=self.dispatch,
+                    stack_depth=self.stack_depth,
+                    collect_stats=self.collect_stats,
+                )
+            else:
+                self._mux = EpochMultiplexer(
+                    wave,
+                    dispatch=self.dispatch,
+                    coalesce=self.coalesce,
+                    pop_policy=self.pop_policy,
+                    gang=self.gang,
+                    collect_stats=self.collect_stats,
+                    rank_fn=self._rank_fn,
+                )
             self._admit_ready = False
         elif self._admit_ready and self._queue:
             # streaming admission: seed queued jobs into regions freed by

@@ -1,10 +1,11 @@
-"""Epoch multiplexer: the fused phase-1/3 loop over many tenant programs.
+"""Epoch multiplexers: fused multi-tenant driving over one shared TVM.
 
 The paper's "work-together" principle (§3) says critical-path overhead
 should be paid by the entire system at once.  A solo ``HostEngine.run``
 already pays phase 1 (stack pop + launch) and phase 3 (scalar readback)
 once per epoch *for one program*; N concurrent tenants would pay N× that
-V_inf cost.  This module extends work-together **across tenants**:
+V_inf cost.  This module extends work-together **across tenants**, at two
+levels of residency:
 
 * :func:`fuse_programs` builds one fused :class:`Program` from N tenant
   programs — task tables and map tables concatenate (task ids shifted by a
@@ -14,22 +15,27 @@ V_inf cost.  This module extends work-together **across tenants**:
   therefore needs *no new machinery*: the fused program is an ordinary
   ``Program`` and both the masked and §5.4-compacted dispatches apply.
 
-* :class:`EpochMultiplexer` gives each admitted job a contiguous slot
-  region in one shared :class:`~repro.core.tvm.TVMState` (the region is the
-  job's private Task Vector: its layout is the solo run's, shifted by the
-  region base — see ``JobArena``), keeps one
-  :class:`~repro.core.scheduler.EpochScheduler` per job, and each *global*
-  epoch pops every ready job's frontier (``MuxPopPolicy`` selects the gang),
-  fuses the popped ranges into one launch with a per-lane epoch-number
-  vector, and reads back one :class:`~repro.core.tvm.MuxEpochSummary` for
-  the whole fleet.  The per-epoch dispatch + scalar readback is paid once
-  for the fleet instead of once per job, while per-job results stay
-  bit-identical to the solo runs.
+* :class:`EpochMultiplexer` is the *host-loop* driver (an
+  :class:`~repro.core.engine.EpochLoop` configuration): each global epoch it
+  pops every ready job's frontier (``MuxPopPolicy`` selects the gang), fuses
+  the popped ranges into one launch with a per-lane epoch-number vector, and
+  reads back one :class:`~repro.core.tvm.MuxEpochSummary` for the whole
+  fleet — V_inf paid once per *global epoch*.  Because the host sees every
+  epoch, it supports streaming completion, mid-flight region reuse
+  (including structurally-equal program templates, see
+  ``Program.structural_hash``), gang policies, and the compacted dispatch.
 
-Completion is streamed: the moment a job's scheduler drains, its result is
-extracted from its region and the region is freed for re-admission (a new
-job reusing the *same* program template can be seeded into a freed region
-mid-flight, without retracing anything).
+* :class:`DeviceMultiplexer` is the *resident* driver (DESIGN.md §9): the
+  entire admitted wave runs to completion inside one ``lax.while_loop``,
+  with per-region scheduler stacks (``batched_device_stacks``) and the
+  :class:`~repro.core.tvm.JobArena` region cursors carried on device.
+  Per-wave V_inf is O(1) — one dispatch + one readback for the whole wave —
+  and the host only sees the final per-region heaps and stats.  The trade:
+  no per-epoch host visibility, so streaming completion and mid-flight
+  region reuse stay host-mux-only, and only the masked dispatch is
+  traceable.
+
+Per-job results are bit-identical to the solo runs under both drivers.
 """
 from __future__ import annotations
 
@@ -41,7 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import tvm
-from ..core.engine import MapLauncher, _default_rank_fn
+from ..core.engine import (
+    EpochLoop,
+    _COMPACTED_RESIDENT_MSG,
+    _fresh_resident_carry,
+    _hilo_value,
+)
 from ..core.program import HeapVar, MapType, Program, TaskType, pack_args
 from ..core.scheduler import (
     EpochScheduler,
@@ -49,9 +60,9 @@ from ..core.scheduler import (
     RunStats,
     RunStatsCollector,
     StatsCollector,
+    batched_device_stacks,
     resolve_mux_policy,
     resolve_policy,
-    size_type_buckets,
 )
 from .jobs import (
     Job,
@@ -261,12 +272,13 @@ def fuse_programs(
 
 
 # --------------------------------------------------------------------------
-# The multiplexer
+# Shared fleet plumbing
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class _Region:
     """Runtime state of one slot region: the tenant currently in it (if
-    any), its scheduler stacks, and its solo-comparable stats."""
+    any), its scheduler stacks (host driver only), and its solo-comparable
+    stats."""
 
     slot: TenantSlot
     handle: Optional[JobHandle] = None
@@ -282,35 +294,22 @@ class _Region:
         )
 
 
-class EpochMultiplexer:
-    """Co-schedule a fleet of jobs inside one shared TVM.
-
-    Each global epoch: select a gang of ready jobs (``pop_policy``), pop one
-    dispatch from each job's own scheduler, fuse the ranges into a single
-    launch over their covering span with a per-lane epoch-number vector
-    (lanes outside every popped range carry 0 and stay inactive), commit
-    with the :class:`~repro.core.tvm.JobArena` segmented allocator, and read
-    back one fused :class:`~repro.core.tvm.MuxEpochSummary`.  Dispatch +
-    readback are counted once per global epoch — the fleet's V_inf — while
-    each job's scheduler sees exactly the solo sequence of pops and pushes.
-    """
-
-    _MAX_STEP_CACHE = 256  # distinct (P, buckets) jit specializations kept
+class _FleetBase:
+    """Shared multi-tenant plumbing: program fusion, the shared TVM state +
+    :class:`~repro.core.tvm.JobArena`, per-region bookkeeping, and result
+    extraction.  The host and resident drivers differ only in *how* they
+    drive epochs; everything either one reads or writes lives here."""
 
     def __init__(
         self,
         handles: Sequence[JobHandle],
         capacity: Optional[int] = None,
-        dispatch: Any = "masked",
         coalesce: bool = True,
-        pop_policy: Any = "fuse_all",
-        gang: int = 0,
         collect_stats: bool = True,
         stats_factory=None,
-        rank_fn=None,
     ):
         if not handles:
-            raise ValueError("EpochMultiplexer needs at least one job")
+            raise ValueError(f"{type(self).__name__} needs at least one job")
         jobs = [h.job for h in handles]
         quota_total = sum(j.quota for j in jobs)
         self.capacity = int(capacity) if capacity else quota_total
@@ -321,27 +320,16 @@ class EpochMultiplexer:
             )
         for j in jobs:
             validate_job(j, self.capacity)
-        self.policy = resolve_policy(dispatch)
-        self.pop_policy = resolve_mux_policy(pop_policy, gang)
         self.coalesce = coalesce
-        self._rank_fn = rank_fn or _default_rank_fn
         self._stats_factory = stats_factory
         self._collect_stats = collect_stats
 
         self.program, self._slots = fuse_programs(
             [j.program for j in jobs], [j.quota for j in jobs]
         )
-        self._task_names = [t.name for t in self.program.tasks]
-        self._maps = MapLauncher(self.program)
         self._col = self._collector()
-        self._step_cache: Dict[Any, Any] = {}
-        self._compact_cache: Dict[int, Any] = {}
-        self._rotor = 0
-        self._global_epochs = 0
-
         self._init_fleet(handles)
 
-    # ------------------------------------------------------------ plumbing
     def _collector(self) -> StatsCollector:
         if self._stats_factory is not None:
             return self._stats_factory()
@@ -400,73 +388,104 @@ class EpochMultiplexer:
             next=jnp.asarray([s.base + 1 for s in self._slots], jnp.int32),
         )
 
-    # ----------------------------------------------------------- jit steps
-    def _get_step(self, P: int):
-        """Masked fused step: full covering span, per-lane epoch numbers."""
-        key = ("m", P)
-        if key not in self._step_cache:
-            program = self.program
-
-            def step(state, heap, arena, lo, cen_lane):
-                idx = lo + jnp.arange(P, dtype=jnp.int32)
-                cidx = jnp.clip(idx, 0, state.capacity - 1)
-                active = (cen_lane > 0) & (state.epoch[cidx] == cen_lane)
-                # fused fleets have many task types but type-homogeneous
-                # epochs stay common, so idle types skip via lax.cond
-                per_type, _ = tvm.trace_tasks(
-                    program, state, heap, idx, active, skip_idle_types=True
-                )
-                return tvm.commit_epoch(
-                    program, state, heap, idx, active, per_type, cen_lane,
-                    arena=arena,
-                )
-
-            self._step_cache[key] = jax.jit(step)
-        return self._step_cache[key]
-
-    def _get_compact(self, P: int):
-        """Compaction pass over the fused span (one dispatch + count
-        readback, exactly the solo §5.4 trade)."""
-        if P not in self._compact_cache:
-            program, rank_fn = self.program, self._rank_fn
-
-            def cfn(state, lo, cen_lane):
-                idx = lo + jnp.arange(P, dtype=jnp.int32)
-                cidx = jnp.clip(idx, 0, state.capacity - 1)
-                active = (cen_lane > 0) & (state.epoch[cidx] == cen_lane)
-                return tvm.compact_types(
-                    program, state, idx, active, rank_fn=rank_fn
-                )
-
-            self._compact_cache[P] = jax.jit(cfn)
-        return self._compact_cache[P]
-
-    def _get_compacted_step(self, P: int, buckets: Tuple[int, ...]):
-        key = ("c", P, buckets)
-        if key not in self._step_cache:
-            while len(self._step_cache) >= self._MAX_STEP_CACHE:
-                self._step_cache.pop(next(iter(self._step_cache)))
-            program = self.program
-
-            def step(state, heap, arena, lo, count, cen_lane, perm, toffs,
-                     tcounts):
-                per_type, idx, active = tvm.trace_tasks_compacted(
-                    program, state, heap, lo, count, cen_lane,
-                    perm, toffs, tcounts, buckets,
-                )
-                return tvm.commit_epoch(
-                    program, state, heap, idx, active, per_type, cen_lane,
-                    arena=arena,
-                )
-
-            self._step_cache[key] = jax.jit(step)
-        return self._step_cache[key]
-
-    # ------------------------------------------------------------ stepping
     @property
     def live(self) -> bool:
         return any(r.running for r in self._regions)
 
+    def stats(self) -> RunStats:
+        """Fleet-level stats: V_inf terms counted per fused dispatch."""
+        return self._col.result()
+
+    # ------------------------------------------------- completion / release
+    def _finalize(self, j: int) -> JobHandle:
+        """Extract the region's solo-equivalent result; free the region."""
+        r = self._regions[j]
+        s = r.slot
+        sub = s.program
+        value = self._state.value[
+            s.base : s.base + r.active_quota, : sub.value_width
+        ]
+        heap = {
+            hv.name: self._heap[s.prefix + hv.name] for hv in sub.heap
+        }
+        r.handle.result = JobResult(heap=heap, value=value, stats=r.stats)
+        r.handle.status = JobStatus.DONE
+        return self._release(j)
+
+    def _fail(self, j: int, reason: Optional[str] = None) -> JobHandle:
+        r = self._regions[j]
+        r.handle.error = JobFailure(
+            reason
+            or f"job {r.handle.job.name!r} overflowed its region: "
+               f"quota={r.active_quota}"
+        )
+        r.handle.status = JobStatus.FAILED
+        return self._release(j)
+
+    def _release(self, j: int) -> JobHandle:
+        r = self._regions[j]
+        h = r.handle
+        r.handle = None
+        r.sched = None
+        r.stats = None
+        r.active_quota = 0
+        return h
+
+
+# --------------------------------------------------------------------------
+# Host-loop driver
+# --------------------------------------------------------------------------
+class EpochMultiplexer(_FleetBase):
+    """Co-schedule a fleet of jobs inside one shared TVM (host loop).
+
+    Each global epoch: select a gang of ready jobs (``pop_policy``), pop one
+    dispatch from each job's own scheduler, fuse the ranges into a single
+    launch over their covering span with a per-lane epoch-number vector
+    (lanes outside every popped range carry 0 and stay inactive), commit
+    with the :class:`~repro.core.tvm.JobArena` segmented allocator, and read
+    back one fused :class:`~repro.core.tvm.MuxEpochSummary`.  Dispatch +
+    readback are counted once per global epoch — the fleet's V_inf — while
+    each job's scheduler sees exactly the solo sequence of pops and pushes.
+    """
+
+    def __init__(
+        self,
+        handles: Sequence[JobHandle],
+        capacity: Optional[int] = None,
+        dispatch: Any = "masked",
+        coalesce: bool = True,
+        pop_policy: Any = "fuse_all",
+        gang: int = 0,
+        collect_stats: bool = True,
+        stats_factory=None,
+        rank_fn=None,
+        seg_offsets_fn=None,
+    ):
+        super().__init__(
+            handles, capacity=capacity, coalesce=coalesce,
+            collect_stats=collect_stats, stats_factory=stats_factory,
+        )
+        self.pop_policy = resolve_mux_policy(pop_policy, gang)
+        self._loop = EpochLoop(
+            self.program, dispatch,
+            rank_fn=rank_fn, seg_offsets_fn=seg_offsets_fn,
+            # fused fleets have many task types but type-homogeneous epochs
+            # stay common, so idle types skip via lax.cond
+            skip_idle_types=True,
+        )
+        self.policy = self._loop.policy
+        self._rotor = 0
+        self._global_epochs = 0
+
+    @staticmethod
+    def _readback(summary, state):
+        # one fused readback for the whole fleet (the cross-tenant V_inf win)
+        return (
+            summary.job_forks, summary.job_join, summary.job_active,
+            summary.job_overflow, summary.job_next, summary.map_scheduled,
+        )
+
+    # ------------------------------------------------------------ stepping
     def step(self) -> List[JobHandle]:
         """Run one fused global epoch; return handles that completed."""
         ready = [
@@ -483,52 +502,20 @@ class EpochMultiplexer:
         pops = {j: self._regions[j].sched.pop() for j in chosen}
         lo = min(d.start for d in pops.values())
         hi = max(d.start + d.count for d in pops.values())
-        P = self.policy.epoch_bucket(hi - lo)
-        cen_np = np.zeros(P, np.int32)
+        cen_np = np.zeros(hi - lo, np.int32)
         for d in pops.values():
             cen_np[d.start - lo : d.start - lo + d.count] = d.cen
-        cen_lane = jnp.asarray(cen_np)
-        lo_j = jnp.asarray(lo, jnp.int32)
 
-        compacted = self.policy.name == "compacted"
-        by_type = None
-        shared_dispatches = 1
-        if compacted:
-            perm, counts_dev = self._get_compact(P)(
-                self._state, lo_j, cen_lane
-            )
-            counts = np.asarray(jax.device_get(counts_dev), np.int64)
-            col.dispatch()
-            col.transfer()
-            shared_dispatches += 1
-            buckets, toffs, launched, by_type = size_type_buckets(
-                self.policy, counts, self._task_names
-            )
-            step = self._get_compacted_step(P, buckets)
-            self._state, self._heap, summary, map_launches = step(
-                self._state, self._heap, self._arena, lo_j,
-                jnp.asarray(hi - lo, jnp.int32), cen_lane, perm,
-                jnp.asarray(toffs, jnp.int32), jnp.asarray(counts, jnp.int32),
-            )
-        else:
-            step = self._get_step(P)
-            self._state, self._heap, summary, map_launches = step(
-                self._state, self._heap, self._arena, lo_j, cen_lane
-            )
-            launched = P
-
-        # one fused readback for the whole fleet (the cross-tenant V_inf win)
-        job_forks, job_join, job_active, job_overflow, job_next, map_sched = (
-            jax.device_get(
-                (
-                    summary.job_forks, summary.job_join, summary.job_active,
-                    summary.job_overflow, summary.job_next,
-                    summary.map_scheduled,
-                )
-            )
+        (self._state, self._heap, summary, fetched, map_launches, launched,
+         by_type, shared_dispatches) = self._loop.run_epoch(
+            self._state, self._heap, self._arena, lo, hi - lo, cen_np, col,
+            self._readback,
         )
-        col.dispatch()
-        col.transfer()
+        job_forks, job_join, job_active, job_overflow, job_next, map_sched = (
+            fetched
+        )
+        # the region cursors advance on device; only the readback copy above
+        # crosses to the host
         self._arena = dataclasses.replace(self._arena, next=summary.job_next)
 
         done: List[JobHandle] = []
@@ -536,12 +523,7 @@ class EpochMultiplexer:
             r = self._regions[j]
             d = pops[j]
             if bool(job_overflow[j]):
-                r.handle.error = JobFailure(
-                    f"job {r.handle.job.name!r} overflowed its region: "
-                    f"quota={r.active_quota}"
-                )
-                r.handle.status = JobStatus.FAILED
-                done.append(self._release(j))
+                done.append(self._fail(j))
                 continue
             if bool(job_join[j]):
                 r.sched.push_join(d.cen, d.start, d.count)
@@ -558,7 +540,7 @@ class EpochMultiplexer:
             st.shared_transfers += shared_dispatches
 
         if bool(map_sched):
-            self._heap = self._maps.run(map_launches, self._heap, col)
+            self._heap = self._loop.maps.run(map_launches, self._heap, col)
 
         col.epoch(self._global_epochs,
                   sum(d.n_ranges for d in pops.values()))
@@ -581,40 +563,14 @@ class EpochMultiplexer:
             out.extend(self.step())
         return out
 
-    def stats(self) -> RunStats:
-        """Fleet-level stats: V_inf terms counted once per global epoch."""
-        return self._col.result()
-
-    # ------------------------------------------------- completion / reuse
-    def _finalize(self, j: int) -> JobHandle:
-        """Extract the region's solo-equivalent result; free the region."""
-        r = self._regions[j]
-        s = r.slot
-        sub = s.program
-        value = self._state.value[
-            s.base : s.base + r.active_quota, : sub.value_width
-        ]
-        heap = {
-            hv.name: self._heap[s.prefix + hv.name] for hv in sub.heap
-        }
-        r.handle.result = JobResult(heap=heap, value=value, stats=r.stats)
-        r.handle.status = JobStatus.DONE
-        return self._release(j)
-
-    def _release(self, j: int) -> JobHandle:
-        r = self._regions[j]
-        h = r.handle
-        r.handle = None
-        r.sched = None
-        r.stats = None
-        r.active_quota = 0
-        return h
-
+    # ------------------------------------------------- streaming admission
     def admit(self, handle: JobHandle) -> bool:
         """Seed a queued job into a freed region, mid-flight.
 
-        Only a region fused for the *same program template* can be reused
-        (the fused task table is compiled in); the new job may carry its own
+        A region can be reused by any job whose program is *structurally
+        equal* to the region's fused-in template (``Program.structural_hash``
+        — same task/map/heap tables and task bytecode; the phase-2 trace is
+        identical, so nothing retraces).  The new job may carry its own
         initial task, heap init, and a quota up to the region size.  Returns
         False when no compatible free region exists.
         """
@@ -623,9 +579,11 @@ class EpochMultiplexer:
             if r.handle is not None:
                 continue
             s = r.slot
-            if s.program is not job.program and s.program != job.program:
-                continue
             if job.quota > s.quota:
+                continue
+            if s.program is not job.program and (
+                s.program.structural_hash() != job.program.structural_hash()
+            ):
                 continue
             self._seed_region(r, handle)
             return True
@@ -664,3 +622,145 @@ class EpochMultiplexer:
         r.stats = JobStats()
         r.active_quota = job.quota
         handle.status = JobStatus.RUNNING
+
+
+# --------------------------------------------------------------------------
+# Resident driver
+# --------------------------------------------------------------------------
+class DeviceMultiplexer(_FleetBase):
+    """Device-resident wave execution (DESIGN.md §9).
+
+    The whole admitted fleet runs to completion inside one
+    ``lax.while_loop``: per-region scheduler stacks live on device
+    (``batched_device_stacks``), the :class:`~repro.core.tvm.JobArena`
+    region cursors and per-region trailing reclamation ride the loop carry,
+    and every region's pop is fused into one per-lane epoch-number vector
+    per iteration.  Per-wave V_inf is O(1): one dispatch + one scalar
+    readback for the entire wave, vs one per global epoch on
+    :class:`EpochMultiplexer` — while per-job results stay bit-identical to
+    solo ``HostEngine.run``.
+
+    The trade (host-mux-only features): no streaming completion, no
+    mid-flight region reuse (``admit`` always refuses — queued jobs wait for
+    the next wave), no gang policies (every live region pops each global
+    epoch, i.e. ``fuse_all``), and masked dispatch only.  A job overflowing
+    its region fails alone: its stack pointer zeroes and its neighbours
+    keep running.
+    """
+
+    def __init__(
+        self,
+        handles: Sequence[JobHandle],
+        capacity: Optional[int] = None,
+        dispatch: Any = "masked",
+        stack_depth: int = 1 << 10,
+        collect_stats: bool = True,
+        stats_factory=None,
+        seg_offsets_fn=None,
+    ):
+        super().__init__(
+            handles, capacity=capacity,
+            collect_stats=collect_stats, stats_factory=stats_factory,
+        )
+        if resolve_policy(dispatch).name != "masked":
+            raise ValueError(_COMPACTED_RESIDENT_MSG)
+        self.stack_depth = stack_depth
+        self._loop = EpochLoop(
+            self.program, dispatch,
+            seg_offsets_fn=seg_offsets_fn, skip_idle_types=True,
+        )
+        self.policy = self._loop.policy
+        self._ran = False
+
+    def step(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
+        """Run the *entire wave* to completion in one resident loop.
+
+        Returns every handle (DONE or FAILED) in region order; subsequent
+        calls return [] (the wave is closed — resubmit through a new wave).
+        """
+        if self._ran or not self.live:
+            return []
+        self._ran = True
+        J = len(self._slots)
+        jstack, rstack, sp = batched_device_stacks(
+            J, self.stack_depth,
+            cens=np.ones(J, np.int32),
+            starts=np.asarray([s.base for s in self._slots], np.int32),
+            counts=np.ones(J, np.int32),
+        )
+        carry = _fresh_resident_carry(
+            self._state, self._heap, self._arena, jstack, rstack, sp,
+            n_regions=J,
+        )
+        out = self._loop.run_resident(carry, max_epochs, n_regions=J)
+        # the wave's one scalar readback
+        (failed, failed_stack, sp_left, n_epochs, job_epochs, job_tasks,
+         job_forks, job_peak, m_ct, m_el, m_ln) = jax.device_get(
+            (
+                out.failed, out.failed_stack, out.sp, out.n_epochs,
+                out.job_epochs, out.job_tasks, out.job_forks, out.job_peak,
+                out.map_launches, out.map_elements, out.map_lanes,
+            )
+        )
+        # a region still holding stack entries hit the epoch guard: fail it
+        # (like an overflow — its schedule is unfinished) so the wave always
+        # terminates with every handle resolved, never wedged RUNNING
+        timed_out = np.asarray(sp_left) > 0
+        failed = np.asarray(failed) | timed_out
+        self._state = out.state
+        self._heap = out.heap
+        self._arena = out.arena
+
+        col = self._col
+        col.dispatch()
+        col.transfer()
+        # every global epoch fused all regions still live then; O(1) bulk
+        # accounting from the readback, same ledger as the host driver
+        col.epoch(int(n_epochs), n_ranges=int(job_epochs.sum()),
+                  n=int(n_epochs))
+        col.lanes(int(job_tasks.sum()), int(n_epochs) * self.capacity, None)
+        col.forks(int(job_forks.sum()))
+        col.tv_peak(int((job_peak + np.asarray(
+            [s.base for s in self._slots])).max()) if J else 0)
+        if int(m_ct):
+            # map payloads launched in-loop: fold the carry's totals in
+            col.map_launch(_hilo_value(m_el), _hilo_value(m_ln),
+                           n=int(m_ct))
+
+        done: List[JobHandle] = []
+        for j in range(J):
+            r = self._regions[j]
+            if not r.running:
+                continue
+            r.stats = JobStats(
+                epochs=int(job_epochs[j]),
+                tasks_executed=int(job_tasks[j]),
+                total_forks=int(job_forks[j]),
+                peak_tv_slots=int(job_peak[j]),
+                shared_dispatches=1,
+                shared_transfers=1,
+            )
+            if bool(failed[j]):
+                if bool(timed_out[j]):
+                    reason = f"exceeded max_epochs={max_epochs}"
+                elif bool(failed_stack[j]):
+                    reason = (
+                        f"job {r.handle.job.name!r} exhausted the resident "
+                        f"scheduler stack: stack_depth={self.stack_depth}"
+                    )
+                else:
+                    reason = None  # TV region overflow: the default message
+                done.append(self._fail(j, reason=reason))
+            else:
+                done.append(self._finalize(j))
+        return done
+
+    def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
+        """API parity with :class:`EpochMultiplexer`."""
+        return self.step(max_epochs=max_epochs)
+
+    def admit(self, handle: JobHandle) -> bool:
+        """Resident waves are closed: no mid-flight admission (the trade for
+        O(1) per-wave V_inf — the host never sees a freed region until the
+        whole wave drains)."""
+        return False

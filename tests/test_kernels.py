@@ -202,3 +202,55 @@ def test_type_rank_compaction_property(lanes):
         dest = starts[tnp[anp]] + rnp[anp]
         assert sorted(dest.tolist()) == list(range(int(anp.sum())))
     assert (rnp[~anp] == -1).all()
+
+
+# -------------------------------------------------- segmented_fork_scan
+@pytest.mark.parametrize(
+    "n,n_segs,blk", [(64, 3, 32), (300, 5, 128), (1024, 2, 1024), (4097, 4, 1024)]
+)
+def test_segmented_fork_scan_matches_oracle(n, n_segs, blk):
+    """A/B: the Pallas segmented scan (interpret mode) vs the jnp reference
+    the JobArena commit uses by default — including out-of-range segment
+    ids (unowned TV lanes), which must contribute nothing."""
+    from repro.kernels.fork_compact import segmented_fork_scan
+
+    counts = RNG.randint(0, 4, n).astype(np.int32)
+    seg = RNG.randint(0, n_segs + 1, n).astype(np.int32)  # n_segs = unowned
+    oi, ti = segmented_fork_scan(
+        jnp.asarray(counts), jnp.asarray(seg), n_segs, block=blk,
+        interpret=True,
+    )
+    orf, trf = ref.segmented_fork_scan_ref(
+        jnp.asarray(counts), jnp.asarray(seg), n_segs
+    )
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(orf))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(trf))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3)),
+                min_size=1, max_size=200))
+def test_segmented_fork_scan_property(lanes):
+    """Within every segment, offsets are that segment's exclusive cumsum —
+    the per-region contiguous child allocation invariant."""
+    counts = np.asarray([c for c, _ in lanes], np.int32)
+    seg = np.asarray([s for _, s in lanes], np.int32)
+    offs, totals = ref.segmented_fork_scan_ref(
+        jnp.asarray(counts), jnp.asarray(seg), 4
+    )
+    offs, totals = np.asarray(offs), np.asarray(totals)
+    for s in range(4):
+        m = seg == s
+        expect = np.cumsum(counts[m]) - counts[m]
+        np.testing.assert_array_equal(offs[m], expect)
+        assert totals[s] == counts[m].sum()
+
+
+def test_segmented_fork_offsets_ops_dispatch():
+    """ops wrapper: ref on CPU, interpret mode explicitly."""
+    counts = jnp.asarray([1, 2, 0, 3], jnp.int32)
+    seg = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    for impl in ("ref", "interpret"):
+        offs, totals = ops.segmented_fork_offsets(counts, seg, 2, impl=impl)
+        np.testing.assert_array_equal(np.asarray(offs), [0, 0, 1, 2])
+        np.testing.assert_array_equal(np.asarray(totals), [1, 5])

@@ -309,3 +309,72 @@ def test_map_launch_skipped_when_domain_all_zero():
     assert int(values[0, 0]) == 1
     assert stats.map_launches == 0
     assert np.asarray(heap["out"]).sum() == 0
+
+
+# ------------------------------------------- batched device stacks (§9)
+def test_batched_device_stacks_seed_and_pop():
+    from repro.core import batched_device_pop, batched_device_stacks
+
+    j, r, sp = batched_device_stacks(
+        3, 4, cens=[1, 1, 1], starts=[0, 10, 20], counts=[1, 2, 3]
+    )
+    assert j.shape == (3, 4) and r.shape == (3, 4, 2)
+    cen, start, count, live, sp2 = batched_device_pop(j, r, sp)
+    np.testing.assert_array_equal(np.asarray(live), [True, True, True])
+    np.testing.assert_array_equal(np.asarray(cen), [1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(start), [0, 10, 20])
+    np.testing.assert_array_equal(np.asarray(count), [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(sp2), [0, 0, 0])
+    # popping drained stacks reports dead regions with inert zero ranges
+    cen, start, count, live, sp3 = batched_device_pop(j, r, sp2)
+    np.testing.assert_array_equal(np.asarray(live), [False] * 3)
+    np.testing.assert_array_equal(np.asarray(cen), [0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(count), [0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(sp3), [0, 0, 0])
+
+
+def test_batched_device_push_is_per_region_conditional():
+    from repro.core import (
+        batched_device_pop,
+        batched_device_push,
+        batched_device_stacks,
+    )
+
+    j, r, sp = batched_device_stacks(2, 4)
+    j, r, sp, of = batched_device_push(
+        j, r, sp,
+        jnp.asarray([5, 6]), jnp.asarray([7, 8]), jnp.asarray([2, 3]),
+        jnp.asarray([True, False]), 4,
+    )
+    assert not bool(np.asarray(of).any())
+    np.testing.assert_array_equal(np.asarray(sp), [2, 1])
+    cen, start, count, live, _ = batched_device_pop(j, r, sp)
+    # region 0 sees its new entry; region 1 still sees its seed
+    np.testing.assert_array_equal(np.asarray(cen), [5, 1])
+    np.testing.assert_array_equal(np.asarray(start), [7, 0])
+    np.testing.assert_array_equal(np.asarray(count), [2, 1])
+
+
+def test_batched_device_push_flags_overflow_per_region():
+    from repro.core import batched_device_push, batched_device_stacks
+
+    j, r, sp = batched_device_stacks(2, 1)  # depth 1: the seed fills it
+    ones = jnp.asarray([1, 1])
+    j, r, sp, of = batched_device_push(
+        j, r, sp, ones, ones, ones, jnp.asarray([True, False]), 1
+    )
+    np.testing.assert_array_equal(np.asarray(of), [True, False])
+
+
+def test_legacy_single_region_wrappers_match_batched():
+    from repro.core.scheduler import device_push, device_stacks
+
+    j, r = device_stacks(8, cen=2, start=3, count=4)
+    assert j.shape == (8,) and r.shape == (8, 2)
+    assert int(j[0]) == 2 and list(np.asarray(r[0])) == [3, 4]
+    j2, r2, sp2 = device_push(
+        j, r, jnp.asarray(1), jnp.asarray(9), jnp.asarray(5),
+        jnp.asarray(6), jnp.asarray(True), 8,
+    )
+    assert int(sp2) == 2
+    assert int(j2[1]) == 9 and list(np.asarray(r2[1])) == [5, 6]

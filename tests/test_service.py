@@ -321,3 +321,116 @@ def test_multiplexer_direct_single_job_matches_engine():
     assert fs.epochs == stats.epochs
     assert fs.dispatches == stats.dispatches
     assert fs.scalar_transfers == stats.scalar_transfers
+
+
+# ------------------------------------------- structural program hashing
+def _make_tree_prog(fanout=2):
+    """Build a fresh Program object each call: same construction path =>
+    same structure, but distinct function objects and closures.  The walk
+    depth is an *initial arg* (argi(1)), so structurally equal jobs can
+    still run for different lengths."""
+
+    def _node(ctx):
+        d, maxd = ctx.argi(0), ctx.argi(1)
+        leaf = d >= maxd
+        ctx.emit(d, where=leaf)
+        for _ in range(fanout):
+            ctx.fork("node", argi=(d + 1, maxd), where=~leaf)
+        ctx.join("sum", where=~leaf)
+
+    def _sum(ctx):
+        cv = ctx.child_values(fanout)
+        ctx.emit(cv[:, 0].sum())
+
+    return Program(
+        name=f"tree{fanout}",
+        tasks=(TaskType("node", _node), TaskType("sum", _sum)),
+        n_arg_i=2,
+    )
+
+
+def test_structural_hash_equality_and_sensitivity():
+    import dataclasses
+
+    a, b, c = _make_tree_prog(2), _make_tree_prog(2), _make_tree_prog(3)
+    assert a.structural_hash() == b.structural_hash()
+    # captured constants (the closure's fanout) are part of the structure
+    assert a.structural_hash() != c.structural_hash()
+    # the display name is cosmetic, not structural
+    assert (
+        a.structural_hash()
+        == dataclasses.replace(a, name="renamed").structural_hash()
+    )
+    # the fused program namespaces tasks/heaps: structurally different
+    fused, _ = fuse_programs([a, b], [32, 32])
+    assert fused.structural_hash() != a.structural_hash()
+
+
+def test_structurally_equal_tenant_reuses_region_without_new_wave():
+    """ROADMAP item: a freed region is reseeded by any same-shape tenant —
+    an independently built (structurally equal) program streams into the
+    region freed by a shorter job while the wave is still in flight,
+    instead of forcing a second wave/retrace."""
+    p1, p2 = _make_tree_prog(), _make_tree_prog()
+    assert p1 is not p2
+    svc = JobService(capacity=512, max_jobs=2)
+    a = svc.submit(p1, InitialTask(task="node", argi=(0, 2)), quota=256,
+                   name="short")
+    b = svc.submit(p1, InitialTask(task="node", argi=(0, 6)), quota=256,
+                   name="long")
+    c = svc.submit(p2, InitialTask(task="node", argi=(0, 3)), quota=256,
+                   name="late")
+    muxes = set()  # hold strong refs: a freed mux's id() could be reused
+    for _ in svc.completions():
+        muxes.add(svc._mux)
+    for h in (a, b, c):
+        assert h.status is JobStatus.DONE
+    # one EpochMultiplexer served all three: c streamed into a's freed
+    # region (p2 is a different object but structurally equal to p1)
+    assert len(muxes) == 1
+    solo = HostEngine(p2, capacity=256).run(InitialTask(task="node",
+                                                        argi=(0, 3)))
+    np.testing.assert_array_equal(
+        np.asarray(c.result.value), np.asarray(solo[1])
+    )
+
+
+def test_structurally_different_tenant_waits_for_next_wave():
+    p1, p2 = _make_tree_prog(2), _make_tree_prog(3)
+    svc = JobService(capacity=512, max_jobs=2)
+    svc.submit(p1, InitialTask(task="node", argi=(0, 2)), quota=256)
+    svc.submit(p1, InitialTask(task="node", argi=(0, 6)), quota=256)
+    svc.submit(p2, InitialTask(task="node", argi=(0, 2)), quota=256)
+    muxes = set()  # hold strong refs: a freed mux's id() could be reused
+    for _ in svc.completions():
+        muxes.add(svc._mux)
+    assert len(muxes) == 2  # incompatible template: a second wave ran
+
+
+# ------------------------------------- segmented fork-scan integration
+def test_mux_with_pallas_segmented_fork_offsets():
+    """The arena allocator's plug point accepts the Pallas segmented scan
+    (interpret mode on CPU) and produces bit-identical fleet results."""
+    from repro.kernels import ops as kops
+
+    def seg_offsets(counts, seg, n_segs):
+        return kops.segmented_fork_offsets(counts, seg, n_segs,
+                                           impl="interpret")
+
+    ns = (8, 9)
+    solo = {
+        n: HostEngine(fib.PROGRAM, capacity=128).run(fib.initial(n))
+        for n in ns
+    }
+    handles = [
+        JobHandle(i, Job(fib.PROGRAM, fib.initial(n), quota=128,
+                         name=f"fib{n}"))
+        for i, n in enumerate(ns)
+    ]
+    mux = EpochMultiplexer(handles, seg_offsets_fn=seg_offsets)
+    mux.run()
+    for h, n in zip(handles, ns):
+        np.testing.assert_array_equal(
+            np.asarray(h.result.value), np.asarray(solo[n][1])
+        )
+        assert h.result.stats.epochs == solo[n][2].epochs
