@@ -345,9 +345,9 @@ def bench_service():
         )
 
 
-# ---------------------- device-resident fleet execution (DESIGN.md §9)
+# ------------- chunked device-resident fleet execution (DESIGN.md §9–10)
 def bench_device_service():
-    """Resident fleet vs host-mux vs sum-of-solo: the V_inf ladder.
+    """Resident fleet vs host-mux vs sum-of-solo, plus the K-epoch ladder.
 
     Each ``device_service_*`` row runs the same fleet three ways — N solo
     ``HostEngine`` runs (V_inf paid per job per epoch), the host-loop
@@ -355,15 +355,26 @@ def bench_device_service():
     ``lax.while_loop`` wave (paid once per *wave*: one dispatch + one
     readback, O(1)) — and reports all three dispatch+transfer totals plus
     the resident path's map-lane waste (its measurable work overhead).
+
+    The ``device_service_*_k{K}`` rows sweep the chunk knob between the
+    two endpoints: the wave re-enters the compiled loop every K epochs, so
+    measured readbacks per wave must equal ⌈epochs/K⌉ (both numbers are
+    emitted so the invariant is diffable); the timed re-run reuses the
+    wave-template cache, so ``template_hits`` also guards compiled-loop
+    reuse across identical consecutive waves.
     """
+    import math
+
     from repro.apps import get_fleet
     from repro.core import HostEngine
-    from repro.service import JobService
+    from repro.service import JobService, WaveTemplateCache
 
-    def run_svc(fleet, engine):
+    def run_svc(fleet, engine, chunk=None, cache=None):
         svc = JobService(
             capacity=sum(q for _, q in fleet), engine=engine,
             dispatch="masked" if engine == "device" else DISPATCH,
+            chunk=chunk if engine == "device" else None,
+            template_cache=cache,
         )
         for case, quota in fleet:
             svc.submit_case(case, quota=quota)
@@ -372,11 +383,13 @@ def bench_device_service():
 
     if SMOKE:
         fleets = [("fibx2", [get_fleet("fib_fleet")[0]] * 2)]
+        ladder = (4, None)  # one finite-K smoke row + the resident endpoint
     else:
         fleets = [
             ("mixed3", get_fleet("mixed3")),
             ("fibx4", get_fleet("fib_fleet")),
         ]
+        ladder = (1, 4, 16, None)
     for fname, fleet in fleets:
         solo_vinf = 0
         for case, quota in fleet:
@@ -401,6 +414,27 @@ def bench_device_service():
             f"map_lanes_wasted={ds.map_lanes_wasted};"
             f"map_util={ds.map_utilization:.3f}",
         )
+
+        # the K-ladder: readback cadence between host-mux and resident
+        for K in ladder:
+            cache = WaveTemplateCache()
+            ks = run_svc(fleet, "device", chunk=K, cache=cache).stats()
+            t_k = _time(
+                lambda f=fleet, K=K, c=cache: run_svc(
+                    f, "device", chunk=K, cache=c
+                ),
+                repeats=1,
+            )
+            expected = 1 if K is None else math.ceil(ks.epochs / K)
+            row(
+                f"device_service_{fname}_k{'inf' if K is None else K}",
+                t_k * 1e6,
+                f"jobs={len(fleet)};chunk={'inf' if K is None else K};"
+                f"epochs={ks.epochs};readbacks={ks.scalar_transfers};"
+                f"expected_readbacks={expected};dispatches={ks.dispatches};"
+                f"template_hits={cache.hits};"
+                f"map_lanes_wasted={ks.map_lanes_wasted}",
+            )
 
 
 # --------------------------------------------------- TVM serving engine
@@ -525,7 +559,7 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_3.json for full or --smoke runs, off for --only subset "
+        "to BENCH_4.json for full or --smoke runs, off for --only subset "
         "runs (pass a path to force, '' to disable)",
     )
     args = ap.parse_args(argv)
@@ -543,7 +577,7 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_3.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_4.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
 

@@ -5,6 +5,7 @@
 # scheduler (phase-1 policy: stacks, coalescing, dispatch sizing) over the
 # TVM (phase-2/3 execution substrate).
 from .engine import (
+    ChunkSummary,
     DeviceEngine,
     EngineError,
     EpochLoop,
@@ -30,11 +31,13 @@ from .scheduler import (
     batched_device_push,
     batched_device_stacks,
     launch_bucket,
+    reseed_region_stacks,
     resolve_mux_policy,
     resolve_policy,
 )
 
 __all__ = [
+    "ChunkSummary",
     "DeviceEngine",
     "EngineError",
     "EpochLoop",
@@ -64,6 +67,7 @@ __all__ = [
     "batched_device_push",
     "batched_device_stacks",
     "launch_bucket",
+    "reseed_region_stacks",
     "resolve_mux_policy",
     "resolve_policy",
 ]

@@ -31,9 +31,17 @@ termination predicate — and each engine is one configuration of it:
     ``EpochMultiplexer`` and the resident ``DeviceMultiplexer`` reuse the
     same two configurations with a :class:`~repro.core.tvm.JobArena` and a
     per-lane epoch-number vector, fusing many tenant regions into each
-    epoch.  The resident fleet is the work-together principle taken to its
-    limit: the whole fleet's critical-path overhead is one dispatch + one
-    readback per *wave*.
+    epoch.
+
+The resident loop is *chunked* (DESIGN.md §10): :meth:`EpochLoop.run_chunk`
+runs the resident body until every stack drains **or** a traced epoch bound
+``limit`` is reached, and the bound is a dynamic argument of one compiled
+loop — so host-mux cadence (K=1), chunked residency (K epochs per
+re-entry), and the fully-resident wave (limit = the epoch guard) are the
+same compiled template re-entered with different bounds.  Between chunks
+the host fetches one compact :class:`ChunkSummary` (per-region stack
+pointers, failure flags, solo-comparable accumulators, arena cursors) —
+total V_inf for a wave of E epochs is ⌈E/K⌉ dispatches + readbacks.
 """
 from __future__ import annotations
 
@@ -96,15 +104,18 @@ class MapLauncher:
     instead (see :meth:`EpochLoop.resident_body`).
     """
 
-    def __init__(self, program: Program, donate: bool = False):
+    def __init__(self, program: Program, donate: bool = False,
+                 on_trace: Optional[Callable[[], None]] = None):
         self.program = program
         self._donate = donate
+        self._on_trace = on_trace or (lambda: None)
         self._cache: Dict[Tuple[int, int, int], Any] = {}
 
     def _get_step(self, mid: int, P: int, D: int):
         key = (mid, P, D)
         if key not in self._cache:
             def mfn(heap, where, argi, argf):
+                self._on_trace()
                 return tvm.run_map_payload(
                     self.program, heap, mid, where, argi, argf, D
                 )
@@ -185,6 +196,51 @@ def _hilo_value(acc) -> int:
     return int(acc[0]) * _HILO_BASE + int(acc[1])
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkSummary:
+    """Host-side snapshot fetched once per chunk boundary (DESIGN.md §10).
+
+    The chunked driver's readback policy: per-region stack pointers
+    (``sp[j] == 0`` means region ``j`` drained — a completion to surface),
+    failure flags, the solo-comparable per-region accumulators, map-launch
+    volumes, and the :class:`~repro.core.tvm.JobArena` region cursors.
+    Everything the host needs to stream completions, reseed freed regions,
+    and account stats between chunks — without touching the bulk TV/heap
+    state, which stays on device in the :class:`ResidentCarry`.
+    """
+
+    n_epochs: int             # global epochs run so far (all chunks)
+    sp: np.ndarray            # i32[J] remaining stack entries per region
+    failed: np.ndarray        # bool[J] region failed (TV or stack overflow)
+    failed_stack: np.ndarray  # bool[J] the failure was scheduler stack depth
+    job_epochs: np.ndarray    # i32[J] per-region epochs (== solo epochs)
+    job_tasks: np.ndarray     # i32[J] per-region tasks executed (T1)
+    job_forks: np.ndarray     # i32[J] per-region total forks
+    job_peak: np.ndarray      # i32[J] per-region peak TV cursor (relative)
+    map_launches: int
+    map_elements: int
+    map_lanes: int
+    arena_next: Optional[np.ndarray]  # i32[J] region cursors (fleet only)
+
+
+def _map_width_ladder(max_domain: int, minimum: int = 8) -> Tuple[int, ...]:
+    """Power-of-2 payload widths, capped at ``max_domain``.
+
+    The resident map launcher picks one of these at runtime from the traced
+    max of the scheduled lanes' live domains (a segmented max over the
+    ``where`` mask), so short-domain epochs stop paying ``max_domain``-wide
+    launches.  The cap keeps the worst case exactly the old fixed-width
+    behaviour, never worse.
+    """
+    widths: List[int] = []
+    w = max(1, minimum)
+    while w < max_domain:
+        widths.append(w)
+        w *= 2
+    widths.append(max_domain)
+    return tuple(widths)
+
+
 def _fresh_resident_carry(
     state, heap, arena, jstack, rstack, sp, n_regions: int
 ) -> ResidentCarry:
@@ -229,10 +285,19 @@ class EpochLoop:
         self._seg_offsets_fn = seg_offsets_fn
         self._donate = donate
         self._skip_idle_types = skip_idle_types
-        self.maps = MapLauncher(program, donate=donate)
+        # trace-counter hook: every traced builder body bumps this at trace
+        # time (tracing executes the Python body; cached executions do not),
+        # so "two identical consecutive waves retraced nothing" is a
+        # testable invariant of the wave-template cache, not a hope
+        self.trace_count = 0
+        self.maps = MapLauncher(program, donate=donate,
+                                on_trace=self._mark_trace)
         self._step_cache: Dict[Any, Any] = {}
         self._compact_cache: Dict[int, Any] = {}
         self._resident_cache: Dict[Any, Any] = {}
+
+    def _mark_trace(self) -> None:
+        self.trace_count += 1
 
     # ---------------------------------------------------- traced step bodies
     def _masked_step_fn(self, P: int):
@@ -249,6 +314,7 @@ class EpochLoop:
         skip = self._skip_idle_types
 
         def step(state, heap, arena, start, count, cen):
+            self._mark_trace()
             idx = start + jnp.arange(P, dtype=jnp.int32)
             in_range = jnp.arange(P, dtype=jnp.int32) < count
             cidx = jnp.clip(idx, 0, state.capacity - 1)
@@ -292,6 +358,7 @@ class EpochLoop:
             offsets_fn = self._fork_offsets_fn
 
             def cfn(state, start, count, cen):
+                self._mark_trace()
                 idx = start + jnp.arange(P, dtype=jnp.int32)
                 in_range = jnp.arange(P, dtype=jnp.int32) < count
                 cidx = jnp.clip(idx, 0, state.capacity - 1)
@@ -313,6 +380,7 @@ class EpochLoop:
 
             def step(state, heap, arena, start, count, cen, perm, toffs,
                      tcounts):
+                self._mark_trace()
                 per_type, idx, active = tvm.trace_tasks_compacted(
                     program, state, heap, start, count, cen,
                     perm, toffs, tcounts, buckets,
@@ -388,15 +456,6 @@ class EpochLoop:
         )
 
     # --------------------------------------------------- resident while_loop
-    def resident_cond(self, max_epochs: int):
-        """Traced termination predicate: any region stack non-empty and the
-        epoch guard not yet hit (failed regions zero their own sp)."""
-
-        def cond(carry: ResidentCarry):
-            return (carry.sp > 0).any() & (carry.n_epochs < max_epochs)
-
-        return cond
-
     def resident_body(self, capacity: int, stack_depth: int):
         """Body of the resident epoch loop.
 
@@ -422,6 +481,7 @@ class EpochLoop:
         step_fn = self._masked_step_fn(capacity)
 
         def body(carry: ResidentCarry):
+            self._mark_trace()
             cen, start, count, live, sp = batched_device_pop(
                 carry.jstack, carry.rstack, carry.sp
             )
@@ -483,8 +543,11 @@ class EpochLoop:
             failed = failed | of1 | of2
             sp = jnp.where(failed, 0, sp)
 
-            # map payloads sized by MapType.max_domain (live-domain waste is
-            # accounted so the resident trade stays measurable in RunStats)
+            # map payloads sized to a power-of-2 width bucket picked by a
+            # traced max over the scheduled lanes' live domains: each bucket
+            # width traces its own lax.switch branch (shapes stay static),
+            # runtime pays only the selected one — instead of always
+            # MapType.max_domain.  Residual padding waste stays accounted.
             map_ct = carry.map_launches
             map_el = carry.map_elements
             map_ln = carry.map_lanes
@@ -495,33 +558,39 @@ class EpochLoop:
                         f"map '{mt.name}' needs max_domain>0 for resident "
                         "(device) execution"
                     )
-                fired = ml.where.any()
                 dom = jnp.clip(
                     jnp.asarray(mt.domain(ml.argi), jnp.int32),
                     0, mt.max_domain,
                 )
+                live_dom = jnp.where(ml.where, dom, 0)
+                dmax = live_dom.max().astype(jnp.int32)
+                # all-empty domains skip the launch (and its counters),
+                # exactly as the host MapLauncher does
+                fired = dmax > 0
+                widths = _map_width_ladder(mt.max_domain)
+                warr = jnp.asarray(widths, jnp.int32)
+                bidx = jnp.clip(
+                    jnp.searchsorted(warr, dmax, side="left"),
+                    0, len(widths) - 1,
+                )
+                branches = [lambda h: h] + [
+                    lambda h, _ml=ml, _D=D: tvm.run_map_payload(
+                        program, h, _ml.map_id, _ml.where, _ml.argi,
+                        _ml.argf, _D,
+                    )
+                    for D in widths
+                ]
+                heap = jax.lax.switch(
+                    jnp.where(fired, bidx + 1, 0), branches, heap
+                )
                 fire_i = fired.astype(jnp.int32)
                 map_ct = map_ct + fire_i
-                map_el = _hilo_add(
-                    map_el,
-                    fire_i * jnp.where(ml.where, dom, 0).sum().astype(
-                        jnp.int32
-                    ),
-                )
+                map_el = _hilo_add(map_el, live_dom.sum().astype(jnp.int32))
                 map_ln = _hilo_add(
                     map_ln,
-                    fire_i * jnp.asarray(
-                        int(ml.where.shape[0]) * mt.max_domain, jnp.int32
-                    ),
-                )
-                heap = jax.lax.cond(
-                    fired,
-                    lambda h, _ml=ml, _mt=mt: tvm.run_map_payload(
-                        program, h, _ml.map_id, _ml.where, _ml.argi,
-                        _ml.argf, _mt.max_domain,
-                    ),
-                    lambda h: h,
-                    heap,
+                    fire_i
+                    * jnp.asarray(int(ml.where.shape[0]), jnp.int32)
+                    * warr[bidx],
                 )
 
             return ResidentCarry(
@@ -538,24 +607,72 @@ class EpochLoop:
 
         return body
 
-    def run_resident(self, carry: ResidentCarry, max_epochs: int,
-                     n_regions: int) -> ResidentCarry:
-        """Run the resident loop to completion: one dispatch for the whole
-        program (or wave).  The compiled loop is cached per (n_regions,
-        capacity, stack_depth, max_epochs)."""
+    def run_chunk(self, carry: ResidentCarry, limit,
+                  n_regions: int) -> ResidentCarry:
+        """Run the resident loop until every stack drains or the traced
+        global-epoch counter reaches ``limit`` — one *chunk* (DESIGN.md
+        §10).
+
+        ``limit`` is a **dynamic** argument of one compiled loop, cached per
+        (n_regions, capacity, stack_depth) — so host-mux cadence
+        (``limit = n_epochs + 1``), chunked residency (``+ K``), and the
+        fully-resident wave (``limit`` = the epoch guard) all re-enter the
+        same compiled template; nothing retraces between chunks or between
+        K choices.  A call whose carry is already drained (or already at
+        ``limit``) is a clean no-op: the cond fails on entry and the carry
+        comes back unchanged.
+        """
         capacity = carry.state.capacity
         depth = carry.jstack.shape[1]
-        key = (n_regions, capacity, depth, max_epochs)
+        key = (n_regions, capacity, depth)
         if key not in self._resident_cache:
             body = self.resident_body(capacity, depth)
-            cond = self.resident_cond(max_epochs)
 
             @jax.jit
-            def loop(c):
+            def loop(c, lim):
+                def cond(cc: ResidentCarry):
+                    return (cc.sp > 0).any() & (cc.n_epochs < lim)
+
                 return jax.lax.while_loop(cond, body, c)
 
             self._resident_cache[key] = loop
-        return self._resident_cache[key](carry)
+        return self._resident_cache[key](carry, jnp.asarray(limit, jnp.int32))
+
+    def run_resident(self, carry: ResidentCarry, max_epochs: int,
+                     n_regions: int) -> ResidentCarry:
+        """Run the resident loop to completion: one chunk bounded only by
+        the epoch guard — one dispatch for the whole program (or wave)."""
+        return self.run_chunk(carry, max_epochs, n_regions)
+
+    def chunk_summary(self, carry: ResidentCarry) -> ChunkSummary:
+        """The chunk-boundary readback: one ``device_get`` of the compact
+        control/accounting scalars.  The arena's region cursors ride along
+        so a host multiplexer can reseed freed regions between chunks
+        without ever fetching the bulk TV/heap state."""
+        arena_next = None if carry.arena is None else carry.arena.next
+        (sp, failed, failed_stack, n_epochs, job_epochs, job_tasks,
+         job_forks, job_peak, m_ct, m_el, m_ln, a_next) = jax.device_get(
+            (
+                carry.sp, carry.failed, carry.failed_stack, carry.n_epochs,
+                carry.job_epochs, carry.job_tasks, carry.job_forks,
+                carry.job_peak, carry.map_launches, carry.map_elements,
+                carry.map_lanes, arena_next,
+            )
+        )
+        return ChunkSummary(
+            n_epochs=int(n_epochs),
+            sp=np.asarray(sp),
+            failed=np.asarray(failed),
+            failed_stack=np.asarray(failed_stack),
+            job_epochs=np.asarray(job_epochs),
+            job_tasks=np.asarray(job_tasks),
+            job_forks=np.asarray(job_forks),
+            job_peak=np.asarray(job_peak),
+            map_launches=int(m_ct),
+            map_elements=_hilo_value(m_el),
+            map_lanes=_hilo_value(m_ln),
+            arena_next=None if a_next is None else np.asarray(a_next),
+        )
 
 
 class HostEngine:
@@ -703,26 +820,18 @@ class DeviceEngine:
         )
         out = self.loop.run_resident(carry, max_epochs, n_regions=1)
         # the one scalar transfer of the whole run
-        failed, sp_left, n_epochs, tasks, forks, peak, m_ct, m_el, m_ln = (
-            jax.device_get(
-                (
-                    out.failed, out.sp, out.n_epochs, out.job_tasks,
-                    out.job_forks, out.job_peak, out.map_launches,
-                    out.map_elements, out.map_lanes,
-                )
-            )
-        )
-        if failed.any():
+        s = self.loop.chunk_summary(out)
+        if s.failed.any():
             raise EngineError("TV capacity or stack depth exhausted")
-        if sp_left.any():
+        if (s.sp > 0).any():
             raise EngineError(f"exceeded max_epochs={max_epochs}")
         stats = RunStats(
-            epochs=int(n_epochs), dispatches=1, scalar_transfers=1,
-            tasks_executed=int(tasks[0]),
-            lanes_launched=int(n_epochs) * self.capacity,
-            total_forks=int(forks[0]),
-            map_launches=int(m_ct), map_elements=_hilo_value(m_el),
-            map_lanes_launched=_hilo_value(m_ln),
+            epochs=s.n_epochs, dispatches=1, scalar_transfers=1,
+            tasks_executed=int(s.job_tasks[0]),
+            lanes_launched=s.n_epochs * self.capacity,
+            total_forks=int(s.job_forks[0]),
+            map_launches=s.map_launches, map_elements=s.map_elements,
+            map_lanes_launched=s.map_lanes,
         )
-        stats.peak_tv_slots = int(peak[0])
+        stats.peak_tv_slots = int(s.job_peak[0])
         return out.heap, out.state.value, stats

@@ -305,6 +305,29 @@ def batched_device_push(jstack, rstack, sp, cen, start, count, pred, depth: int)
     return jstack, rstack, sp + pred.astype(jnp.int32), overflow
 
 
+def reseed_region_stacks(jstack, rstack, sp, j: int, cen: int = 1,
+                         start: int = 0, count: int = 1):
+    """Reset region ``j``'s stack row to a fresh seed, leaving every other
+    region untouched.
+
+    The chunked resident driver (DESIGN.md §10) uses this between chunks to
+    re-admit a queued tenant into a freed region: the row is cleared and
+    reseeded exactly like :meth:`EpochScheduler.reset` / one row of
+    :func:`batched_device_stacks`, and the region's stack pointer returns
+    to 1 — so the re-entered ``lax.while_loop`` simply sees one more live
+    region, mid-wave.  Returns ``(jstack, rstack, sp)``.
+    """
+    jstack = jnp.asarray(jstack).at[j].set(0).at[j, 0].set(cen)
+    rstack = (
+        jnp.asarray(rstack)
+        .at[j].set(0)
+        .at[j, 0, 0].set(start)
+        .at[j, 0, 1].set(count)
+    )
+    sp = jnp.asarray(sp).at[j].set(1)
+    return jstack, rstack, sp
+
+
 def device_stacks(depth: int, cen: int = 1, start: int = 0, count: int = 1):
     """Single-region stacks (legacy layout: no leading region axis), seeded
     like :meth:`EpochScheduler.reset`; the stack pointer starts at 1."""

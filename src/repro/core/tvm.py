@@ -127,6 +127,24 @@ jax.tree_util.register_dataclass(
 )
 
 
+def arena_reset_region(arena: JobArena, j: int, base: int,
+                       quota: int) -> JobArena:
+    """Re-point region ``j``'s cursors at a freshly reseeded tenant.
+
+    The region's ``end`` shrinks (or grows back) to the new tenant's quota
+    and its ``nextFreeCore`` cursor returns to ``base + 1`` (root slot
+    occupied), exactly the solo ``init_state`` layout shifted by ``base``.
+    Shared by the host multiplexer's mid-flight reuse and the chunked
+    resident driver's between-chunk admission, so the two paths can never
+    drift.
+    """
+    return dataclasses.replace(
+        arena,
+        end=arena.end.at[j].set(base + quota),
+        next=arena.next.at[j].set(base + 1),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class MuxEpochSummary:
     """Per-job end-of-epoch scalars for the fused multi-tenant readback.

@@ -4,8 +4,11 @@
 # instead of once per program — the §3 "work-together" principle extended
 # across tenants.  Two wave drivers: the host-loop EpochMultiplexer
 # (DESIGN.md §8; streaming completions, region reuse, compacted dispatch)
-# and the device-resident DeviceMultiplexer (DESIGN.md §9; the whole wave
-# in one lax.while_loop, O(1) dispatches + readbacks per wave).
+# and the chunked-resident DeviceMultiplexer (DESIGN.md §9–10; K epochs per
+# lax.while_loop re-entry, ⌈epochs/K⌉ dispatches + readbacks per wave, with
+# streaming completions and region reuse at the chunk boundaries; K=∞ is
+# the fully resident O(1) wave).  Structurally identical consecutive device
+# waves reuse one compiled chunk template (WaveTemplateCache).
 from .api import JobService, merge_stats
 from .jobs import (
     AdmissionError,
@@ -15,6 +18,9 @@ from .jobs import (
     JobResult,
     JobStats,
     JobStatus,
+    WaveTemplate,
+    WaveTemplateCache,
+    wave_template_key,
 )
 from .multiplexer import (
     DeviceMultiplexer,
@@ -35,6 +41,9 @@ __all__ = [
     "JobStats",
     "JobStatus",
     "TenantSlot",
+    "WaveTemplate",
+    "WaveTemplateCache",
     "fuse_programs",
     "merge_stats",
+    "wave_template_key",
 ]

@@ -25,8 +25,11 @@ from .jobs import (
     JobHandle,
     JobResult,
     JobStatus,
+    WaveTemplate,
+    WaveTemplateCache,
     check_fleet_dtype,
     validate_job,
+    wave_template_key,
 )
 from .multiplexer import DeviceMultiplexer, EpochMultiplexer
 
@@ -63,11 +66,20 @@ class JobService:
     ``engine`` picks the wave driver: ``"host"`` (default) runs each wave
     on the host-loop :class:`~repro.service.multiplexer.EpochMultiplexer` —
     per-global-epoch V_inf, with streaming completion and mid-flight region
-    reuse; ``"device"`` runs each wave to completion inside one
-    ``lax.while_loop``
-    (:class:`~repro.service.multiplexer.DeviceMultiplexer`, DESIGN.md §9) —
-    O(1) V_inf per wave, but completions surface per wave and queued jobs
-    wait for the next wave.
+    reuse; ``"device"`` runs each wave resident inside a ``lax.while_loop``
+    (:class:`~repro.service.multiplexer.DeviceMultiplexer`, DESIGN.md
+    §9–10).  ``chunk`` (device engine only) is the K-knob: the resident
+    loop re-enters every K epochs, paying ⌈epochs/K⌉ readbacks per wave in
+    exchange for streaming completions and mid-flight region reuse at the
+    chunk boundaries; ``chunk=None`` (default) is the fully-resident
+    endpoint — O(1) V_inf per wave, completions surface per wave, queued
+    jobs wait for the next wave.
+
+    Device waves compile through a :class:`~repro.service.jobs.
+    WaveTemplateCache`: structurally identical consecutive waves (same
+    member ``structural_hash``es, quotas, capacity, stack depth, and K)
+    reuse one compiled chunk loop instead of retracing; ``trace_count``
+    exposes the compile-count guard.
     """
 
     def __init__(
@@ -83,6 +95,8 @@ class JobService:
         rank_fn=None,
         engine: str = "host",
         stack_depth: int = 1 << 10,
+        chunk: Optional[int] = None,
+        template_cache: Optional[WaveTemplateCache] = None,
     ):
         if engine not in ("host", "device"):
             raise ValueError(
@@ -101,8 +115,20 @@ class JobService:
                     "engine='device' runs every live region each epoch "
                     "(fuse_all); gang/pop_policy are host-engine options"
                 )
+            if chunk is not None and chunk < 1:
+                raise ValueError(f"chunk must be >= 1 or None, got {chunk}")
+        elif chunk is not None:
+            raise ValueError(
+                "chunk sets the resident readback cadence; it requires "
+                "engine='device' (the host engine reads back every epoch)"
+            )
         self.engine = engine
         self.stack_depth = stack_depth
+        self.chunk = chunk
+        self.template_cache = (
+            template_cache if template_cache is not None
+            else WaveTemplateCache()
+        )
         self.capacity = capacity
         self.max_jobs = max_jobs
         self.dispatch = dispatch
@@ -189,6 +215,14 @@ class JobService:
             merge_stats(total, self._mux.stats())
         return total
 
+    @property
+    def trace_count(self) -> int:
+        """Traced builder bodies across every device wave template — the
+        compile-count regression guard: after a wave, an identical
+        consecutive wave must leave this unchanged (its chunks run entirely
+        on the cached compiled loop)."""
+        return self.template_cache.trace_count
+
     # ------------------------------------------------------------ internal
     def _pending(self) -> bool:
         return bool(self._queue) or (self._mux is not None and self._mux.live)
@@ -204,12 +238,29 @@ class JobService:
             if not wave:
                 return []
             if self.engine == "device":
+                key = wave_template_key(
+                    [h.job for h in wave],
+                    sum(h.job.quota for h in wave),
+                    self.stack_depth, self.chunk,
+                )
+                tpl = self.template_cache.lookup(key)
                 self._mux = DeviceMultiplexer(
                     wave,
                     dispatch=self.dispatch,
                     stack_depth=self.stack_depth,
+                    chunk=self.chunk,
                     collect_stats=self.collect_stats,
+                    template=tpl,
                 )
+                if tpl is None:
+                    self.template_cache.store(
+                        WaveTemplate(
+                            key=key,
+                            program=self._mux.program,
+                            slots=self._mux.slots,
+                            loop=self._mux.loop,
+                        )
+                    )
             else:
                 self._mux = EpochMultiplexer(
                     wave,

@@ -17,9 +17,10 @@ neighbour).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -122,6 +123,90 @@ def validate_job(job: Job, capacity: int) -> None:
             f"job {job.name!r}: seed task {job.initial.task!r} not in "
             f"program {job.program.name!r}"
         ) from None
+
+
+@dataclasses.dataclass
+class WaveTemplate:
+    """One wave *shape*, compiled: the fused program, its fuse-time slot
+    layout, and the :class:`~repro.core.engine.EpochLoop` that owns every
+    compiled step / chunk ``while_loop`` traced against it.
+
+    Two waves whose members are structurally equal (``structural_hash``)
+    with the same quotas, capacity, stack depth, and chunk size K execute
+    the *same* phase-2 trace, so the second wave can run on the first
+    wave's template verbatim — only runtime state (TV, heap, stacks) is
+    rebuilt.  This is ``Program.structural_hash`` region reuse promoted
+    from one region to the whole wave.
+    """
+
+    key: Tuple
+    program: Any   # fused Program
+    slots: Any     # List[TenantSlot] (fuse-time layout)
+    loop: Any      # EpochLoop (owns the compiled chunk template)
+
+
+def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
+                      chunk: Optional[int]) -> Tuple:
+    """Cache key for one wave shape: everything that determines the traced
+    chunk loop — member structure and order, quota layout, TV capacity,
+    stack depth, and the chunk size K."""
+    return (
+        tuple(j.program.structural_hash() for j in jobs),
+        tuple(j.quota for j in jobs),
+        int(capacity),
+        int(stack_depth),
+        chunk,
+    )
+
+
+class WaveTemplateCache:
+    """LRU cache of :class:`WaveTemplate` per wave shape.
+
+    ``JobService(engine="device")`` consults it before fusing a wave:
+    a hit means structurally identical consecutive waves reuse one
+    compiled chunk loop instead of retracing (``hits``/``misses`` make the
+    reuse observable; ``trace_count`` sums the owned loops' trace-counter
+    hooks so tests can assert *zero* new traces on a hit).
+    """
+
+    def __init__(self, max_entries: int = 16):
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._entries: "collections.OrderedDict[Tuple, WaveTemplate]" = (
+            collections.OrderedDict()
+        )
+        # traces owned by templates since evicted: keeps trace_count
+        # monotone, so an eviction can never mask a genuine retrace
+        self._evicted_traces = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, key: Tuple) -> Optional[WaveTemplate]:
+        t = self._entries.get(key)
+        if t is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return t
+
+    def store(self, template: WaveTemplate) -> None:
+        self._entries[template.key] = template
+        self._entries.move_to_end(template.key)
+        while len(self._entries) > self.max_entries:
+            _, evicted = self._entries.popitem(last=False)
+            self._evicted_traces += evicted.loop.trace_count
+
+    @property
+    def trace_count(self) -> int:
+        """Total traced builder bodies across every template ever cached
+        (the compile-count regression guard reads this; evicted templates'
+        traces stay counted, so the total is monotone)."""
+        return self._evicted_traces + sum(
+            t.loop.trace_count for t in self._entries.values()
+        )
 
 
 def check_fleet_dtype(programs) -> Any:

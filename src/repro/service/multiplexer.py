@@ -25,33 +25,37 @@ levels of residency:
   (including structurally-equal program templates, see
   ``Program.structural_hash``), gang policies, and the compacted dispatch.
 
-* :class:`DeviceMultiplexer` is the *resident* driver (DESIGN.md §9): the
-  entire admitted wave runs to completion inside one ``lax.while_loop``,
-  with per-region scheduler stacks (``batched_device_stacks``) and the
-  :class:`~repro.core.tvm.JobArena` region cursors carried on device.
-  Per-wave V_inf is O(1) — one dispatch + one readback for the whole wave —
-  and the host only sees the final per-region heaps and stats.  The trade:
-  no per-epoch host visibility, so streaming completion and mid-flight
-  region reuse stay host-mux-only, and only the masked dispatch is
-  traceable.
+* :class:`DeviceMultiplexer` is the *chunked resident* driver (DESIGN.md
+  §9–10): the admitted wave runs inside a ``lax.while_loop`` with
+  per-region scheduler stacks (``batched_device_stacks``) and the
+  :class:`~repro.core.tvm.JobArena` region cursors carried on device, for
+  at most ``chunk`` (K) epochs per loop invocation.  At each chunk
+  boundary the host fetches one compact
+  :class:`~repro.core.engine.ChunkSummary` — so a wave of E epochs costs
+  ⌈E/K⌉ dispatches + readbacks, and between chunks the host streams
+  completions of drained regions and reseeds freed regions with queued
+  jobs (``Program.structural_hash`` reuse, no retrace).  ``chunk=None``
+  is the fully-resident endpoint (K=∞, the PR-3 behaviour: O(1) V_inf,
+  host blind until the wave drains); ``chunk=1`` is host-mux cadence.
+  Only the masked dispatch is traceable on this driver.
 
-Per-job results are bit-identical to the solo runs under both drivers.
+Per-job results are bit-identical to the solo runs under both drivers, at
+every K.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import tvm
 from ..core.engine import (
+    ChunkSummary,
     EpochLoop,
     _COMPACTED_RESIDENT_MSG,
     _fresh_resident_carry,
-    _hilo_value,
 )
 from ..core.program import HeapVar, MapType, Program, TaskType, pack_args
 from ..core.scheduler import (
@@ -61,6 +65,7 @@ from ..core.scheduler import (
     RunStatsCollector,
     StatsCollector,
     batched_device_stacks,
+    reseed_region_stacks,
     resolve_mux_policy,
     resolve_policy,
 )
@@ -307,6 +312,7 @@ class _FleetBase:
         coalesce: bool = True,
         collect_stats: bool = True,
         stats_factory=None,
+        template=None,
     ):
         if not handles:
             raise ValueError(f"{type(self).__name__} needs at least one job")
@@ -324,9 +330,22 @@ class _FleetBase:
         self._stats_factory = stats_factory
         self._collect_stats = collect_stats
 
-        self.program, self._slots = fuse_programs(
-            [j.program for j in jobs], [j.quota for j in jobs]
-        )
+        if template is not None:
+            # wave-template reuse (service/jobs.py WaveTemplateCache): this
+            # wave's members are structurally equal to the template's
+            # fuse-time members, so the fused program — and every compiled
+            # step/loop traced against it — applies verbatim; only runtime
+            # state (TV, heap, stacks) is rebuilt below
+            if [s.quota for s in template.slots] != [j.quota for j in jobs]:
+                raise ValueError(
+                    "wave template quota layout does not match the wave"
+                )
+            self.program = template.program
+            self._slots = list(template.slots)
+        else:
+            self.program, self._slots = fuse_programs(
+                [j.program for j in jobs], [j.quota for j in jobs]
+            )
         self._col = self._collector()
         self._init_fleet(handles)
 
@@ -395,6 +414,65 @@ class _FleetBase:
     def stats(self) -> RunStats:
         """Fleet-level stats: V_inf terms counted per fused dispatch."""
         return self._col.result()
+
+    # ------------------------------------------------- streaming admission
+    def admit(self, handle: JobHandle) -> bool:
+        """Seed a queued job into a freed region, mid-flight.
+
+        A region can be reused by any job whose program is *structurally
+        equal* to the region's fused-in template (``Program.structural_hash``
+        — same task/map/heap tables and task bytecode; the phase-2 trace is
+        identical, so nothing retraces).  The new job may carry its own
+        initial task, heap init, and a quota up to the region size.  Returns
+        False when the driver is not currently admitting (see
+        ``_admits_midflight``) or no compatible free region exists.
+
+        The scan is shared by both drivers; only *how* a region is reseeded
+        (``_seed_region``) differs — host scheduler stacks vs the resident
+        carry's device stacks.
+        """
+        if not self._admits_midflight():
+            return False
+        job = handle.job
+        for r in self._regions:
+            if r.handle is not None:
+                continue
+            s = r.slot
+            if job.quota > s.quota:
+                continue
+            if s.program is not job.program and (
+                s.program.structural_hash() != job.program.structural_hash()
+            ):
+                continue
+            self._seed_region(r, handle)
+            return True
+        return False
+
+    def _admits_midflight(self) -> bool:
+        return True
+
+    def _seed_region(self, r: _Region, handle: JobHandle) -> None:
+        raise NotImplementedError
+
+    def _seed_state(self, state: tvm.TVMState, slot: TenantSlot,
+                    job: Job) -> tvm.TVMState:
+        """Clear a freed slot region and seed the new tenant's root task —
+        the TVM half of region reuse, shared by both drivers."""
+        sub = slot.program
+        sl = slice(slot.base, slot.end)
+        tid = slot.task_offset + sub.task_id(job.initial.task)
+        ai, af = pack_args(self.program, job.initial.argi, job.initial.argf)
+        return tvm.TVMState(
+            task=state.task.at[sl].set(0).at[slot.base].set(tid),
+            argi=state.argi.at[sl].set(0).at[slot.base].set(jnp.asarray(ai)),
+            argf=state.argf.at[sl].set(0.0).at[slot.base].set(
+                jnp.asarray(af)),
+            epoch=state.epoch.at[sl].set(0).at[slot.base].set(1),
+            value=state.value.at[sl].set(0),
+            child_base=state.child_base.at[sl].set(0),
+            child_count=state.child_count.at[sl].set(0),
+            next_free=state.next_free,
+        )
 
     # ------------------------------------------------- completion / release
     def _finalize(self, j: int) -> JobHandle:
@@ -564,56 +642,15 @@ class EpochMultiplexer(_FleetBase):
         return out
 
     # ------------------------------------------------- streaming admission
-    def admit(self, handle: JobHandle) -> bool:
-        """Seed a queued job into a freed region, mid-flight.
-
-        A region can be reused by any job whose program is *structurally
-        equal* to the region's fused-in template (``Program.structural_hash``
-        — same task/map/heap tables and task bytecode; the phase-2 trace is
-        identical, so nothing retraces).  The new job may carry its own
-        initial task, heap init, and a quota up to the region size.  Returns
-        False when no compatible free region exists.
-        """
-        job = handle.job
-        for r in self._regions:
-            if r.handle is not None:
-                continue
-            s = r.slot
-            if job.quota > s.quota:
-                continue
-            if s.program is not job.program and (
-                s.program.structural_hash() != job.program.structural_hash()
-            ):
-                continue
-            self._seed_region(r, handle)
-            return True
-        return False
-
     def _seed_region(self, r: _Region, handle: JobHandle) -> None:
         """Clear a freed region and seed the new tenant's root task."""
         job = handle.job
         s = r.slot
-        sub = s.program
-        sl = slice(s.base, s.end)
-        tid = s.task_offset + sub.task_id(job.initial.task)
-        ai, af = pack_args(self.program, job.initial.argi, job.initial.argf)
-        st = self._state
-        self._state = tvm.TVMState(
-            task=st.task.at[sl].set(0).at[s.base].set(tid),
-            argi=st.argi.at[sl].set(0).at[s.base].set(jnp.asarray(ai)),
-            argf=st.argf.at[sl].set(0.0).at[s.base].set(jnp.asarray(af)),
-            epoch=st.epoch.at[sl].set(0).at[s.base].set(1),
-            value=st.value.at[sl].set(0),
-            child_base=st.child_base.at[sl].set(0),
-            child_count=st.child_count.at[sl].set(0),
-            next_free=st.next_free,
+        self._state = self._seed_state(self._state, s, job)
+        self._arena = tvm.arena_reset_region(
+            self._arena, s.index, s.base, job.quota
         )
-        self._arena = dataclasses.replace(
-            self._arena,
-            end=self._arena.end.at[s.index].set(s.base + job.quota),
-            next=self._arena.next.at[s.index].set(s.base + 1),
-        )
-        for k, v in sub.init_heap(**dict(job.heap_init)).items():
+        for k, v in s.program.init_heap(**dict(job.heap_init)).items():
             self._heap[s.prefix + k] = v
         sched = EpochScheduler(coalesce=self.coalesce)
         sched.reset(cen=1, start=s.base, count=1)
@@ -625,27 +662,58 @@ class EpochMultiplexer(_FleetBase):
 
 
 # --------------------------------------------------------------------------
-# Resident driver
+# Chunked resident driver
 # --------------------------------------------------------------------------
+class _ChunkLedger:
+    """Fleet totals already credited to the stats collector.
+
+    Each chunk boundary accounts only its *delta* against these, so
+    re-reading the carry's monotone accumulators can never double-count and
+    an empty trailing chunk credits nothing.  Per-region entries zero when
+    a region is reseeded with a new tenant (the carry's accumulators zero
+    at the same moment).
+    """
+
+    def __init__(self, n_regions: int):
+        self.epochs = 0
+        self.job_epochs = np.zeros(n_regions, np.int64)
+        self.job_tasks = np.zeros(n_regions, np.int64)
+        self.job_forks = np.zeros(n_regions, np.int64)
+        self.map_launches = 0
+        self.map_elements = 0
+        self.map_lanes = 0
+
+
 class DeviceMultiplexer(_FleetBase):
-    """Device-resident wave execution (DESIGN.md §9).
+    """Chunked device-resident wave execution (DESIGN.md §9–10).
 
-    The whole admitted fleet runs to completion inside one
-    ``lax.while_loop``: per-region scheduler stacks live on device
-    (``batched_device_stacks``), the :class:`~repro.core.tvm.JobArena`
-    region cursors and per-region trailing reclamation ride the loop carry,
-    and every region's pop is fused into one per-lane epoch-number vector
-    per iteration.  Per-wave V_inf is O(1): one dispatch + one scalar
-    readback for the entire wave, vs one per global epoch on
-    :class:`EpochMultiplexer` — while per-job results stay bit-identical to
-    solo ``HostEngine.run``.
+    The admitted fleet runs inside a ``lax.while_loop`` — per-region
+    scheduler stacks on device (``batched_device_stacks``), the
+    :class:`~repro.core.tvm.JobArena` region cursors and per-region
+    trailing reclamation riding the loop carry, every region's pop fused
+    into one per-lane epoch-number vector per iteration — for at most
+    ``chunk`` (K) epochs per invocation.  At each chunk boundary the host
+    fetches one compact :class:`~repro.core.engine.ChunkSummary`; a wave of
+    E epochs therefore pays ⌈E/K⌉ dispatches + readbacks, and between
+    chunks the host:
 
-    The trade (host-mux-only features): no streaming completion, no
-    mid-flight region reuse (``admit`` always refuses — queued jobs wait for
-    the next wave), no gang policies (every live region pops each global
-    epoch, i.e. ``fuse_all``), and masked dispatch only.  A job overflowing
-    its region fails alone: its stack pointer zeroes and its neighbours
-    keep running.
+      * **streams completions** — regions whose stack drained surface
+        immediately, not when the whole wave ends;
+      * **reseeds freed regions** — ``admit`` seats a structurally-equal
+        queued job into the live carry (TV slots, heap, arena cursors,
+        stack row, accumulators), and the re-entered loop simply sees one
+        more live region — no retrace, the compiled chunk template is
+        reused verbatim.
+
+    ``chunk=None`` is the fully-resident endpoint (K=∞): one chunk for the
+    whole wave, O(1) V_inf, the host blind until it drains — and ``admit``
+    refuses, because there are no boundaries to admit at.  ``chunk=1`` is
+    host-mux readback cadence.  Masked dispatch only (resident launch
+    shapes are fixed at trace time); every live region pops each global
+    epoch (``fuse_all``).  A job overflowing its region (TV quota or stack
+    depth) fails alone, mid-chunk: its stack pointer zeroes and its
+    neighbours keep running.  Per-job results are bit-identical to solo
+    ``HostEngine.run`` at every K.
     """
 
     def __init__(
@@ -654,96 +722,167 @@ class DeviceMultiplexer(_FleetBase):
         capacity: Optional[int] = None,
         dispatch: Any = "masked",
         stack_depth: int = 1 << 10,
+        chunk: Optional[int] = None,
         collect_stats: bool = True,
         stats_factory=None,
         seg_offsets_fn=None,
+        template=None,
     ):
         super().__init__(
             handles, capacity=capacity,
             collect_stats=collect_stats, stats_factory=stats_factory,
+            template=template,
         )
         if resolve_policy(dispatch).name != "masked":
             raise ValueError(_COMPACTED_RESIDENT_MSG)
-        self.stack_depth = stack_depth
-        self._loop = EpochLoop(
-            self.program, dispatch,
-            seg_offsets_fn=seg_offsets_fn, skip_idle_types=True,
-        )
-        self.policy = self._loop.policy
-        self._ran = False
-
-    def step(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
-        """Run the *entire wave* to completion in one resident loop.
-
-        Returns every handle (DONE or FAILED) in region order; subsequent
-        calls return [] (the wave is closed — resubmit through a new wave).
-        """
-        if self._ran or not self.live:
-            return []
-        self._ran = True
-        J = len(self._slots)
-        jstack, rstack, sp = batched_device_stacks(
-            J, self.stack_depth,
-            cens=np.ones(J, np.int32),
-            starts=np.asarray([s.base for s in self._slots], np.int32),
-            counts=np.ones(J, np.int32),
-        )
-        carry = _fresh_resident_carry(
-            self._state, self._heap, self._arena, jstack, rstack, sp,
-            n_regions=J,
-        )
-        out = self._loop.run_resident(carry, max_epochs, n_regions=J)
-        # the wave's one scalar readback
-        (failed, failed_stack, sp_left, n_epochs, job_epochs, job_tasks,
-         job_forks, job_peak, m_ct, m_el, m_ln) = jax.device_get(
-            (
-                out.failed, out.failed_stack, out.sp, out.n_epochs,
-                out.job_epochs, out.job_tasks, out.job_forks, out.job_peak,
-                out.map_launches, out.map_elements, out.map_lanes,
+        if chunk is not None and chunk < 1:
+            raise ValueError(
+                "chunk must be >= 1 epoch, or None for a fully resident "
+                f"wave; got {chunk}"
             )
-        )
-        # a region still holding stack entries hit the epoch guard: fail it
-        # (like an overflow — its schedule is unfinished) so the wave always
-        # terminates with every handle resolved, never wedged RUNNING
-        timed_out = np.asarray(sp_left) > 0
-        failed = np.asarray(failed) | timed_out
-        self._state = out.state
-        self._heap = out.heap
-        self._arena = out.arena
+        self.stack_depth = stack_depth
+        self.chunk = chunk
+        if template is not None:
+            if seg_offsets_fn is not None:
+                raise ValueError(
+                    "seg_offsets_fn cannot be overridden on a template "
+                    "wave: the template's loop was already traced with its "
+                    "own fork-scan kernel (build the template with the "
+                    "desired seg_offsets_fn instead)"
+                )
+            self._loop: EpochLoop = template.loop
+        else:
+            self._loop = EpochLoop(
+                self.program, dispatch,
+                seg_offsets_fn=seg_offsets_fn, skip_idle_types=True,
+            )
+        self.policy = self._loop.policy
+        self._carry = None
+        self._ledger = _ChunkLedger(len(self._slots))
 
+    @property
+    def loop(self) -> EpochLoop:
+        """The driver core (owner of the compiled chunk template)."""
+        return self._loop
+
+    @property
+    def slots(self):
+        """Fuse-time slot layout (for wave-template capture)."""
+        return self._slots
+
+    # ------------------------------------------------------------ driving
+    def step(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
+        """Run one chunk — at most ``chunk`` epochs in one resident loop
+        invocation (the whole wave when ``chunk`` is None) — then surface
+        every region that drained or failed.
+
+        Further calls continue the wave from the carried device state; once
+        nothing is live, calls are clean no-ops that touch neither the
+        device nor the stats ledger.
+        """
+        riders = [j for j, r in enumerate(self._regions) if r.running]
+        if not riders:
+            return []
+        J = len(self._slots)
+        if self._carry is None:
+            jstack, rstack, sp = batched_device_stacks(
+                J, self.stack_depth,
+                cens=np.ones(J, np.int32),
+                starts=np.asarray([s.base for s in self._slots], np.int32),
+                counts=np.ones(J, np.int32),
+            )
+            self._carry = _fresh_resident_carry(
+                self._state, self._heap, self._arena, jstack, rstack, sp,
+                n_regions=J,
+            )
+        if self.chunk is None:
+            limit = max_epochs
+        else:
+            limit = min(max_epochs, self._ledger.epochs + self.chunk)
+        carry = self._loop.run_chunk(self._carry, limit, n_regions=J)
+        self._carry = carry
+        # the bulk state stays on device; these references keep _finalize /
+        # _seed_region working on the current wave state
+        self._state, self._heap, self._arena = (
+            carry.state, carry.heap, carry.arena
+        )
+        s = self._loop.chunk_summary(carry)  # the chunk's one readback
+        self._account(s, riders)
+        return self._settle(s, riders, max_epochs)
+
+    def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
+        """Drive the wave to completion, chunk by chunk; API parity with
+        :class:`EpochMultiplexer`."""
+        out: List[JobHandle] = []
+        while self.live:
+            out.extend(self.step(max_epochs=max_epochs))
+        return out
+
+    # --------------------------------------------------------- accounting
+    def _account(self, s: ChunkSummary, riders: List[int]) -> None:
+        """Credit this chunk's delta to the fleet collector and to every
+        region that rode the chunk's fused launch."""
         col = self._col
         col.dispatch()
         col.transfer()
-        # every global epoch fused all regions still live then; O(1) bulk
-        # accounting from the readback, same ledger as the host driver
-        col.epoch(int(n_epochs), n_ranges=int(job_epochs.sum()),
-                  n=int(n_epochs))
-        col.lanes(int(job_tasks.sum()), int(n_epochs) * self.capacity, None)
-        col.forks(int(job_forks.sum()))
-        col.tv_peak(int((job_peak + np.asarray(
-            [s.base for s in self._slots])).max()) if J else 0)
-        if int(m_ct):
-            # map payloads launched in-loop: fold the carry's totals in
-            col.map_launch(_hilo_value(m_el), _hilo_value(m_ln),
-                           n=int(m_ct))
-
-        done: List[JobHandle] = []
-        for j in range(J):
-            r = self._regions[j]
-            if not r.running:
-                continue
-            r.stats = JobStats(
-                epochs=int(job_epochs[j]),
-                tasks_executed=int(job_tasks[j]),
-                total_forks=int(job_forks[j]),
-                peak_tv_slots=int(job_peak[j]),
-                shared_dispatches=1,
-                shared_transfers=1,
+        for j in riders:
+            self._regions[j].stats.shared_dispatches += 1
+            self._regions[j].stats.shared_transfers += 1
+        led = self._ledger
+        d_epochs = s.n_epochs - led.epochs
+        if d_epochs > 0:
+            # every global epoch fused all regions live then; bulk O(1)
+            # accounting from the readback, same ledger semantics as the
+            # host driver's per-epoch calls
+            col.epoch(
+                s.n_epochs,
+                n_ranges=int((s.job_epochs - led.job_epochs).sum()),
+                n=d_epochs,
             )
-            if bool(failed[j]):
-                if bool(timed_out[j]):
+            col.lanes(
+                int((s.job_tasks - led.job_tasks).sum()),
+                d_epochs * self.capacity, None,
+            )
+            col.forks(int((s.job_forks - led.job_forks).sum()))
+        bases = np.asarray([sl.base for sl in self._slots])
+        col.tv_peak(int((s.job_peak + bases).max()))
+        d_maps = s.map_launches - led.map_launches
+        if d_maps > 0:
+            col.map_launch(
+                s.map_elements - led.map_elements,
+                s.map_lanes - led.map_lanes, n=d_maps,
+            )
+        led.epochs = s.n_epochs
+        led.job_epochs = s.job_epochs.astype(np.int64)
+        led.job_tasks = s.job_tasks.astype(np.int64)
+        led.job_forks = s.job_forks.astype(np.int64)
+        led.map_launches = s.map_launches
+        led.map_elements = s.map_elements
+        led.map_lanes = s.map_lanes
+
+    def _settle(self, s: ChunkSummary, riders: List[int],
+                max_epochs: int) -> List[JobHandle]:
+        """Surface every rider whose region drained, failed, or hit the
+        epoch guard; regions still mid-flight stay RUNNING for the next
+        chunk."""
+        done: List[JobHandle] = []
+        for j in riders:
+            r = self._regions[j]
+            # a region still holding stack entries at the guard has an
+            # unfinished schedule: fail it (like an overflow) so the wave
+            # always resolves every handle, never wedged RUNNING
+            timed_out = bool(s.sp[j] > 0) and s.n_epochs >= max_epochs
+            if s.sp[j] > 0 and not timed_out:
+                continue
+            st = r.stats
+            st.epochs = int(s.job_epochs[j])
+            st.tasks_executed = int(s.job_tasks[j])
+            st.total_forks = int(s.job_forks[j])
+            st.peak_tv_slots = int(s.job_peak[j])
+            if bool(s.failed[j]) or timed_out:
+                if timed_out:
                     reason = f"exceeded max_epochs={max_epochs}"
-                elif bool(failed_stack[j]):
+                elif bool(s.failed_stack[j]):
                     reason = (
                         f"job {r.handle.job.name!r} exhausted the resident "
                         f"scheduler stack: stack_depth={self.stack_depth}"
@@ -755,12 +894,46 @@ class DeviceMultiplexer(_FleetBase):
                 done.append(self._finalize(j))
         return done
 
-    def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
-        """API parity with :class:`EpochMultiplexer`."""
-        return self.step(max_epochs=max_epochs)
+    # ------------------------------------------------- streaming admission
+    def _admits_midflight(self) -> bool:
+        # a fully resident wave (chunk=None) is closed: the host never sees
+        # a freed region until the whole wave drains.  With a finite chunk
+        # the host holds the carry between chunks, so freed regions reseed.
+        return self.chunk is not None and self._carry is not None and self.live
 
-    def admit(self, handle: JobHandle) -> bool:
-        """Resident waves are closed: no mid-flight admission (the trade for
-        O(1) per-wave V_inf — the host never sees a freed region until the
-        whole wave drains)."""
-        return False
+    def _seed_region(self, r: _Region, handle: JobHandle) -> None:
+        """Reseed a freed region *into the live carry* between chunks: TV
+        slots, tenant heap, arena cursors, the region's device stack row,
+        and its accumulators — the next chunk's ``while_loop`` simply sees
+        one more live region."""
+        job = handle.job
+        s = r.slot
+        j = s.index
+        carry = self._carry
+        state = self._seed_state(carry.state, s, job)
+        heap = dict(carry.heap)
+        for k, v in s.program.init_heap(**dict(job.heap_init)).items():
+            heap[s.prefix + k] = v
+        arena = tvm.arena_reset_region(carry.arena, j, s.base, job.quota)
+        jstack, rstack, sp = reseed_region_stacks(
+            carry.jstack, carry.rstack, carry.sp, j,
+            cen=1, start=s.base, count=1,
+        )
+        self._carry = dataclasses.replace(
+            carry, state=state, heap=heap, arena=arena,
+            jstack=jstack, rstack=rstack, sp=sp,
+            failed=carry.failed.at[j].set(False),
+            failed_stack=carry.failed_stack.at[j].set(False),
+            job_epochs=carry.job_epochs.at[j].set(0),
+            job_tasks=carry.job_tasks.at[j].set(0),
+            job_forks=carry.job_forks.at[j].set(0),
+            job_peak=carry.job_peak.at[j].set(0),
+        )
+        self._state, self._heap, self._arena = state, heap, arena
+        led = self._ledger
+        led.job_epochs[j] = led.job_tasks[j] = led.job_forks[j] = 0
+        r.handle = handle
+        r.sched = None
+        r.stats = JobStats()
+        r.active_quota = job.quota
+        handle.status = JobStatus.RUNNING

@@ -1,0 +1,319 @@
+"""Chunked-resident wave tests (DESIGN.md §10).
+
+The K-epoch chunk knob makes host-mux (K=1) and fully-resident (K=None)
+two endpoints of one driver: the resident ``lax.while_loop`` re-enters
+every K epochs, the host reads back one compact ``ChunkSummary`` per
+chunk, and between chunks it streams completions and reseeds freed
+regions.  The load-bearing properties:
+
+  * per-job results stay bit-identical to solo ``HostEngine.run`` at
+    *every* K, and the wave pays exactly ⌈epochs/K⌉ dispatches+readbacks;
+  * chunk boundaries restore the host-mux-only features to the resident
+    path (streaming completions, mid-flight admission) without perturbing
+    the per-job schedules;
+  * trailing-drain edges (K larger than the remaining epochs, steps after
+    the wave drained) are clean no-ops on the stats ledger;
+  * structurally identical consecutive waves reuse one compiled chunk
+    template with zero new traces (the compile-count regression guard).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.apps import fib, get_case, get_fleet
+from repro.core import DeviceEngine, HostEngine
+from repro.service import (
+    DeviceMultiplexer,
+    Job,
+    JobFailure,
+    JobHandle,
+    JobService,
+    JobStatus,
+    WaveTemplate,
+)
+
+
+def _handles(fleet):
+    return [
+        JobHandle(i, Job(c.program, c.initial, heap_init=dict(c.heap_init),
+                         quota=q, name=c.name))
+        for i, (c, q) in enumerate(fleet)
+    ]
+
+
+@pytest.fixture(scope="module")
+def solo_results():
+    """Cache solo HostEngine runs per (case, quota) across this module."""
+    cache = {}
+
+    def get(case, quota):
+        key = (case.name, quota)
+        if key not in cache:
+            eng = HostEngine(case.program, capacity=quota)
+            cache[key] = eng.run(
+                case.initial, heap_init=dict(case.heap_init) or None
+            )
+        return cache[key]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def fleet_templates():
+    """Share one compiled chunk template per fleet across every K (the
+    template is K-independent — the bound is a dynamic argument — so this
+    is exactly the production reuse path, exercised for free)."""
+    return {}
+
+
+def _make_mux(fleet_name, chunk, templates):
+    handles = _handles(get_fleet(fleet_name))
+    tpl = templates.get(fleet_name)
+    mux = DeviceMultiplexer(handles, chunk=chunk, template=tpl)
+    if tpl is None:
+        templates[fleet_name] = WaveTemplate(
+            key=fleet_name, program=mux.program, slots=mux.slots,
+            loop=mux.loop,
+        )
+    return handles, mux
+
+
+# ------------------------------------------------ the acceptance equivalence
+@pytest.mark.parametrize("chunk", [1, 4, None])
+@pytest.mark.parametrize("fleet_name", ["mixed3", "mixed4", "fib_fleet"])
+def test_chunked_wave_bit_identical_with_ceil_vinf(
+    fleet_name, chunk, solo_results, fleet_templates
+):
+    """Acceptance: every registry fleet through the chunked wave driver is
+    bit-identical per job to solo runs at K ∈ {1, 4, ∞}, and the wave pays
+    exactly ⌈epochs/K⌉ dispatches + scalar readbacks."""
+    fleet = get_fleet(fleet_name)
+    solo = {c.name: solo_results(c, q) for c, q in fleet}
+    handles, mux = _make_mux(fleet_name, chunk, fleet_templates)
+    done = mux.run()
+    assert {h.job_id for h in done} == {h.job_id for h in handles}
+
+    for h in handles:
+        sh, sv, ss = solo[h.job.name]
+        assert h.status is JobStatus.DONE
+        np.testing.assert_array_equal(
+            np.asarray(h.result.value), np.asarray(sv),
+            err_msg=f"{h.job.name}:value@K={chunk}",
+        )
+        assert set(h.result.heap) == set(sh)
+        for k in sh:
+            np.testing.assert_array_equal(
+                np.asarray(h.result.heap[k]), np.asarray(sh[k]),
+                err_msg=f"{h.job.name}:{k}@K={chunk}",
+            )
+        assert h.result.stats.epochs == ss.epochs
+        assert h.result.stats.tasks_executed == ss.tasks_executed
+        assert h.result.stats.total_forks == ss.total_forks
+        assert h.result.stats.peak_tv_slots == ss.peak_tv_slots
+
+    fs = mux.stats()
+    member_epochs = [solo[c.name][2].epochs for c, _ in fleet]
+    E = max(member_epochs)  # fuse_all: every live region pops each epoch
+    expected = 1 if chunk is None else math.ceil(E / chunk)
+    assert fs.epochs == E
+    assert fs.dispatches == expected
+    assert fs.scalar_transfers == expected
+    assert fs.ranges_coalesced == sum(member_epochs) - E
+
+
+def test_k3_matches_k_none(solo_results, fleet_templates):
+    """An odd K that does not divide the epoch count (the satellite's K=3)
+    still drains cleanly: same results, ⌈E/3⌉ readbacks."""
+    fleet = get_fleet("fib_fleet")
+    solo = {c.name: solo_results(c, q) for c, q in fleet}
+    handles, mux = _make_mux("fib_fleet", 3, fleet_templates)
+    mux.run()
+    E = max(solo[c.name][2].epochs for c, _ in fleet)
+    fs = mux.stats()
+    assert fs.scalar_transfers == math.ceil(E / 3)
+    for h in handles:
+        _, sv, _ = solo[h.job.name]
+        np.testing.assert_array_equal(
+            np.asarray(h.result.value), np.asarray(sv)
+        )
+
+
+# ------------------------------------------------- chunk-boundary features
+def test_streaming_completion_surfaces_before_wave_drains(fleet_templates):
+    """With a finite K, a short job's handle resolves at a chunk boundary
+    while a long neighbour is still mid-wave — the feature the blind O(1)
+    wave gave up."""
+    short = JobHandle(0, Job(fib.PROGRAM, fib.initial(4), quota=64,
+                             name="short"))
+    long_ = JobHandle(1, Job(fib.PROGRAM, fib.initial(12), quota=512,
+                             name="long"))
+    mux = DeviceMultiplexer([short, long_], chunk=2)
+    boundaries = 0
+    while not short.done:
+        mux.step()
+        boundaries += 1
+    assert short.status is JobStatus.DONE
+    assert long_.status is JobStatus.RUNNING  # wave not drained yet
+    _, sv, ss = HostEngine(fib.PROGRAM, capacity=64).run(fib.initial(4))
+    np.testing.assert_array_equal(np.asarray(short.result.value),
+                                  np.asarray(sv))
+    assert boundaries == math.ceil((2 * 4 - 1) / 2)  # its own epochs / K
+    mux.run()
+    assert long_.status is JobStatus.DONE
+
+
+def test_job_admitted_mid_wave_completes_bit_identically():
+    """A structurally-equal job admitted into a freed region between chunks
+    completes bit-identically to its solo run; the carried-over neighbour
+    is unperturbed."""
+    first = JobHandle(0, Job(fib.PROGRAM, fib.initial(4), quota=64,
+                             name="first"))
+    long_ = JobHandle(1, Job(fib.PROGRAM, fib.initial(12), quota=512,
+                             name="long"))
+    mux = DeviceMultiplexer([first, long_], chunk=2)
+    while not first.done:
+        mux.step()
+    late = JobHandle(2, Job(fib.PROGRAM, fib.initial(6), quota=64,
+                            name="late"))
+    assert mux.admit(late) is True
+    assert late.status is JobStatus.RUNNING
+    mux.run()
+    for h, n, q in ((late, 6, 64), (long_, 12, 512)):
+        assert h.status is JobStatus.DONE
+        _, sv, ss = HostEngine(fib.PROGRAM, capacity=q).run(fib.initial(n))
+        np.testing.assert_array_equal(
+            np.asarray(h.result.value), np.asarray(sv), err_msg=h.job.name
+        )
+        assert h.result.stats.epochs == ss.epochs
+        assert h.result.stats.peak_tv_slots == ss.peak_tv_slots
+
+
+def test_fully_resident_wave_stays_closed_to_admission():
+    """K=None keeps the PR-3 contract: no chunk boundaries, no admission."""
+    mux = DeviceMultiplexer(
+        [JobHandle(0, Job(fib.PROGRAM, fib.initial(8), quota=128))],
+        chunk=None,
+    )
+    late = JobHandle(1, Job(fib.PROGRAM, fib.initial(8), quota=128))
+    assert mux.admit(late) is False
+    mux.step()
+    assert mux.admit(late) is False
+
+
+def test_mid_chunk_overflow_isolates_one_region():
+    """A region overflowing *inside* a chunk zeroes its own stack pointer
+    and fails at the next boundary; its neighbour finishes bit-identically."""
+    bad = JobHandle(0, Job(fib.PROGRAM, fib.initial(12), quota=8,
+                           name="bad"))
+    good = JobHandle(1, Job(fib.PROGRAM, fib.initial(10), quota=512,
+                            name="good"))
+    mux = DeviceMultiplexer([bad, good], chunk=2)
+    mux.run()
+    assert bad.status is JobStatus.FAILED
+    assert isinstance(bad.error, JobFailure)
+    assert good.status is JobStatus.DONE
+    _, sv, ss = HostEngine(fib.PROGRAM, capacity=512).run(fib.initial(10))
+    np.testing.assert_array_equal(np.asarray(good.result.value),
+                                  np.asarray(sv))
+    assert good.result.stats.epochs == ss.epochs
+
+
+# ----------------------------------------------------- trailing-drain edges
+def test_chunk_larger_than_remaining_epochs_is_clean():
+    """K > the wave's total epochs degenerates to the fully resident wave:
+    one chunk, identical stats, no phantom epochs from the unused budget."""
+    def run(chunk):
+        h = JobHandle(0, Job(fib.PROGRAM, fib.initial(10), quota=512))
+        mux = DeviceMultiplexer([h], chunk=chunk)
+        mux.run()
+        return h, mux.stats()
+
+    h_inf, s_inf = run(None)
+    h_big, s_big = run(1000)  # far beyond the 19 epochs actually needed
+    assert dataclasses.asdict(s_big) == dataclasses.asdict(s_inf)
+    np.testing.assert_array_equal(
+        np.asarray(h_big.result.value), np.asarray(h_inf.result.value)
+    )
+    # a K that overshoots only the *last* chunk is equally clean
+    h_k10, s_k10 = run(10)  # chunks of 10 + 9
+    assert s_k10.scalar_transfers == 2
+    for f in ("epochs", "tasks_executed", "total_forks", "map_launches",
+              "map_elements", "map_lanes_launched", "lanes_launched"):
+        assert getattr(s_k10, f) == getattr(s_inf, f), f
+
+
+def test_empty_wave_steps_do_not_perturb_stats():
+    """Steps after the wave drained are no-ops: no dispatches, no epochs,
+    no map-lane counters — the stats ledger is untouched."""
+    h = JobHandle(0, Job(fib.PROGRAM, fib.initial(8), quota=128))
+    mux = DeviceMultiplexer([h], chunk=4)
+    mux.run()
+    snap = dataclasses.asdict(mux.stats())
+    assert mux.step() == []
+    assert mux.step() == []
+    assert dataclasses.asdict(mux.stats()) == snap
+
+
+# ------------------------------------------------ compile-count regression
+def test_identical_consecutive_waves_reuse_template_zero_traces():
+    """The wave-template cache: two identical consecutive waves through
+    JobService(engine='device') hit the cache and retrace *nothing* — the
+    trace-counter hook on the step/loop builders stays flat."""
+    svc = JobService(capacity=512, max_jobs=2, engine="device", chunk=3)
+    ns = (8, 9)
+    wave_a = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256) for n in ns]
+    svc.drain()
+    traces_after_a = svc.trace_count
+    assert traces_after_a > 0
+    assert svc.template_cache.misses == 1
+    assert svc.template_cache.hits == 0
+
+    wave_b = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256) for n in ns]
+    svc.drain()
+    assert svc.trace_count == traces_after_a  # zero new traces
+    assert svc.template_cache.hits == 1
+    for h, n in zip(wave_a + wave_b, ns + ns):
+        assert h.status is JobStatus.DONE
+        assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
+
+
+def test_service_streams_admission_through_chunked_waves():
+    """JobService(engine='device', chunk=K): a queued third job streams
+    into the freed region of the live wave — one wave shape ever compiled,
+    all results exact."""
+    svc = JobService(capacity=1024, max_jobs=2, engine="device", chunk=2)
+    ns = (4, 12, 6)
+    handles = [
+        svc.submit(fib.PROGRAM, fib.initial(n), quota=512, name=f"fib{n}")
+        for n in ns
+    ]
+    svc.drain()
+    for h, n in zip(handles, ns):
+        assert h.status is JobStatus.DONE
+        assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
+    # the third job was admitted mid-wave: no second wave was ever fused
+    assert svc.template_cache.misses == 1
+    assert svc.template_cache.hits == 0
+
+
+# --------------------------------------------- bucketed resident map sizing
+def test_resident_map_payloads_bucket_below_max_domain():
+    """Resident map payloads launch at a traced power-of-2 bucket of the
+    live domains instead of always MapType.max_domain — results stay
+    bit-identical and the measured lane waste shrinks."""
+    case = get_case("mergesort")
+    max_domain = max(m.max_domain for m in case.program.maps)
+    hh, hv, hs = HostEngine(case.program, capacity=case.capacity).run(
+        case.initial, heap_init=dict(case.heap_init) or None
+    )
+    dh, dv, ds = DeviceEngine(case.program, capacity=case.capacity).run(
+        case.initial, heap_init=dict(case.heap_init) or None
+    )
+    np.testing.assert_array_equal(np.asarray(dh["src"]), np.asarray(hh["src"]))
+    assert ds.map_launches > 0
+    assert ds.map_elements == hs.map_elements  # same useful work
+    # strictly below the old always-max_domain sizing
+    assert ds.map_lanes_launched < ds.map_launches * case.capacity * max_domain
+    assert ds.map_lanes_launched >= ds.map_elements
