@@ -219,14 +219,16 @@ def bench_overhead():
     )
 
 
-# ------------------------------- §5.4: masked vs compacted dispatch A/B
+# ------------------- §5.4 / §11: masked vs compacted vs gather dispatch
 def bench_dispatch():
-    """Lane utilization + time, masked vs type-compacted dispatch, per app.
+    """Lane utilization + time per app across all three dispatch modes.
 
     The compacted rows realize §5.4's contiguity principle (dense per-type
-    launches); the derived column carries the utilization of *both* policies
-    so the win is visible in one row, plus the V_inf critical-path estimate
-    from the roofline dispatch model.
+    launches); the gather rows realize §11's dense-frontier pack (one
+    lane-exact launch, no per-type splitting, hole lanes skipped).  The
+    derived column carries the utilization of *all* policies so the wins
+    are visible in one row, plus the V_inf critical-path estimate from the
+    roofline dispatch model and the gather path's skipped hole lanes.
     """
     import pathlib
     import sys
@@ -241,7 +243,7 @@ def bench_dispatch():
         case = get_case(name)
         stats = {}
         times = {}
-        for policy in ("masked", "compacted"):
+        for policy in ("masked", "compacted", "gather"):
             eng = HostEngine(
                 case.program, capacity=case.capacity, dispatch=policy
             )
@@ -254,7 +256,7 @@ def bench_dispatch():
                 ),
                 repeats=1,
             )
-        sm, sc = stats["masked"], stats["compacted"]
+        sm, sc, sg = stats["masked"], stats["compacted"], stats["gather"]
         occ = ";".join(
             f"occ_{t}={o:.2f}" for t, o in sorted(sc.occupancy_by_type.items())
         )
@@ -262,12 +264,17 @@ def bench_dispatch():
             f"dispatch_{name}_{DISPATCH}", times[DISPATCH] * 1e6,
             f"util_masked={sm.utilization:.2f};"
             f"util_compacted={sc.utilization:.2f};"
+            f"util_gather={sg.utilization:.2f};"
             f"us_masked={times['masked']*1e6:.1f};"
             f"us_compacted={times['compacted']*1e6:.1f};"
+            f"us_gather={times['gather']*1e6:.1f};"
             f"lanes_masked={sm.lanes_launched};"
             f"lanes_compacted={sc.lanes_launched};"
+            f"lanes_gather={sg.lanes_launched};"
+            f"hole_lanes_skipped={sg.hole_lanes_skipped};"
             f"vinf_masked_us={vinf_seconds(sm)*1e6:.0f};"
-            f"vinf_compacted_us={vinf_seconds(sc)*1e6:.0f};{occ}",
+            f"vinf_compacted_us={vinf_seconds(sc)*1e6:.0f};"
+            f"vinf_gather_us={vinf_seconds(sg)*1e6:.0f};{occ}",
         )
 
 
@@ -327,7 +334,8 @@ def bench_service():
         f"solo_dispatches={solo_disp};"
         f"fleet_transfers={fs.scalar_transfers};solo_transfers={solo_xfer};"
         f"vinf_saving_x={(solo_disp + solo_xfer) / max(1, fs.dispatches + fs.scalar_transfers):.2f};"
-        f"util={fs.utilization:.2f}",
+        f"util={fs.utilization:.2f};"
+        f"hole_lanes_skipped={fs.hole_lanes_skipped}",
     )
 
     # throughput vs number of concurrent jobs (homogeneous fib fleet)
@@ -412,7 +420,9 @@ def bench_device_service():
             f"vinf_vs_solo_x={solo_vinf / max(1, dev_vinf):.1f};"
             f"host_mux_us={t_host * 1e6:.1f};"
             f"map_lanes_wasted={ds.map_lanes_wasted};"
-            f"map_util={ds.map_utilization:.3f}",
+            f"map_util={ds.map_utilization:.3f};"
+            f"util={ds.utilization:.3f};"
+            f"hole_lanes_skipped={ds.hole_lanes_skipped}",
         )
 
         # the K-ladder: readback cadence between host-mux and resident
@@ -433,7 +443,8 @@ def bench_device_service():
                 f"epochs={ks.epochs};readbacks={ks.scalar_transfers};"
                 f"expected_readbacks={expected};dispatches={ks.dispatches};"
                 f"template_hits={cache.hits};"
-                f"map_lanes_wasted={ks.map_lanes_wasted}",
+                f"map_lanes_wasted={ks.map_lanes_wasted};"
+                f"hole_lanes_skipped={ks.hole_lanes_skipped}",
             )
 
 
@@ -542,10 +553,12 @@ def main(argv=None) -> None:
     global DISPATCH, SMOKE
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--dispatch", choices=("masked", "compacted"), default="masked",
+        "--dispatch", choices=("masked", "compacted", "gather"),
+        default="masked",
         help="HostEngine dispatch policy for every benchmark "
         "(masked = seed full-width vmap; compacted = §5.4 dense "
-        "per-type launches)",
+        "per-type launches; gather = §11 dense-frontier pack, hole "
+        "lanes skipped)",
     )
     ap.add_argument(
         "--only", nargs="+", choices=sorted(BENCHES), default=None,
@@ -559,7 +572,7 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_4.json for full or --smoke runs, off for --only subset "
+        "to BENCH_5.json for full or --smoke runs, off for --only subset "
         "runs (pass a path to force, '' to disable)",
     )
     args = ap.parse_args(argv)
@@ -577,7 +590,7 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_4.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_5.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
 

@@ -2,7 +2,7 @@
 
 Every app module registers a :func:`case` — a fully materialized
 (program, initial task, heap init, TV capacity) bundle — so the dispatch A/B
-harness (``benchmarks/run.py --dispatch={masked,compacted}``), the engine
+harness (``benchmarks/run.py --dispatch={masked,compacted,gather}``), the engine
 equivalence tests, and future sharded/async drivers can iterate *all*
 workloads through one entry point instead of re-deriving each app's setup.
 """

@@ -20,6 +20,7 @@ from .analysis import OverheadReport, compare
 from .scheduler import (
     COMPACTED,
     FUSE_ALL,
+    GATHER,
     MASKED,
     DispatchPolicy,
     EpochScheduler,
@@ -55,6 +56,7 @@ __all__ = [
     "compare",
     "COMPACTED",
     "FUSE_ALL",
+    "GATHER",
     "MASKED",
     "DispatchPolicy",
     "EpochScheduler",

@@ -14,8 +14,9 @@ termination predicate — and each engine is one configuration of it:
     ``joinScheduled``/``mapScheduled``/``nextFreeCore`` transfers) and
     dispatches one jitted XLA program per epoch.  Readback policy: the
     :class:`~repro.core.tvm.EpochSummary` scalars, once per epoch.
-    Termination: the host scheduler drains.  Supports both the ``masked``
-    (seed) and ``compacted`` (§5.4 contiguity) dispatch policies.
+    Termination: the host scheduler drains.  Supports the ``masked``
+    (seed), ``compacted`` (§5.4 contiguity), and ``gather`` (§11
+    dense-frontier pack) dispatch policies.
 
   * :class:`DeviceEngine` — the beyond-paper resident variant ("future
     chips with tighter CPU/GPU coupling"): the entire epoch loop runs
@@ -25,7 +26,9 @@ termination predicate — and each engine is one configuration of it:
     host loop would fetch accumulates in the :class:`ResidentCarry` and is
     read once at the end (dispatches = transfers = 1).  Termination: the
     traced all-stacks-empty ``while_loop`` cond.  Masked dispatch only
-    (launch shapes must be fixed at trace time).
+    (launch shapes must be fixed at trace time), but each epoch's step is
+    bucketed to the live span of the popped ranges via a small
+    ``lax.switch`` ladder of compiled widths (DESIGN.md §11).
 
   * the service-layer drivers (``repro.service.multiplexer``) — the host
     ``EpochMultiplexer`` and the resident ``DeviceMultiplexer`` reuse the
@@ -82,8 +85,8 @@ class EngineError(RuntimeError):
 _COMPACTED_RESIDENT_MSG = (
     "resident (device) execution supports only the 'masked' dispatch: the "
     "on-device while_loop needs launch shapes fixed at trace time, but "
-    "'compacted' sizes per-type launches from runtime populations (use a "
-    "host-loop driver for compacted dispatch)"
+    "'compacted' and 'gather' size launches from runtime populations (use "
+    "a host-loop driver for those dispatches)"
 )
 
 
@@ -91,6 +94,31 @@ def _default_rank_fn(types, active, n_types):
     from ..kernels import ops as kops
 
     return kops.type_rank(types, active, n_types)
+
+
+def _default_pack_fn(active):
+    from ..kernels import ops as kops
+
+    return kops.lane_pack(active)
+
+
+def _frontier_mask(state, start, count, cen, P: int):
+    """Per-lane active predicate of a popped NDRange frontier.
+
+    A lane is active when it is inside the popped range, carries a nonzero
+    epoch number (0 tags lanes outside every popped range on fused
+    frontiers), and TMS-matches (``epoch[slot] == cen``).  This predicate
+    *defines* which lanes every dispatch mode executes — masked, the
+    compaction pass, and the gather pack all share it, so the three modes
+    can never diverge on what counts as scheduled work.  Returns
+    ``(idx, active, cen_l)``.
+    """
+    idx = start + jnp.arange(P, dtype=jnp.int32)
+    in_range = jnp.arange(P, dtype=jnp.int32) < count
+    cidx = jnp.clip(idx, 0, state.capacity - 1)
+    cen_l = jnp.asarray(cen, jnp.int32)
+    active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
+    return idx, active, cen_l
 
 
 class MapLauncher:
@@ -171,29 +199,38 @@ class ResidentCarry:
     failed_stack: Any  # bool[J]  the failure was scheduler stack depth
     n_epochs: Any      # i32[]    global epochs (loop iterations)
     job_epochs: Any    # i32[J]   per-region epochs (== solo epochs)
-    job_tasks: Any     # i32[J]   per-region tasks executed (T1)
-    job_forks: Any     # i32[J]   per-region total forks
+    job_tasks: Any     # i32[J,2] per-region tasks executed (T1; hi/lo)
+    job_forks: Any     # i32[J,2] per-region total forks (hi/lo)
     job_peak: Any      # i32[J]   per-region peak TV cursor (region-relative)
     map_launches: Any  # i32[]    map payload launches
     map_elements: Any  # i32[2]   live map element-lanes (hi/lo, base 2^20)
     map_lanes: Any     # i32[2]   launched element-lanes (hi/lo, base 2^20)
+    hole_lanes: Any    # i32[2]   full-TV lanes the span buckets skipped
 
 
 _HILO_BASE = 1 << 20  # split radix: i32 hi/lo pairs count exactly to ~2^51
 
 
 def _hilo_add(acc, n):
-    """Add ``n`` (i32, < 2^31 - 2^20) into an exact i32 (hi, lo) pair.
+    """Add ``n`` (i32, < 2^31 - 2^20) into exact i32 (hi, lo) pairs.
 
     x64 is typically disabled under JAX, so there is no int64 on device;
-    long resident waves would wrap a plain i32 lane counter (capacity x
-    max_domain per epoch).  The pair holds hi * 2^20 + lo exactly."""
-    lo = acc[1] + n
-    return jnp.stack([acc[0] + lo // _HILO_BASE, lo % _HILO_BASE])
+    long resident waves would wrap a plain i32 accumulator (capacity — or
+    capacity x max_domain — per epoch, times up to 2^20 epochs).  Each pair
+    holds hi * 2^20 + lo exactly.  ``acc`` is ``[..., 2]`` with ``n``
+    broadcast over the leading axes, so the per-region task/fork
+    accumulators ([J, 2]) get the same treatment as the scalar lane
+    counters ([2])."""
+    lo = acc[..., 1] + n
+    return jnp.stack([acc[..., 0] + lo // _HILO_BASE, lo % _HILO_BASE],
+                     axis=-1)
 
 
-def _hilo_value(acc) -> int:
-    return int(acc[0]) * _HILO_BASE + int(acc[1])
+def _hilo_value(acc):
+    """Decode hi/lo pairs to exact int64 (numpy scalar for a [2] pair,
+    int64 array for [J, 2] per-region pairs)."""
+    a = np.asarray(acc).astype(np.int64)
+    return a[..., 0] * _HILO_BASE + a[..., 1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,12 +251,13 @@ class ChunkSummary:
     failed: np.ndarray        # bool[J] region failed (TV or stack overflow)
     failed_stack: np.ndarray  # bool[J] the failure was scheduler stack depth
     job_epochs: np.ndarray    # i32[J] per-region epochs (== solo epochs)
-    job_tasks: np.ndarray     # i32[J] per-region tasks executed (T1)
-    job_forks: np.ndarray     # i32[J] per-region total forks
+    job_tasks: np.ndarray     # i64[J] per-region tasks executed (T1)
+    job_forks: np.ndarray     # i64[J] per-region total forks
     job_peak: np.ndarray      # i32[J] per-region peak TV cursor (relative)
     map_launches: int
     map_elements: int
     map_lanes: int
+    hole_lanes: int           # full-TV lanes the live-span buckets skipped
     arena_next: Optional[np.ndarray]  # i32[J] region cursors (fleet only)
 
 
@@ -241,19 +279,41 @@ def _map_width_ladder(max_domain: int, minimum: int = 8) -> Tuple[int, ...]:
     return tuple(widths)
 
 
+def _span_width_ladder(capacity: int, levels: int = 4,
+                       minimum: int = 8) -> Tuple[int, ...]:
+    """Live-span launch widths for the resident epoch step.
+
+    A halving ladder from the full TV down ``levels`` rungs: the resident
+    body picks the smallest width covering the union span of this epoch's
+    popped ranges (a traced min/max over the per-region stack tops) and
+    ``lax.switch``es into that width's compiled step — the §10 map-payload
+    bucketing one level up, applied to the task launch itself.  Each width
+    traces one branch of the full phase-2/3 body, so the ladder is kept
+    short (``levels``) rather than lane-exact; the top rung is always the
+    full TV, so the worst case is exactly the old full-width behaviour.
+    """
+    widths = [int(capacity)]
+    w = capacity // 2
+    while len(widths) < levels and w >= max(1, minimum):
+        widths.append(int(w))
+        w //= 2
+    return tuple(sorted(widths))
+
+
 def _fresh_resident_carry(
     state, heap, arena, jstack, rstack, sp, n_regions: int
 ) -> ResidentCarry:
     z = jnp.zeros((n_regions,), jnp.int32)
     zs = jnp.asarray(0, jnp.int32)
     z2 = jnp.zeros((2,), jnp.int32)
+    zj2 = jnp.zeros((n_regions, 2), jnp.int32)
     return ResidentCarry(
         state=state, heap=heap, arena=arena,
         jstack=jstack, rstack=rstack, sp=sp,
         failed=jnp.zeros((n_regions,), bool),
         failed_stack=jnp.zeros((n_regions,), bool),
-        n_epochs=zs, job_epochs=z, job_tasks=z, job_forks=z, job_peak=z,
-        map_launches=zs, map_elements=z2, map_lanes=z2,
+        n_epochs=zs, job_epochs=z, job_tasks=zj2, job_forks=zj2, job_peak=z,
+        map_launches=zs, map_elements=z2, map_lanes=z2, hole_lanes=z2,
     )
 
 
@@ -272,6 +332,7 @@ class EpochLoop:
         dispatch: Any = MASKED,
         *,
         rank_fn: Optional[Callable] = None,
+        pack_fn: Optional[Callable] = None,
         fork_offsets_fn: Optional[Callable] = None,
         seg_offsets_fn: Optional[Callable] = None,
         donate: bool = False,
@@ -281,6 +342,7 @@ class EpochLoop:
         self.policy: DispatchPolicy = resolve_policy(dispatch)
         self.task_names = [t.name for t in program.tasks]
         self._rank_fn = rank_fn or _default_rank_fn
+        self._pack_fn = pack_fn or _default_pack_fn
         self._fork_offsets_fn = fork_offsets_fn
         self._seg_offsets_fn = seg_offsets_fn
         self._donate = donate
@@ -294,6 +356,7 @@ class EpochLoop:
                                 on_trace=self._mark_trace)
         self._step_cache: Dict[Any, Any] = {}
         self._compact_cache: Dict[int, Any] = {}
+        self._gather_cache: Dict[int, Any] = {}
         self._resident_cache: Dict[Any, Any] = {}
 
     def _mark_trace(self) -> None:
@@ -315,11 +378,7 @@ class EpochLoop:
 
         def step(state, heap, arena, start, count, cen):
             self._mark_trace()
-            idx = start + jnp.arange(P, dtype=jnp.int32)
-            in_range = jnp.arange(P, dtype=jnp.int32) < count
-            cidx = jnp.clip(idx, 0, state.capacity - 1)
-            cen_l = jnp.asarray(cen, jnp.int32)
-            active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
+            idx, active, cen_l = _frontier_mask(state, start, count, cen, P)
             per_type, _ = tvm.trace_tasks(
                 program, state, heap, idx, active, skip_idle_types=skip
             )
@@ -359,11 +418,7 @@ class EpochLoop:
 
             def cfn(state, start, count, cen):
                 self._mark_trace()
-                idx = start + jnp.arange(P, dtype=jnp.int32)
-                in_range = jnp.arange(P, dtype=jnp.int32) < count
-                cidx = jnp.clip(idx, 0, state.capacity - 1)
-                cen_l = jnp.asarray(cen, jnp.int32)
-                active = in_range & (cen_l > 0) & (state.epoch[cidx] == cen_l)
+                idx, active, _ = _frontier_mask(state, start, count, cen, P)
                 return tvm.compact_types(
                     program, state, idx, active,
                     rank_fn=rank_fn, offsets_fn=offsets_fn,
@@ -397,10 +452,70 @@ class EpochLoop:
             )
         return self._step_cache[key]
 
+    def gather_pass(self, P: int):
+        """Frontier pack pass: active mask -> (perm, count), one dispatch.
+
+        The gather dispatch's sibling of :meth:`compact_pass` — one extra
+        V_inf dispatch + one count transfer, paid to make the task step
+        launch only the epoch's dense active frontier instead of the whole
+        (hole-ridden) fused span.
+        """
+        if P not in self._gather_cache:
+            pack_fn = self._pack_fn
+
+            def gfn(state, start, count, cen):
+                self._mark_trace()
+                _, active, _ = _frontier_mask(state, start, count, cen, P)
+                return pack_fn(active)
+
+            self._gather_cache[P] = jax.jit(gfn)
+        return self._gather_cache[P]
+
+    def gather_step(self, P: int, G: int):
+        """Phase 2+3 over the packed dense frontier (gather dispatch).
+
+        The frontier holds *every* active lane of the epoch in increasing
+        lane order (the pack is stable), so the fork prefix sum inside
+        :func:`~repro.core.tvm.commit_epoch` sees exactly the masked
+        dispatch's allocation order restricted to the lanes that matter —
+        results are bit-identical, hole lanes between active regions are
+        simply never launched.  Each gathered lane's epoch number is read
+        from the TV itself (``active`` implies ``epoch[slot] == cen``), so
+        the dense step needs no per-lane CEN transfer.
+        """
+        key = ("g", P, G)
+        if key not in self._step_cache:
+            self._evict()
+            program = self.program
+            skip = self._skip_idle_types
+
+            def step(state, heap, arena, start, perm):
+                self._mark_trace()
+                lanepos = perm[:G]
+                valid = lanepos >= 0
+                idx = jnp.where(valid, start + lanepos, state.capacity)
+                cidx = jnp.clip(idx, 0, state.capacity - 1)
+                cen_g = jnp.where(valid, state.epoch[cidx], 0)
+                per_type, _ = tvm.trace_tasks(
+                    program, state, heap, idx, valid, skip_idle_types=skip
+                )
+                return tvm.commit_epoch(
+                    program, state, heap, idx, valid, per_type, cen_g,
+                    fork_offsets_fn=self._fork_offsets_fn,
+                    seg_offsets_fn=self._seg_offsets_fn,
+                    arena=arena,
+                )
+
+            self._step_cache[key] = jax.jit(
+                step, donate_argnums=(0, 1) if self._donate else ()
+            )
+        return self._step_cache[key]
+
     # ------------------------------------------------- one host-driven epoch
     def run_epoch(self, state, heap, arena, start, span, cen, col, readback):
-        """One fused host-driven epoch: optional compaction pass (+ count
-        readback), the phase-2/3 step, then the end-of-epoch readback.
+        """One fused host-driven epoch: optional compaction or gather-pack
+        pass (+ count readback), the phase-2/3 step, then the end-of-epoch
+        readback.
 
         ``cen`` is an int (solo frontier) or an i32 vector of length
         ``span`` (fused multi-region frontier; padded to the launch bucket
@@ -442,6 +557,20 @@ class EpochLoop:
                 state, heap, arena, start_j, count_j, cen_j, perm,
                 jnp.asarray(toffs, jnp.int32), jnp.asarray(counts, jnp.int32),
             )
+        elif self.policy.name == "gather":
+            perm, count_dev = self.gather_pass(P)(
+                state, start_j, count_j, cen_j
+            )
+            n_sched = int(jax.device_get(count_dev))
+            col.dispatch()
+            col.transfer()
+            dispatches += 1
+            G = self.policy.epoch_bucket(n_sched)
+            state, heap, summary, map_launches = self.gather_step(P, G)(
+                state, heap, arena, start_j, perm
+            )
+            launched = G
+            col.holes_skipped(P - G)
         else:
             state, heap, summary, map_launches = self.masked_step(P)(
                 state, heap, arena, start_j, count_j, cen_j
@@ -471,6 +600,12 @@ class EpochLoop:
             with the segmented per-region allocator; the arena's region
             cursors ride the carry, so the whole wave runs without the host.
 
+        Either way the task step itself launches at the smallest ladder
+        width (`_span_width_ladder`) covering the union span of this
+        epoch's popped ranges — full-TV (or full-capacity) launches only
+        happen when the live span actually demands them; the skipped lanes
+        accrue in the carry's ``hole_lanes`` pair (DESIGN.md §11).
+
         Region failure (TV-region or stack overflow) zeroes that region's
         stack pointer: the job stops, its neighbours keep running — the same
         isolation the host multiplexer provides.
@@ -478,7 +613,56 @@ class EpochLoop:
         if self.policy.name != "masked":
             raise ValueError(_COMPACTED_RESIDENT_MSG)
         program = self.program
-        step_fn = self._masked_step_fn(capacity)
+        span_widths = _span_width_ladder(capacity)
+        step_fns = {W: self._masked_step_fn(W) for W in span_widths}
+
+        def make_branch(W: int, fleet: bool):
+            """One span-bucket branch: the masked step at width ``W`` over
+            the window ``[st, st+W)`` covering the live span, with the
+            map-launch tensors padded back to full-TV width so every
+            ``lax.switch`` branch returns one pytree shape."""
+            step_fn = step_fns[W]
+
+            def branch(state, heap, arena_, scen, lo, ct):
+                if fleet:
+                    # clamp so the window stays inside the TV; W covers the
+                    # span, so the clamped window still contains every
+                    # popped range (st <= lo and st + W >= span end)
+                    st = jnp.clip(lo, 0, capacity - W)
+                    cen_w = jax.lax.dynamic_slice(scen, (st,), (W,))
+                    s2, h2, summ, mls = step_fn(
+                        state, heap, arena_, st,
+                        jnp.asarray(W, jnp.int32), cen_w,
+                    )
+                else:
+                    st = lo
+                    s2, h2, summ, mls = step_fn(
+                        state, heap, arena_, st, ct, scen
+                    )
+                full = []
+                for ml in mls:
+                    zw = jnp.zeros((capacity,), bool)
+                    zi = jnp.zeros(
+                        (capacity,) + ml.argi.shape[1:], ml.argi.dtype
+                    )
+                    zf = jnp.zeros(
+                        (capacity,) + ml.argf.shape[1:], ml.argf.dtype
+                    )
+                    full.append(tvm.MapLaunch(
+                        map_id=ml.map_id,
+                        where=jax.lax.dynamic_update_slice(
+                            zw, ml.where, (st,)
+                        ),
+                        argi=jax.lax.dynamic_update_slice(
+                            zi, ml.argi, (st,) + (0,) * (ml.argi.ndim - 1)
+                        ),
+                        argf=jax.lax.dynamic_update_slice(
+                            zf, ml.argf, (st,) + (0,) * (ml.argf.ndim - 1)
+                        ),
+                    ))
+                return s2, h2, summ, full
+
+            return branch
 
         def body(carry: ResidentCarry):
             self._mark_trace()
@@ -488,10 +672,14 @@ class EpochLoop:
             arena = carry.arena
             if arena is None:
                 step_cen = jnp.where(live[0], cen[0], 0)
-                st, ct = start[0], count[0]
+                lo, ct = start[0], count[0]
+                span_w = jnp.where(live[0], count[0], 0)
             else:
                 # fuse every live region's pop into a per-lane CEN vector
-                # over the full TV (work-together across regions)
+                # over the full TV (work-together across regions); the task
+                # launch itself is then bucketed to the union span of the
+                # popped ranges — a wave with one hot region stops paying
+                # full-TV launches every epoch
                 J = arena.n_jobs
                 lanes = jnp.arange(capacity, dtype=jnp.int32)
                 jl = jnp.clip(arena.slot_job, 0, J - 1)
@@ -502,10 +690,31 @@ class EpochLoop:
                     & (lanes < start[jl] + count[jl])
                 )
                 step_cen = jnp.where(in_pop, cen[jl], 0)
-                st = jnp.asarray(0, jnp.int32)
+                big = jnp.asarray(capacity, jnp.int32)
+                span_lo = jnp.min(jnp.where(live, start, big))
+                span_hi = jnp.max(jnp.where(live, start + count, 0))
+                lo = jnp.clip(span_lo, 0, capacity)
                 ct = jnp.asarray(capacity, jnp.int32)
-            state, heap, summary, map_launches = step_fn(
-                carry.state, carry.heap, arena, st, ct, step_cen
+                span_w = jnp.clip(span_hi - lo, 0, capacity)
+
+            swarr = jnp.asarray(span_widths, jnp.int32)
+            sidx = jnp.clip(
+                jnp.searchsorted(swarr, span_w, side="left"),
+                0, len(span_widths) - 1,
+            )
+            branches = [
+                make_branch(W, arena is not None) for W in span_widths
+            ]
+            operands = (carry.state, carry.heap, arena, step_cen, lo, ct)
+            if len(branches) == 1:
+                state, heap, summary, map_launches = branches[0](*operands)
+            else:
+                state, heap, summary, map_launches = jax.lax.switch(
+                    sidx, branches, *operands
+                )
+            hole_lanes = _hilo_add(
+                carry.hole_lanes,
+                jnp.asarray(capacity, jnp.int32) - swarr[sidx],
             )
             if arena is None:
                 job_join = summary.join_scheduled[None]
@@ -599,10 +808,11 @@ class EpochLoop:
                 failed_stack=failed_stack,
                 n_epochs=carry.n_epochs + 1,
                 job_epochs=carry.job_epochs + live.astype(jnp.int32),
-                job_tasks=carry.job_tasks + job_active,
-                job_forks=carry.job_forks + job_forks,
+                job_tasks=_hilo_add(carry.job_tasks, job_active),
+                job_forks=_hilo_add(carry.job_forks, job_forks),
                 job_peak=job_peak,
                 map_launches=map_ct, map_elements=map_el, map_lanes=map_ln,
+                hole_lanes=hole_lanes,
             )
 
         return body
@@ -651,13 +861,13 @@ class EpochLoop:
         without ever fetching the bulk TV/heap state."""
         arena_next = None if carry.arena is None else carry.arena.next
         (sp, failed, failed_stack, n_epochs, job_epochs, job_tasks,
-         job_forks, job_peak, m_ct, m_el, m_ln, a_next) = jax.device_get(
-            (
+         job_forks, job_peak, m_ct, m_el, m_ln, holes, a_next) = (
+            jax.device_get((
                 carry.sp, carry.failed, carry.failed_stack, carry.n_epochs,
                 carry.job_epochs, carry.job_tasks, carry.job_forks,
                 carry.job_peak, carry.map_launches, carry.map_elements,
-                carry.map_lanes, arena_next,
-            )
+                carry.map_lanes, carry.hole_lanes, arena_next,
+            ))
         )
         return ChunkSummary(
             n_epochs=int(n_epochs),
@@ -665,12 +875,13 @@ class EpochLoop:
             failed=np.asarray(failed),
             failed_stack=np.asarray(failed_stack),
             job_epochs=np.asarray(job_epochs),
-            job_tasks=np.asarray(job_tasks),
-            job_forks=np.asarray(job_forks),
+            job_tasks=_hilo_value(job_tasks),
+            job_forks=_hilo_value(job_forks),
             job_peak=np.asarray(job_peak),
             map_launches=int(m_ct),
-            map_elements=_hilo_value(m_el),
-            map_lanes=_hilo_value(m_ln),
+            map_elements=int(_hilo_value(m_el)),
+            map_lanes=int(_hilo_value(m_ln)),
+            hole_lanes=int(_hilo_value(holes)),
             arena_next=None if a_next is None else np.asarray(a_next),
         )
 
@@ -688,6 +899,7 @@ class HostEngine:
         dispatch: Any = MASKED,
         coalesce: bool = True,
         rank_fn: Optional[Callable] = None,
+        pack_fn: Optional[Callable] = None,
         stats_factory: Optional[Callable[[], StatsCollector]] = None,
     ):
         self.program = program
@@ -697,7 +909,8 @@ class HostEngine:
         self._stats_factory = stats_factory
         self.loop = EpochLoop(
             program, dispatch,
-            rank_fn=rank_fn, fork_offsets_fn=fork_offsets_fn, donate=donate,
+            rank_fn=rank_fn, pack_fn=pack_fn,
+            fork_offsets_fn=fork_offsets_fn, donate=donate,
         )
         self.policy = self.loop.policy
 
@@ -777,9 +990,11 @@ class DeviceEngine:
     Beyond-paper optimization (the paper's "tighter coupling" prediction):
     zero per-epoch dispatches/transfers on the critical path — the
     :class:`EpochLoop` resident configuration with ``n_regions=1``.
-    Constraints: fixed TV capacity processed every epoch (no NDRange
-    bucketing — so only the ``masked`` dispatch policy is traceable) and map
-    payloads sized by ``MapType.max_domain`` (the live-domain divergence is
+    Constraints: only the ``masked`` dispatch policy is traceable (launch
+    shapes fixed at trace time; the per-epoch step is still bucketed to
+    the popped range's span via the §11 width ladder, with the skipped
+    lanes in ``RunStats.hole_lanes_skipped``) and map payloads are sized
+    by the §10 ``max_domain``-capped width ladder (residual padding
     surfaced in ``RunStats.map_lanes_wasted``).
     """
 
@@ -828,10 +1043,11 @@ class DeviceEngine:
         stats = RunStats(
             epochs=s.n_epochs, dispatches=1, scalar_transfers=1,
             tasks_executed=int(s.job_tasks[0]),
-            lanes_launched=s.n_epochs * self.capacity,
+            lanes_launched=s.n_epochs * self.capacity - s.hole_lanes,
             total_forks=int(s.job_forks[0]),
             map_launches=s.map_launches, map_elements=s.map_elements,
             map_lanes_launched=s.map_lanes,
+            hole_lanes_skipped=s.hole_lanes,
         )
         stats.peak_tv_slots = int(s.job_peak[0])
         return out.heap, out.state.value, stats

@@ -18,6 +18,9 @@ execution substrate, so this module owns all three:
     §5.4 contiguity principle: active lanes are scattered into dense
     per-type ranges (``kernels.fork_compact.type_rank`` + ``fork_scan``) and
     each type launches as one dense slice sized to its own population.
+    ``gather`` packs every scheduled lane (all types) into one dense
+    frontier (``kernels.ops.lane_pack``) sized to the active population —
+    the cross-region hole lanes of a fused fleet are never launched.
   * ``batched_device_stacks`` / ``batched_device_pop`` /
     ``batched_device_push`` — the same stack discipline as fixed-capacity
     ``[n_regions, depth]`` device arrays with per-region stack pointers, for
@@ -95,7 +98,13 @@ def size_type_buckets(policy: "DispatchPolicy", counts, task_names):
 
 MASKED = DispatchPolicy("masked")
 COMPACTED = DispatchPolicy("compacted")
-_POLICIES = {p.name: p for p in (MASKED, COMPACTED)}
+# gather: pack the epoch's scheduled lanes into one dense frontier
+# (kernels.ops.lane_pack) and run phase 2 over that frontier only — the
+# single-launch sibling of ``compacted`` (no per-type splitting), aimed at
+# the cross-region hole lanes of masked *fused* epochs.  Pays the same
+# extra V_inf dispatch + count transfer as the compaction pass.
+GATHER = DispatchPolicy("gather")
+_POLICIES = {p.name: p for p in (MASKED, COMPACTED, GATHER)}
 
 
 def resolve_policy(dispatch) -> DispatchPolicy:
@@ -373,6 +382,7 @@ class RunStats:
     dispatches: int = 0             # host->device program launches (V_inf)
     scalar_transfers: int = 0       # device->host readbacks (V_inf)
     ranges_coalesced: int = 0       # extra same-CEN ranges merged into pops
+    hole_lanes_skipped: int = 0     # lanes a full-span launch would have paid
     tasks_by_type: Dict[str, int] = dataclasses.field(default_factory=dict)
     lanes_by_type: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -435,6 +445,11 @@ class StatsCollector:
                    n: int = 1) -> None:
         pass
 
+    def holes_skipped(self, n: int) -> None:
+        """Lanes a full-span launch would have paid that a dense dispatch
+        (gather frontier, resident live-span bucket) did not launch."""
+        pass
+
     def tv_peak(self, slots: int) -> None:
         pass
 
@@ -492,6 +507,9 @@ class RunStatsCollector(NullStats):
         super().map_launch(elements, lanes, n)
         self._stats.map_elements += elements
         self._stats.map_lanes_launched += lanes
+
+    def holes_skipped(self, n: int) -> None:
+        self._stats.hole_lanes_skipped += n
 
     def tv_peak(self, slots: int) -> None:
         self._stats.peak_tv_slots = max(self._stats.peak_tv_slots, slots)

@@ -75,6 +75,29 @@ def type_rank(
     )
 
 
+def lane_pack(active: jnp.ndarray, impl: str = "auto"):
+    """Stable frontier pack of the scheduled lanes (gather dispatch).
+
+    The single-type specialization of the §5.4 compaction: ``perm[d]`` is
+    the lane position of the d-th scheduled lane (-1 beyond the scheduled
+    population) and ``count`` the scheduled population.  The engine's
+    gather dispatch packs a masked fused epoch into a dense frontier with
+    this permutation, executes the task step lane-exact, and scatters the
+    effects back — so cross-region hole lanes are never launched.  The
+    non-ref path rides the ``type_rank`` Pallas kernel with a single type
+    bucket (rank-among-active is exactly a one-type stable rank).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.lane_pack_ref(active)
+    P = active.shape[0]
+    rank, counts = _type_rank_pallas(
+        jnp.zeros((P,), jnp.int32), active, 1,
+        interpret=(impl == "interpret"),
+    )
+    return ref.rank_to_perm(rank, active), counts[0].astype(jnp.int32)
+
+
 def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,

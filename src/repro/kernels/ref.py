@@ -36,6 +36,34 @@ def segmented_fork_scan_ref(counts: jnp.ndarray, seg: jnp.ndarray, n_segs: int):
     return offs, cnt1h.sum(axis=0).astype(jnp.int32)
 
 
+def rank_to_perm(rank: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a stable within-mask rank into a pack permutation.
+
+    ``perm[d]`` is the lane position of the d-th active lane (increasing,
+    so fork-allocation order is preserved), -1 beyond the active
+    population.  Shared by the jnp oracle and the kernel-backed
+    ``ops.lane_pack`` so the two paths can only differ in how the rank is
+    computed."""
+    P = rank.shape[0]
+    return (
+        jnp.full((P,), -1, jnp.int32)
+        .at[jnp.where(active, rank, P)]
+        .set(jnp.arange(P, dtype=jnp.int32), mode="drop")
+    )
+
+
+def lane_pack_ref(active: jnp.ndarray):
+    """Oracle for the gather-dispatch frontier pack (single-type compaction).
+
+    ``active`` is the epoch's per-lane scheduled mask; the pack is the
+    stable permutation that gathers every scheduled lane into a contiguous
+    frontier (:func:`rank_to_perm`).  Returns (perm i32[P], count i32[]).
+    """
+    act = active.astype(bool)
+    rank = jnp.cumsum(act.astype(jnp.int32)) - act.astype(jnp.int32)
+    return rank_to_perm(rank, act), act.sum().astype(jnp.int32)
+
+
 def type_rank_ref(types: jnp.ndarray, active: jnp.ndarray, n_types: int):
     """Oracle for fork_compact.type_rank: stable within-type ranks."""
     types = types.astype(jnp.int32)

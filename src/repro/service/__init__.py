@@ -20,6 +20,7 @@ from .jobs import (
     JobStatus,
     WaveTemplate,
     WaveTemplateCache,
+    canonical_wave_order,
     wave_template_key,
 )
 from .multiplexer import (
@@ -43,6 +44,7 @@ __all__ = [
     "TenantSlot",
     "WaveTemplate",
     "WaveTemplateCache",
+    "canonical_wave_order",
     "fuse_programs",
     "merge_stats",
     "wave_template_key",

@@ -27,6 +27,7 @@ from .jobs import (
     JobStatus,
     WaveTemplate,
     WaveTemplateCache,
+    canonical_wave_order,
     check_fleet_dtype,
     validate_job,
     wave_template_key,
@@ -47,6 +48,7 @@ def merge_stats(into: RunStats, s: RunStats) -> RunStats:
     into.dispatches += s.dispatches
     into.scalar_transfers += s.scalar_transfers
     into.ranges_coalesced += s.ranges_coalesced
+    into.hole_lanes_skipped += s.hole_lanes_skipped
     for k, v in s.tasks_by_type.items():
         into.tasks_by_type[k] = into.tasks_by_type.get(k, 0) + v
     for k, v in s.lanes_by_type.items():
@@ -238,6 +240,12 @@ class JobService:
             if not wave:
                 return []
             if self.engine == "device":
+                # seat members in canonical order so a permutation of an
+                # earlier wave lands on the same slot layout as its cached
+                # template (the key is canonical too); each job's results
+                # attach to its own handle, so no un-permuting is needed
+                order = canonical_wave_order([h.job for h in wave])
+                wave = [wave[i] for i in order]
                 key = wave_template_key(
                     [h.job for h in wave],
                     sum(h.job.quota for h in wave),

@@ -145,14 +145,34 @@ class WaveTemplate:
     loop: Any      # EpochLoop (owns the compiled chunk template)
 
 
+def canonical_wave_order(jobs: Sequence[Job]) -> Tuple[int, ...]:
+    """Canonical member order of a wave: sort by (structural hash, quota).
+
+    Member *order* does not affect the traced chunk loop beyond the slot
+    layout it induces, so two waves that are permutations of each other
+    execute the same compiled template once their members are seated in
+    the same order.  The sort is stable (ties keep submission order), and
+    quotas ride the permutation so the slot layout follows the members.
+    The service reorders device waves with this permutation before fusing;
+    results need no un-permuting — they attach to each job's own handle.
+    """
+    return tuple(sorted(
+        range(len(jobs)),
+        key=lambda i: (jobs[i].program.structural_hash(), jobs[i].quota),
+    ))
+
+
 def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
                       chunk: Optional[int]) -> Tuple:
     """Cache key for one wave shape: everything that determines the traced
-    chunk loop — member structure and order, quota layout, TV capacity,
-    stack depth, and the chunk size K."""
+    chunk loop — member structure, quota layout, TV capacity, stack depth,
+    and the chunk size K.  Members are keyed in :func:`canonical_wave_order`
+    (not submission order), so permuted waves of the same members share one
+    template instead of retracing."""
+    order = canonical_wave_order(jobs)
     return (
-        tuple(j.program.structural_hash() for j in jobs),
-        tuple(j.quota for j in jobs),
+        tuple(jobs[i].program.structural_hash() for i in order),
+        tuple(jobs[i].quota for i in order),
         int(capacity),
         int(stack_depth),
         chunk,

@@ -13,7 +13,8 @@ levels of residency:
   tenant task function runs behind a context shim that translates task ids,
   map ids, and heap names back into the tenant's own vocabulary.  Phase 2
   therefore needs *no new machinery*: the fused program is an ordinary
-  ``Program`` and both the masked and §5.4-compacted dispatches apply.
+  ``Program`` and the masked, §5.4-compacted, and §11-gather dispatches
+  all apply.
 
 * :class:`EpochMultiplexer` is the *host-loop* driver (an
   :class:`~repro.core.engine.EpochLoop` configuration): each global epoch it
@@ -23,7 +24,10 @@ levels of residency:
   fleet — V_inf paid once per *global epoch*.  Because the host sees every
   epoch, it supports streaming completion, mid-flight region reuse
   (including structurally-equal program templates, see
-  ``Program.structural_hash``), gang policies, and the compacted dispatch.
+  ``Program.structural_hash``), gang policies, and the compacted and
+  gather dispatches (the latter packs the fused span's scheduled lanes
+  into one dense frontier, so cross-region hole lanes are never launched
+  — DESIGN.md §11).
 
 * :class:`DeviceMultiplexer` is the *chunked resident* driver (DESIGN.md
   §9–10): the admitted wave runs inside a ``lax.while_loop`` with
@@ -537,6 +541,7 @@ class EpochMultiplexer(_FleetBase):
         collect_stats: bool = True,
         stats_factory=None,
         rank_fn=None,
+        pack_fn=None,
         seg_offsets_fn=None,
     ):
         super().__init__(
@@ -546,7 +551,7 @@ class EpochMultiplexer(_FleetBase):
         self.pop_policy = resolve_mux_policy(pop_policy, gang)
         self._loop = EpochLoop(
             self.program, dispatch,
-            rank_fn=rank_fn, seg_offsets_fn=seg_offsets_fn,
+            rank_fn=rank_fn, pack_fn=pack_fn, seg_offsets_fn=seg_offsets_fn,
             # fused fleets have many task types but type-homogeneous epochs
             # stay common, so idle types skip via lax.cond
             skip_idle_types=True,
@@ -682,6 +687,7 @@ class _ChunkLedger:
         self.map_launches = 0
         self.map_elements = 0
         self.map_lanes = 0
+        self.hole_lanes = 0
 
 
 class DeviceMultiplexer(_FleetBase):
@@ -833,7 +839,10 @@ class DeviceMultiplexer(_FleetBase):
         if d_epochs > 0:
             # every global epoch fused all regions live then; bulk O(1)
             # accounting from the readback, same ledger semantics as the
-            # host driver's per-epoch calls
+            # host driver's per-epoch calls.  The task launches were
+            # span-bucketed on device, so launched lanes are the full-TV
+            # total minus the hole lanes the ladder skipped.
+            d_holes = s.hole_lanes - led.hole_lanes
             col.epoch(
                 s.n_epochs,
                 n_ranges=int((s.job_epochs - led.job_epochs).sum()),
@@ -841,9 +850,10 @@ class DeviceMultiplexer(_FleetBase):
             )
             col.lanes(
                 int((s.job_tasks - led.job_tasks).sum()),
-                d_epochs * self.capacity, None,
+                d_epochs * self.capacity - d_holes, None,
             )
             col.forks(int((s.job_forks - led.job_forks).sum()))
+            col.holes_skipped(d_holes)
         bases = np.asarray([sl.base for sl in self._slots])
         col.tv_peak(int((s.job_peak + bases).max()))
         d_maps = s.map_launches - led.map_launches
@@ -859,6 +869,7 @@ class DeviceMultiplexer(_FleetBase):
         led.map_launches = s.map_launches
         led.map_elements = s.map_elements
         led.map_lanes = s.map_lanes
+        led.hole_lanes = s.hole_lanes
 
     def _settle(self, s: ChunkSummary, riders: List[int],
                 max_epochs: int) -> List[JobHandle]:

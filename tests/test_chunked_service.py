@@ -279,6 +279,72 @@ def test_identical_consecutive_waves_reuse_template_zero_traces():
         assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
 
 
+def test_permuted_wave_reuses_template_zero_traces():
+    """Cache-key canonicalization: a wave that is a *permutation* of an
+    earlier wave's members (mixed programs and quotas) reuses the cached
+    template with zero new traces — the key and the seating order both
+    canonicalize on (structural hash, quota), so member submission order
+    no longer splinters the cache."""
+    fibc, treec = get_case("fib"), get_case("treewalk")
+    solo = {}
+    for c, q in ((fibc, 512), (treec, 256)):
+        eng = HostEngine(c.program, capacity=q)
+        solo[c.name] = eng.run(
+            c.initial, heap_init=dict(c.heap_init) or None
+        )
+
+    svc = JobService(capacity=768, max_jobs=2, engine="device", chunk=3)
+    wave_a = [
+        svc.submit_case(fibc, quota=512),
+        svc.submit_case(treec, quota=256),
+    ]
+    svc.drain()
+    traces_after_a = svc.trace_count
+    assert traces_after_a > 0
+    assert svc.template_cache.misses == 1
+
+    # resubmit the same members permuted: must hit the same template
+    wave_b = [
+        svc.submit_case(treec, quota=256),
+        svc.submit_case(fibc, quota=512),
+    ]
+    svc.drain()
+    assert svc.trace_count == traces_after_a  # zero new traces
+    assert svc.template_cache.hits == 1
+    assert svc.template_cache.misses == 1
+
+    for h in wave_a + wave_b:
+        sh, sv, ss = solo[h.job.name]
+        assert h.status is JobStatus.DONE
+        np.testing.assert_array_equal(
+            np.asarray(h.result.value), np.asarray(sv), err_msg=h.job.name
+        )
+        for k in sh:
+            np.testing.assert_array_equal(
+                np.asarray(h.result.heap[k]), np.asarray(sh[k]),
+                err_msg=f"{h.job.name}:{k}",
+            )
+        assert h.result.stats.epochs == ss.epochs
+
+
+def test_wave_template_key_is_order_insensitive():
+    """The key itself canonicalizes member order, carrying quotas through
+    the permutation — and still distinguishes genuinely different quota
+    layouts."""
+    from repro.service import wave_template_key
+
+    fibc, treec = get_case("fib"), get_case("treewalk")
+    a = Job(fibc.program, fibc.initial, quota=512, name="fib")
+    b = Job(treec.program, treec.initial,
+            heap_init=dict(treec.heap_init), quota=256, name="treewalk")
+    k_ab = wave_template_key([a, b], 768, 1 << 10, 3)
+    k_ba = wave_template_key([b, a], 768, 1 << 10, 3)
+    assert k_ab == k_ba
+    # different quota for the same member is a different wave shape
+    a2 = Job(fibc.program, fibc.initial, quota=256, name="fib")
+    assert wave_template_key([a2, b], 768, 1 << 10, 3) != k_ab
+
+
 def test_service_streams_admission_through_chunked_waves():
     """JobService(engine='device', chunk=K): a queued third job streams
     into the freed region of the live wave — one wave shape ever compiled,
@@ -296,6 +362,37 @@ def test_service_streams_admission_through_chunked_waves():
     # the third job was admitted mid-wave: no second wave was ever fused
     assert svc.template_cache.misses == 1
     assert svc.template_cache.hits == 0
+
+
+# -------------------------------------------- live-span bucketed task steps
+def test_resident_task_launches_bucket_to_live_span(fleet_templates):
+    """DESIGN.md §11: the resident epoch step launches at the smallest
+    span-ladder width covering the popped ranges, not full TV width — the
+    skipped hole lanes are accounted, and launched + skipped tiles
+    epochs x capacity exactly."""
+    handles, mux = _make_mux("mixed3", None, fleet_templates)
+    mux.run()
+    assert all(h.status is JobStatus.DONE for h in handles)
+    fs = mux.stats()
+    assert fs.hole_lanes_skipped > 0
+    assert fs.lanes_launched + fs.hole_lanes_skipped == (
+        fs.epochs * mux.capacity
+    )
+    assert fs.utilization == fs.tasks_executed / fs.lanes_launched
+
+
+def test_solo_device_engine_skips_hole_lanes():
+    """The solo resident engine rides the same ladder: a small popped
+    range in a large TV stops paying full-capacity launches."""
+    cap = 1 << 12
+    _, _, ds = DeviceEngine(
+        fib.PROGRAM, capacity=cap, stack_depth=512
+    ).run(fib.initial(12))
+    _, _, hs = HostEngine(fib.PROGRAM, capacity=cap).run(fib.initial(12))
+    assert ds.tasks_executed == hs.tasks_executed
+    assert ds.hole_lanes_skipped > 0
+    assert ds.lanes_launched + ds.hole_lanes_skipped == ds.epochs * cap
+    assert ds.lanes_launched < ds.epochs * cap
 
 
 # --------------------------------------------- bucketed resident map sizing

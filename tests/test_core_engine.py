@@ -11,6 +11,7 @@ from repro.core import (
     DeviceEngine,
     EngineError,
     HostEngine,
+    MapType,
     Program,
     TaskType,
     InitialTask,
@@ -192,3 +193,107 @@ def test_engine_with_pallas_fork_offsets():
     assert int(v_ref[0, 0]) == int(v_pal[0, 0]) == fib.fib_reference(10)
     assert s_ref.epochs == s_pal.epochs
     assert s_ref.tasks_executed == s_pal.tasks_executed
+
+
+# ------------------------------------------ exact resident accumulators
+def test_hilo_pairs_count_past_int32_exactly():
+    """The resident accumulators' hi/lo split-radix pairs count exactly
+    past 2^31 (where a plain i32 lane would wrap), in both the scalar [2]
+    and the per-region [J, 2] layouts."""
+    import jax
+
+    from repro.core.engine import _hilo_add, _hilo_value
+
+    n = jnp.asarray(1 << 30, jnp.int32)
+
+    def step(acc, _):
+        return _hilo_add(acc, n), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((2,), jnp.int32), None, length=8)
+    assert int(_hilo_value(acc)) == 8 << 30  # 2^33: far past i32
+
+    nv = jnp.asarray([1 << 30, 7, 0], jnp.int32)
+
+    def stepv(acc, _):
+        return _hilo_add(acc, nv), None
+
+    accv, _ = jax.lax.scan(
+        stepv, jnp.zeros((3, 2), jnp.int32), None, length=6
+    )
+    np.testing.assert_array_equal(
+        _hilo_value(accv), np.asarray([6 << 30, 42, 0], np.int64)
+    )
+
+
+def _make_mapper_program(D: int):
+    """Synthetic high-volume map program: every epoch schedules one map
+    over a D-element domain (bumping a heap counter per element) and forks
+    the next tick — a per-epoch map-lane firehose for the accumulator
+    tests."""
+    def _tick(ctx):
+        k = ctx.argi(0)
+        more = k > 0
+        ctx.map("bump", argi=(k,))
+        ctx.fork("tick", argi=(k - 1,), where=more)
+        ctx.emit(k, where=~more)
+
+    def _bump(mctx):
+        mctx.write("acc", mctx.eid, 1, op="add")
+
+    return Program(
+        name=f"mapper{D}",
+        tasks=(TaskType("tick", _tick),),
+        n_arg_i=1,
+        value_width=1,
+        value_dtype=jnp.int32,
+        maps=(MapType(
+            "bump", _bump,
+            domain=lambda argi: argi[..., 0] * 0 + D,
+            max_domain=D,
+        ),),
+        heap=(HeapVar("acc", (D,), jnp.int32),),
+    )
+
+
+def test_resident_map_accumulators_exact_on_high_volume_fleet():
+    """A high-volume map fleet (one D-wide map launch per region per
+    epoch) through the resident driver: the hi/lo accumulators report the
+    exact element volumes a host-loop run counts, and the heap results are
+    bit-identical."""
+    from repro.service import DeviceMultiplexer, EpochMultiplexer, Job, \
+        JobHandle
+
+    D = 96
+    prog = _make_mapper_program(D)
+    steps = (37, 23)
+
+    def handles():
+        return [
+            JobHandle(i, Job(prog, InitialTask(task="tick", argi=(s,)),
+                             quota=64, name=f"m{s}"))
+            for i, s in enumerate(steps)
+        ]
+
+    host = EpochMultiplexer(handles())
+    host.run()
+    hs = host.stats()
+    dev_handles = handles()
+    dev = DeviceMultiplexer(dev_handles)
+    dev.run()
+    ds = dev.stats()
+
+    expected_elements = sum(s + 1 for s in steps) * D
+    assert hs.map_elements == expected_elements
+    assert ds.map_elements == expected_elements
+    assert ds.map_launches == hs.map_launches
+    assert ds.map_lanes_launched >= ds.map_elements
+    for h in dev_handles:
+        assert h.status.value == "done"
+        acc = np.asarray(h.result.heap["acc"])
+        np.testing.assert_array_equal(
+            acc, np.full(D, int(h.job.name[1:]) + 1)
+        )
+        # per-region task/fork totals decode exactly from the hi/lo pairs
+        s = int(h.job.name[1:])
+        assert h.result.stats.tasks_executed == s + 1
+        assert h.result.stats.total_forks == s

@@ -1,0 +1,88 @@
+"""Property-style bit-identity sweep across every dispatch mode and K.
+
+One random mixed fleet per example, run six ways: the host multiplexer
+under ``masked`` / ``compacted`` / ``gather`` dispatch, and the chunked
+resident driver at K ∈ {1, 4, ∞} (sharing one wave template per example —
+the chunk bound is a dynamic argument, so all three K choices re-enter one
+compiled loop).  Every run must be bit-identical per job: same TV value
+block, same heap, same solo-comparable epoch count.  Uses hypothesis when
+installed, else the deterministic stub (``tests/_hypothesis_stub.py``).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import get_case
+from repro.service import (
+    DeviceMultiplexer,
+    EpochMultiplexer,
+    Job,
+    JobHandle,
+    WaveTemplate,
+)
+
+_POOL = ("fib", "treewalk")
+_QUOTAS = (512, 1024)  # >= every pool member's peak TV residency
+
+
+def _handles(fleet):
+    return [
+        JobHandle(i, Job(c.program, c.initial, heap_init=dict(c.heap_init),
+                         quota=q, name=f"{c.name}#{i}"))
+        for i, (c, q) in enumerate(fleet)
+    ]
+
+
+def _snapshot(handles):
+    out = []
+    for h in handles:
+        assert h.status.value == "done", (h.job.name, h.error)
+        out.append((
+            np.asarray(h.result.value),
+            {k: np.asarray(v) for k, v in sorted(h.result.heap.items())},
+            h.result.stats.epochs,
+            h.result.stats.tasks_executed,
+        ))
+    return out
+
+
+def _assert_same(ref, got, label):
+    assert len(ref) == len(got)
+    for i, (rv, rh, re, rt) in enumerate(ref):
+        gv, gh, ge, gt = got[i]
+        np.testing.assert_array_equal(gv, rv, err_msg=f"{label}:job{i}:value")
+        assert set(gh) == set(rh)
+        for k in rh:
+            np.testing.assert_array_equal(
+                gh[k], rh[k], err_msg=f"{label}:job{i}:{k}"
+            )
+        assert ge == re, f"{label}:job{i}:epochs"
+        assert gt == rt, f"{label}:job{i}:tasks"
+
+
+@settings(max_examples=3, deadline=None)
+@given(members=st.lists(
+    st.tuples(st.sampled_from(_POOL), st.sampled_from(_QUOTAS)),
+    min_size=2, max_size=3,
+))
+def test_all_dispatch_modes_and_chunks_bit_identical(members):
+    fleet = [(get_case(name), q) for name, q in members]
+
+    handles = _handles(fleet)
+    EpochMultiplexer(handles, dispatch="masked").run()
+    ref = _snapshot(handles)
+
+    for dispatch in ("compacted", "gather"):
+        handles = _handles(fleet)
+        EpochMultiplexer(handles, dispatch=dispatch).run()
+        _assert_same(ref, _snapshot(handles), f"host:{dispatch}")
+
+    template = None
+    for chunk in (1, 4, None):
+        handles = _handles(fleet)
+        mux = DeviceMultiplexer(handles, chunk=chunk, template=template)
+        if template is None:
+            template = WaveTemplate(
+                key=None, program=mux.program, slots=mux.slots, loop=mux.loop
+            )
+        mux.run()
+        _assert_same(ref, _snapshot(handles), f"device:K={chunk}")

@@ -43,7 +43,7 @@ def _assert_job_matches_solo(handle, solo_heap, solo_value, name):
 
 
 # ------------------------------------------- the multi-tenant equivalence
-@pytest.mark.parametrize("dispatch", ["masked", "compacted"])
+@pytest.mark.parametrize("dispatch", ["masked", "compacted", "gather"])
 def test_mixed_fleet_bit_identical_and_cheaper(dispatch):
     """Acceptance: a mixed fleet of 3 registered apps through the service is
     bit-identical per job to solo runs, with fleet V_inf (dispatches +
