@@ -26,6 +26,16 @@ DISPATCH = "masked"
 # workflow's benchmarks step can guard the rows against bit-rot in minutes
 SMOKE = False
 
+# set by main() from --megakernel: emit device_service_*_mega rows (the
+# persistent Pallas epoch megakernel next to the while_loop K-ladder rows)
+MEGAKERNEL = False
+
+
+def jax_backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
 
 def _time(fn: Callable, repeats: int = 3) -> float:
     fn()  # warmup / compile
@@ -370,6 +380,17 @@ def bench_device_service():
     emitted so the invariant is diffable); the timed re-run reuses the
     wave-template cache, so ``template_hits`` also guards compiled-loop
     reuse across identical consecutive waves.
+
+    With ``--megakernel`` the ``device_service_*_mega_*`` rows run the
+    same waves through the persistent Pallas epoch megakernel
+    (``kernels/epoch_megakernel.py``) under masked and gather dispatch,
+    next to their while_loop twins: same ⌈E/K⌉ readback invariant, same
+    ``template_hits`` guard, plus ``lanes_launched``/
+    ``hole_lanes_skipped`` so the gather rows' lane-volume win over the
+    span ladder is diffable.  On CPU the kernel executes through the
+    Pallas interpreter under ``--smoke`` (the bit-rot guard) and falls
+    back to the jnp oracle otherwise (interpret mode is a simulator, not
+    a perf number); on TPU it is the native kernel either way.
     """
     import math
 
@@ -377,12 +398,15 @@ def bench_device_service():
     from repro.core import HostEngine
     from repro.service import JobService, WaveTemplateCache
 
-    def run_svc(fleet, engine, chunk=None, cache=None):
+    def run_svc(fleet, engine, chunk=None, cache=None, dispatch=None,
+                megakernel=False, megakernel_impl="auto"):
         svc = JobService(
             capacity=sum(q for _, q in fleet), engine=engine,
-            dispatch="masked" if engine == "device" else DISPATCH,
+            dispatch=(dispatch or "masked") if engine == "device"
+            else DISPATCH,
             chunk=chunk if engine == "device" else None,
             template_cache=cache,
+            megakernel=megakernel, megakernel_impl=megakernel_impl,
         )
         for case, quota in fleet:
             svc.submit_case(case, quota=quota)
@@ -446,6 +470,52 @@ def bench_device_service():
                 f"map_lanes_wasted={ks.map_lanes_wasted};"
                 f"hole_lanes_skipped={ks.hole_lanes_skipped}",
             )
+
+        if not MEGAKERNEL:
+            continue
+        # megakernel rows next to their while_loop twins: same fleet, same
+        # K, masked + gather, with the while_loop baseline wall-clock in
+        # the derived column so the comparison is one row wide
+        impl = "interpret" if (SMOKE and jax_backend() != "tpu") else "auto"
+        mega_ladder = (4,) if SMOKE else (4, None)
+        for dispatch in ("masked", "gather"):
+            for K in mega_ladder:
+                cache = WaveTemplateCache()
+                ms = run_svc(
+                    fleet, "device", chunk=K, cache=cache,
+                    dispatch=dispatch, megakernel=True,
+                    megakernel_impl=impl,
+                ).stats()
+                t_m = _time(
+                    lambda f=fleet, K=K, c=cache, d=dispatch: run_svc(
+                        f, "device", chunk=K, cache=c, dispatch=d,
+                        megakernel=True, megakernel_impl=impl,
+                    ),
+                    repeats=1,
+                )
+                cache_b = WaveTemplateCache()
+                t_b = _time(
+                    lambda f=fleet, K=K, c=cache_b, d=dispatch: run_svc(
+                        f, "device", chunk=K, cache=c, dispatch=d,
+                    ),
+                    repeats=1,
+                )
+                expected = 1 if K is None else math.ceil(ms.epochs / K)
+                row(
+                    f"device_service_{fname}_mega_{dispatch}"
+                    f"_k{'inf' if K is None else K}",
+                    t_m * 1e6,
+                    f"jobs={len(fleet)};chunk={'inf' if K is None else K};"
+                    f"impl={impl};epochs={ms.epochs};"
+                    f"readbacks={ms.scalar_transfers};"
+                    f"expected_readbacks={expected};"
+                    f"while_loop_us={t_b * 1e6:.1f};"
+                    f"lanes_launched={ms.lanes_launched};"
+                    f"hole_lanes_skipped={ms.hole_lanes_skipped};"
+                    f"template_hits={cache.hits};"
+                    f"map_lanes_wasted={ms.map_lanes_wasted};"
+                    f"util={ms.utilization:.3f}",
+                )
 
 
 # --------------------------------------------------- TVM serving engine
@@ -538,6 +608,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
         "schema": "trees-bench-v1",
         "dispatch": dispatch,
         "smoke": smoke,
+        "megakernel": MEGAKERNEL,
         "groups": sorted(groups),
         "rows": [
             {"name": n, "us_per_call": round(us, 1), "derived": d}
@@ -550,7 +621,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
 
 
 def main(argv=None) -> None:
-    global DISPATCH, SMOKE
+    global DISPATCH, SMOKE, MEGAKERNEL
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--dispatch", choices=("masked", "compacted", "gather"),
@@ -570,14 +641,22 @@ def main(argv=None) -> None:
         f"{SMOKE_GROUPS} only (unless --only overrides)",
     )
     ap.add_argument(
+        "--megakernel", action="store_true",
+        help="emit device_service_*_mega rows: the persistent Pallas "
+        "epoch megakernel (masked + gather) next to the while_loop "
+        "K-ladder rows (interpret mode on CPU under --smoke, native "
+        "kernel on TPU)",
+    )
+    ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_5.json for full or --smoke runs, off for --only subset "
+        "to BENCH_6.json for full or --smoke runs, off for --only subset "
         "runs (pass a path to force, '' to disable)",
     )
     args = ap.parse_args(argv)
     DISPATCH = args.dispatch
     SMOKE = args.smoke
+    MEGAKERNEL = args.megakernel
     only = args.only or (list(SMOKE_GROUPS) if args.smoke else None)
     ran = []
     print("name,us_per_call,derived")
@@ -590,7 +669,7 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_5.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_6.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
 

@@ -25,10 +25,14 @@ termination predicate — and each engine is one configuration of it:
     ``n_regions=1``).  Readback policy: nothing per epoch — every scalar a
     host loop would fetch accumulates in the :class:`ResidentCarry` and is
     read once at the end (dispatches = transfers = 1).  Termination: the
-    traced all-stacks-empty ``while_loop`` cond.  Masked dispatch only
-    (launch shapes must be fixed at trace time), but each epoch's step is
-    bucketed to the live span of the popped ranges via a small
-    ``lax.switch`` ladder of compiled widths (DESIGN.md §11).
+    traced all-stacks-empty ``while_loop`` cond.  ``masked`` dispatch
+    buckets each epoch's step to the live span of the popped ranges via a
+    small ``lax.switch`` ladder of compiled widths (DESIGN.md §11);
+    ``gather`` packs the active lanes into a dense in-loop frontier and
+    buckets to the pack *count* instead (§12; ``compacted`` stays
+    host-only — its per-type launch shapes come from runtime populations).
+    Optionally the whole chunk runs as one persistent Pallas megakernel
+    (``megakernel=True``, ``kernels/epoch_megakernel.py``).
 
   * the service-layer drivers (``repro.service.multiplexer``) — the host
     ``EpochMultiplexer`` and the resident ``DeviceMultiplexer`` reuse the
@@ -83,10 +87,11 @@ class EngineError(RuntimeError):
 
 
 _COMPACTED_RESIDENT_MSG = (
-    "resident (device) execution supports only the 'masked' dispatch: the "
-    "on-device while_loop needs launch shapes fixed at trace time, but "
-    "'compacted' and 'gather' size launches from runtime populations (use "
-    "a host-loop driver for those dispatches)"
+    "resident (device) execution supports the 'masked' and 'gather' "
+    "dispatches: the on-device loop needs launch shapes fixed at trace "
+    "time — gather packs into a fixed-shape in-loop frontier, but "
+    "'compacted' sizes per-type launches from runtime populations (use a "
+    "host-loop driver for compacted dispatch)"
 )
 
 
@@ -268,10 +273,16 @@ def _map_width_ladder(max_domain: int, minimum: int = 8) -> Tuple[int, ...]:
     max of the scheduled lanes' live domains (a segmented max over the
     ``where`` mask), so short-domain epochs stop paying ``max_domain``-wide
     launches.  The cap keeps the worst case exactly the old fixed-width
-    behaviour, never worse.
+    behaviour, never worse.  ``minimum`` is clamped when it reaches
+    ``max_domain``: without the clamp any ``max_domain <= minimum``
+    degenerates to a single full-width rung (the minimum-width rung is
+    dead) and every launch pads to the full domain even when the live
+    domains are tiny.
     """
+    if max_domain <= minimum:
+        minimum = max(1, max_domain // 2)
     widths: List[int] = []
-    w = max(1, minimum)
+    w = minimum
     while w < max_domain:
         widths.append(w)
         w *= 2
@@ -291,7 +302,15 @@ def _span_width_ladder(capacity: int, levels: int = 4,
     traces one branch of the full phase-2/3 body, so the ladder is kept
     short (``levels``) rather than lane-exact; the top rung is always the
     full TV, so the worst case is exactly the old full-width behaviour.
+
+    ``minimum`` is clamped when it reaches ``capacity``: without the clamp
+    a TV at or below the minimum width gets a single full-capacity rung
+    (the minimum-width rungs are dead), so a single-region tiny fleet pads
+    every epoch to the full minimum-sized launch no matter how narrow its
+    live span is.
     """
+    if capacity <= minimum:
+        minimum = max(1, capacity // 2)
     widths = [int(capacity)]
     w = capacity // 2
     while len(widths) < levels and w >= max(1, minimum):
@@ -337,6 +356,8 @@ class EpochLoop:
         seg_offsets_fn: Optional[Callable] = None,
         donate: bool = False,
         skip_idle_types: bool = False,
+        megakernel: bool = False,
+        megakernel_impl: str = "auto",
     ):
         self.program = program
         self.policy: DispatchPolicy = resolve_policy(dispatch)
@@ -347,6 +368,11 @@ class EpochLoop:
         self._seg_offsets_fn = seg_offsets_fn
         self._donate = donate
         self._skip_idle_types = skip_idle_types
+        # resident chunks run through the persistent Pallas megakernel
+        # (kernels/epoch_megakernel.py) instead of a lax.while_loop; same
+        # traced body, same bits, one fused kernel per chunk (DESIGN.md §12)
+        self.megakernel = bool(megakernel)
+        self.megakernel_impl = megakernel_impl
         # trace-counter hook: every traced builder body bumps this at trace
         # time (tracing executes the Python body; cached executions do not),
         # so "two identical consecutive waves retraced nothing" is a
@@ -511,6 +537,41 @@ class EpochLoop:
             )
         return self._step_cache[key]
 
+    def _resident_gather_step_fn(self, W: int):
+        """Phase 2+3 over the resident *in-loop* packed frontier.
+
+        The resident sibling of :meth:`gather_step`: ``perm`` is the
+        stable full-TV pack permutation computed inside the loop body
+        (fixed shape, so it traces), and ``W`` is the ladder rung covering
+        the pack count — ``perm[:W]`` holds every active lane of the epoch
+        in increasing lane order.  Epoch numbers are read from the TV
+        itself (``active`` implies ``epoch[slot] == cen``), the commit's
+        segmented fork scan sees masked allocation order restricted to the
+        active lanes, and the union span's hole lanes are never stepped —
+        the §11 gather frontier without leaving the resident loop.
+        """
+        program = self.program
+        skip = self._skip_idle_types
+
+        def step(state, heap, arena, perm):
+            self._mark_trace()
+            lanepos = perm[:W]
+            valid = lanepos >= 0
+            idx = jnp.where(valid, lanepos, state.capacity)
+            cidx = jnp.clip(idx, 0, state.capacity - 1)
+            cen_g = jnp.where(valid, state.epoch[cidx], 0)
+            per_type, _ = tvm.trace_tasks(
+                program, state, heap, idx, valid, skip_idle_types=skip
+            )
+            return tvm.commit_epoch(
+                program, state, heap, idx, valid, per_type, cen_g,
+                fork_offsets_fn=self._fork_offsets_fn,
+                seg_offsets_fn=self._seg_offsets_fn,
+                arena=arena,
+            )
+
+        return step
+
     # ------------------------------------------------- one host-driven epoch
     def run_epoch(self, state, heap, arena, start, span, cen, col, readback):
         """One fused host-driven epoch: optional compaction or gather-pack
@@ -606,15 +667,30 @@ class EpochLoop:
         happen when the live span actually demands them; the skipped lanes
         accrue in the carry's ``hole_lanes`` pair (DESIGN.md §11).
 
+        Under ``dispatch="gather"`` the same ladder sizes a *dense*
+        frontier instead: the epoch's active lanes are packed in-loop by
+        the stable ``lane_pack`` permutation (a fixed-shape traced pass —
+        the resident analogue of :meth:`gather_pass`), and the step
+        launches at the smallest rung covering the pack *count* rather
+        than the union span, so cross-region holes inside the span are
+        never stepped either (DESIGN.md §12).
+
         Region failure (TV-region or stack overflow) zeroes that region's
         stack pointer: the job stops, its neighbours keep running — the same
         isolation the host multiplexer provides.
         """
-        if self.policy.name != "masked":
+        if self.policy.name not in ("masked", "gather"):
             raise ValueError(_COMPACTED_RESIDENT_MSG)
+        gather = self.policy.name == "gather"
         program = self.program
+        pack_fn = self._pack_fn
         span_widths = _span_width_ladder(capacity)
-        step_fns = {W: self._masked_step_fn(W) for W in span_widths}
+        if gather:
+            step_fns = {
+                W: self._resident_gather_step_fn(W) for W in span_widths
+            }
+        else:
+            step_fns = {W: self._masked_step_fn(W) for W in span_widths}
 
         def make_branch(W: int, fleet: bool):
             """One span-bucket branch: the masked step at width ``W`` over
@@ -664,6 +740,38 @@ class EpochLoop:
 
             return branch
 
+        def make_gather_branch(W: int):
+            """One pack-count bucket branch: the dense gather step at rung
+            ``W``, with the map-launch tensors scattered back to full-TV
+            width through the pack permutation so every ``lax.switch``
+            branch returns one pytree shape (the gather twin of
+            ``make_branch``'s window padding)."""
+            step_fn = step_fns[W]
+
+            def branch(state, heap, arena_, perm):
+                s2, h2, summ, mls = step_fn(state, heap, arena_, perm)
+                lanepos = perm[:W]
+                # invalid pack slots scatter to the drop index (capacity)
+                scat = jnp.where(lanepos >= 0, lanepos, capacity)
+                full = []
+                for ml in mls:
+                    zw = jnp.zeros((capacity,), bool)
+                    zi = jnp.zeros(
+                        (capacity,) + ml.argi.shape[1:], ml.argi.dtype
+                    )
+                    zf = jnp.zeros(
+                        (capacity,) + ml.argf.shape[1:], ml.argf.dtype
+                    )
+                    full.append(tvm.MapLaunch(
+                        map_id=ml.map_id,
+                        where=zw.at[scat].set(ml.where, mode="drop"),
+                        argi=zi.at[scat].set(ml.argi, mode="drop"),
+                        argf=zf.at[scat].set(ml.argf, mode="drop"),
+                    ))
+                return s2, h2, summ, full
+
+            return branch
+
         def body(carry: ResidentCarry):
             self._mark_trace()
             cen, start, count, live, sp = batched_device_pop(
@@ -671,9 +779,16 @@ class EpochLoop:
             )
             arena = carry.arena
             if arena is None:
-                step_cen = jnp.where(live[0], cen[0], 0)
                 lo, ct = start[0], count[0]
                 span_w = jnp.where(live[0], count[0], 0)
+                if gather:
+                    # gather packs over the full TV, so the solo popped
+                    # range becomes a per-lane CEN vector like the fleet's
+                    lanes = jnp.arange(capacity, dtype=jnp.int32)
+                    in_pop = live[0] & (lanes >= lo) & (lanes < lo + ct)
+                    step_cen = jnp.where(in_pop, cen[0], 0)
+                else:
+                    step_cen = jnp.where(live[0], cen[0], 0)
             else:
                 # fuse every live region's pop into a per-lane CEN vector
                 # over the full TV (work-together across regions); the task
@@ -698,14 +813,27 @@ class EpochLoop:
                 span_w = jnp.clip(span_hi - lo, 0, capacity)
 
             swarr = jnp.asarray(span_widths, jnp.int32)
+            if gather:
+                # the shared frontier predicate over the full TV: scheduled
+                # lanes are exactly those whose TV epoch TMS-matches the
+                # per-lane CEN of this epoch's popped ranges
+                act = (step_cen > 0) & (carry.state.epoch == step_cen)
+                perm, n_sched = pack_fn(act)
+                width_key = n_sched
+                branches = [make_gather_branch(W) for W in span_widths]
+                operands = (carry.state, carry.heap, arena, perm)
+            else:
+                width_key = span_w
+                branches = [
+                    make_branch(W, arena is not None) for W in span_widths
+                ]
+                operands = (
+                    carry.state, carry.heap, arena, step_cen, lo, ct
+                )
             sidx = jnp.clip(
-                jnp.searchsorted(swarr, span_w, side="left"),
+                jnp.searchsorted(swarr, width_key, side="left"),
                 0, len(span_widths) - 1,
             )
-            branches = [
-                make_branch(W, arena is not None) for W in span_widths
-            ]
-            operands = (carry.state, carry.heap, arena, step_cen, lo, ct)
             if len(branches) == 1:
                 state, heap, summary, map_launches = branches[0](*operands)
             else:
@@ -831,6 +959,12 @@ class EpochLoop:
         K choices.  A call whose carry is already drained (or already at
         ``limit``) is a clean no-op: the cond fails on entry and the carry
         comes back unchanged.
+
+        With ``megakernel=True`` the chunk runs through the persistent
+        Pallas megakernel (``kernels/epoch_megakernel.py``) instead of a
+        ``lax.while_loop``: same traced body and cond, one fused kernel
+        holding the carry resident for the whole chunk — bit-identical by
+        construction (the while_loop path *is* the kernel's jnp oracle).
         """
         capacity = carry.state.capacity
         depth = carry.jstack.shape[1]
@@ -838,12 +972,25 @@ class EpochLoop:
         if key not in self._resident_cache:
             body = self.resident_body(capacity, depth)
 
-            @jax.jit
-            def loop(c, lim):
-                def cond(cc: ResidentCarry):
-                    return (cc.sp > 0).any() & (cc.n_epochs < lim)
+            def cond(cc: ResidentCarry, lim):
+                return (cc.sp > 0).any() & (cc.n_epochs < lim)
 
-                return jax.lax.while_loop(cond, body, c)
+            if self.megakernel:
+                from ..kernels import epoch_megakernel as mk
+
+                impl = self.megakernel_impl
+
+                @jax.jit
+                def loop(c, lim):
+                    return mk.epoch_chunk(cond, body, c, lim, impl=impl)
+
+            else:
+
+                @jax.jit
+                def loop(c, lim):
+                    return jax.lax.while_loop(
+                        lambda cc: cond(cc, lim), body, c
+                    )
 
             self._resident_cache[key] = loop
         return self._resident_cache[key](carry, jnp.asarray(limit, jnp.int32))
@@ -990,12 +1137,14 @@ class DeviceEngine:
     Beyond-paper optimization (the paper's "tighter coupling" prediction):
     zero per-epoch dispatches/transfers on the critical path — the
     :class:`EpochLoop` resident configuration with ``n_regions=1``.
-    Constraints: only the ``masked`` dispatch policy is traceable (launch
-    shapes fixed at trace time; the per-epoch step is still bucketed to
-    the popped range's span via the §11 width ladder, with the skipped
-    lanes in ``RunStats.hole_lanes_skipped``) and map payloads are sized
-    by the §10 ``max_domain``-capped width ladder (residual padding
-    surfaced in ``RunStats.map_lanes_wasted``).
+    Dispatch: ``masked`` (span-ladder launches, §11) or ``gather`` (the
+    in-loop dense frontier pack, §12 — the skipped lanes of either mode
+    land in ``RunStats.hole_lanes_skipped``); ``compacted`` stays
+    host-only (per-type launch shapes come from runtime populations).
+    Map payloads are sized by the §10 ``max_domain``-capped width ladder
+    (residual padding surfaced in ``RunStats.map_lanes_wasted``).
+    ``megakernel=True`` routes each resident chunk through the persistent
+    Pallas megakernel instead of the ``lax.while_loop`` (§12).
     """
 
     def __init__(
@@ -1005,19 +1154,18 @@ class DeviceEngine:
         stack_depth: int = 1 << 10,
         fork_offsets_fn: Optional[Callable] = None,
         dispatch: Any = MASKED,
+        megakernel: bool = False,
+        megakernel_impl: str = "auto",
     ):
         self.program = program
         self.capacity = capacity
         self.stack_depth = stack_depth
-        if resolve_policy(dispatch).name != "masked":
-            raise ValueError(
-                "DeviceEngine supports only the 'masked' dispatch: the "
-                "on-device while_loop needs launch shapes fixed at trace "
-                "time, but 'compacted' sizes per-type launches from runtime "
-                "populations (use HostEngine for compacted dispatch)"
-            )
+        if resolve_policy(dispatch).name not in ("masked", "gather"):
+            raise ValueError(_COMPACTED_RESIDENT_MSG)
         self.loop = EpochLoop(program, dispatch,
-                              fork_offsets_fn=fork_offsets_fn)
+                              fork_offsets_fn=fork_offsets_fn,
+                              megakernel=megakernel,
+                              megakernel_impl=megakernel_impl)
         self.policy = self.loop.policy
 
     def run(

@@ -1,5 +1,8 @@
 # Pallas TPU kernels for the compute hot spots (fork allocation scan,
-# flash/decode attention, Mamba-2 SSD scan), each with a pure-jnp oracle in
-# ref.py and a dispatching wrapper in ops.py.
-from . import ops, ref  # noqa: F401
+# flash/decode attention, Mamba-2 SSD scan, persistent epoch megakernel),
+# each with a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py
+# (the megakernel dispatches in its own module — it wraps a traced loop
+# body, not a fixed array signature).
+from . import epoch_megakernel, ops, ref  # noqa: F401
+from .epoch_megakernel import epoch_chunk  # noqa: F401
 from .ops import attention, fork_offsets, gqa_decode, ssd, type_rank  # noqa: F401

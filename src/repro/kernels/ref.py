@@ -64,6 +64,19 @@ def lane_pack_ref(active: jnp.ndarray):
     return rank_to_perm(rank, act), act.sum().astype(jnp.int32)
 
 
+def epoch_chunk_ref(cond_fn, body_fn, carry, limit):
+    """Oracle for the persistent epoch megakernel (epoch_megakernel.py).
+
+    One K-epoch chunk of the resident loop — pop, pack, step, commit —
+    expressed as a host-level ``lax.while_loop`` over the carry pytree.
+    The megakernel runs the *same* ``body_fn`` inside one ``pallas_call``
+    with the carry held in kernel memory; this oracle defines the bits it
+    must produce.  ``cond_fn(carry, limit)`` is the chunk-bound predicate.
+    """
+    lim = jnp.asarray(limit, jnp.int32)
+    return jax.lax.while_loop(lambda c: cond_fn(c, lim), body_fn, carry)
+
+
 def type_rank_ref(types: jnp.ndarray, active: jnp.ndarray, n_types: int):
     """Oracle for fork_compact.type_rank: stable within-type ranks."""
     types = types.astype(jnp.int32)

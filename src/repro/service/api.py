@@ -79,9 +79,16 @@ class JobService:
 
     Device waves compile through a :class:`~repro.service.jobs.
     WaveTemplateCache`: structurally identical consecutive waves (same
-    member ``structural_hash``es, quotas, capacity, stack depth, and K)
-    reuse one compiled chunk loop instead of retracing; ``trace_count``
-    exposes the compile-count guard.
+    member ``structural_hash``es, quotas, capacity, stack depth, K,
+    dispatch, and chunk driver) reuse one compiled chunk loop instead of
+    retracing; ``trace_count`` exposes the compile-count guard.
+
+    ``megakernel`` (device engine only) runs each resident chunk as one
+    persistent Pallas kernel (``kernels/epoch_megakernel.py``) instead of
+    the XLA ``while_loop`` — bit-identical results and stats, same ⌈E/K⌉
+    readback cadence; ``dispatch="gather"`` on the device engine packs
+    each epoch's scheduled lanes into a fixed-shape segmented frontier so
+    union-span hole lanes are never stepped (DESIGN.md §12).
     """
 
     def __init__(
@@ -99,6 +106,8 @@ class JobService:
         stack_depth: int = 1 << 10,
         chunk: Optional[int] = None,
         template_cache: Optional[WaveTemplateCache] = None,
+        megakernel: bool = False,
+        megakernel_impl: str = "auto",
     ):
         if engine not in ("host", "device"):
             raise ValueError(
@@ -107,10 +116,12 @@ class JobService:
         if engine == "device":
             from ..core.scheduler import resolve_policy
 
-            if resolve_policy(dispatch).name != "masked":
+            if resolve_policy(dispatch).name not in ("masked", "gather"):
                 raise ValueError(
-                    "engine='device' supports only dispatch='masked' "
-                    "(resident launch shapes are fixed at trace time)"
+                    "engine='device' supports dispatch='masked' or "
+                    "'gather' (resident launch shapes are fixed at trace "
+                    "time; compacted sizes launches from runtime "
+                    "populations and is host-only)"
                 )
             if gang or pop_policy != "fuse_all":
                 raise ValueError(
@@ -124,9 +135,16 @@ class JobService:
                 "chunk sets the resident readback cadence; it requires "
                 "engine='device' (the host engine reads back every epoch)"
             )
+        elif megakernel:
+            raise ValueError(
+                "megakernel fuses the resident chunk loop; it requires "
+                "engine='device' (the host engine has no resident loop)"
+            )
         self.engine = engine
         self.stack_depth = stack_depth
         self.chunk = chunk
+        self.megakernel = bool(megakernel)
+        self.megakernel_impl = megakernel_impl
         self.template_cache = (
             template_cache if template_cache is not None
             else WaveTemplateCache()
@@ -246,10 +264,14 @@ class JobService:
                 # attach to its own handle, so no un-permuting is needed
                 order = canonical_wave_order([h.job for h in wave])
                 wave = [wave[i] for i in order]
+                from ..core.scheduler import resolve_policy
+
                 key = wave_template_key(
                     [h.job for h in wave],
                     sum(h.job.quota for h in wave),
                     self.stack_depth, self.chunk,
+                    dispatch=resolve_policy(self.dispatch).name,
+                    megakernel=self.megakernel,
                 )
                 tpl = self.template_cache.lookup(key)
                 self._mux = DeviceMultiplexer(
@@ -259,6 +281,8 @@ class JobService:
                     chunk=self.chunk,
                     collect_stats=self.collect_stats,
                     template=tpl,
+                    megakernel=self.megakernel,
+                    megakernel_impl=self.megakernel_impl,
                 )
                 if tpl is None:
                     self.template_cache.store(

@@ -163,10 +163,13 @@ def canonical_wave_order(jobs: Sequence[Job]) -> Tuple[int, ...]:
 
 
 def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
-                      chunk: Optional[int]) -> Tuple:
+                      chunk: Optional[int], dispatch: str = "masked",
+                      megakernel: bool = False) -> Tuple:
     """Cache key for one wave shape: everything that determines the traced
     chunk loop — member structure, quota layout, TV capacity, stack depth,
-    and the chunk size K.  Members are keyed in :func:`canonical_wave_order`
+    the chunk size K, the dispatch policy (masked vs gather bake different
+    step ladders into the loop), and the chunk driver (while_loop vs the
+    Pallas megakernel).  Members are keyed in :func:`canonical_wave_order`
     (not submission order), so permuted waves of the same members share one
     template instead of retracing."""
     order = canonical_wave_order(jobs)
@@ -176,6 +179,8 @@ def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
         int(capacity),
         int(stack_depth),
         chunk,
+        str(dispatch),
+        bool(megakernel),
     )
 
 

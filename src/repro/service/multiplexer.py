@@ -41,7 +41,10 @@ levels of residency:
   jobs (``Program.structural_hash`` reuse, no retrace).  ``chunk=None``
   is the fully-resident endpoint (K=∞, the PR-3 behaviour: O(1) V_inf,
   host blind until the wave drains); ``chunk=1`` is host-mux cadence.
-  Only the masked dispatch is traceable on this driver.
+  The masked and gather dispatches are traceable on this driver (gather
+  packs the scheduled lanes into a fixed-shape in-loop frontier —
+  DESIGN.md §12); ``megakernel=True`` swaps the chunk's ``while_loop``
+  for the persistent Pallas epoch megakernel.
 
 Per-job results are bit-identical to the solo runs under both drivers, at
 every K.
@@ -714,12 +717,17 @@ class DeviceMultiplexer(_FleetBase):
     ``chunk=None`` is the fully-resident endpoint (K=∞): one chunk for the
     whole wave, O(1) V_inf, the host blind until it drains — and ``admit``
     refuses, because there are no boundaries to admit at.  ``chunk=1`` is
-    host-mux readback cadence.  Masked dispatch only (resident launch
-    shapes are fixed at trace time); every live region pops each global
-    epoch (``fuse_all``).  A job overflowing its region (TV quota or stack
-    depth) fails alone, mid-chunk: its stack pointer zeroes and its
-    neighbours keep running.  Per-job results are bit-identical to solo
-    ``HostEngine.run`` at every K.
+    host-mux readback cadence.  Masked and gather dispatches only
+    (resident launch shapes are fixed at trace time — gather packs into a
+    fixed-shape segmented frontier, DESIGN.md §12; compacted sizes
+    launches from runtime populations and stays host-only); every live
+    region pops each global epoch (``fuse_all``).  ``megakernel=True``
+    runs each chunk as one persistent Pallas kernel
+    (``kernels/epoch_megakernel.py``) instead of the XLA ``while_loop`` —
+    bit-identical, same ⌈E/K⌉ readback cadence.  A job overflowing its
+    region (TV quota or stack depth) fails alone, mid-chunk: its stack
+    pointer zeroes and its neighbours keep running.  Per-job results are
+    bit-identical to solo ``HostEngine.run`` at every K.
     """
 
     def __init__(
@@ -733,13 +741,16 @@ class DeviceMultiplexer(_FleetBase):
         stats_factory=None,
         seg_offsets_fn=None,
         template=None,
+        megakernel: bool = False,
+        megakernel_impl: str = "auto",
     ):
         super().__init__(
             handles, capacity=capacity,
             collect_stats=collect_stats, stats_factory=stats_factory,
             template=template,
         )
-        if resolve_policy(dispatch).name != "masked":
+        policy = resolve_policy(dispatch)
+        if policy.name not in ("masked", "gather"):
             raise ValueError(_COMPACTED_RESIDENT_MSG)
         if chunk is not None and chunk < 1:
             raise ValueError(
@@ -756,11 +767,28 @@ class DeviceMultiplexer(_FleetBase):
                     "own fork-scan kernel (build the template with the "
                     "desired seg_offsets_fn instead)"
                 )
+            if template.loop.policy.name != policy.name:
+                raise ValueError(
+                    "wave template was traced with dispatch "
+                    f"{template.loop.policy.name!r} but this wave asks for "
+                    f"{policy.name!r}: a cached chunk template bakes its "
+                    "dispatch into the traced loop (key on dispatch when "
+                    "caching templates)"
+                )
+            if template.loop.megakernel != bool(megakernel):
+                raise ValueError(
+                    "wave template was traced with megakernel="
+                    f"{template.loop.megakernel} but this wave asks for "
+                    f"megakernel={bool(megakernel)}: the chunk driver is "
+                    "baked into the template (key on megakernel when "
+                    "caching templates)"
+                )
             self._loop: EpochLoop = template.loop
         else:
             self._loop = EpochLoop(
                 self.program, dispatch,
                 seg_offsets_fn=seg_offsets_fn, skip_idle_types=True,
+                megakernel=megakernel, megakernel_impl=megakernel_impl,
             )
         self.policy = self._loop.policy
         self._carry = None

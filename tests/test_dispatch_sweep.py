@@ -1,12 +1,18 @@
 """Property-style bit-identity sweep across every dispatch mode and K.
 
-One random mixed fleet per example, run six ways: the host multiplexer
-under ``masked`` / ``compacted`` / ``gather`` dispatch, and the chunked
-resident driver at K ∈ {1, 4, ∞} (sharing one wave template per example —
-the chunk bound is a dynamic argument, so all three K choices re-enter one
-compiled loop).  Every run must be bit-identical per job: same TV value
-block, same heap, same solo-comparable epoch count.  Uses hypothesis when
-installed, else the deterministic stub (``tests/_hypothesis_stub.py``).
+One random mixed fleet per example, run every way the runtime offers: the
+host multiplexer under ``masked`` / ``compacted`` / ``gather`` dispatch,
+then the chunked resident driver over the full configuration lattice
+``megakernel ∈ {False, True} × dispatch ∈ {masked, gather} × K ∈ {1, 4,
+∞}`` (one wave template per (megakernel, dispatch) cell — the chunk bound
+is a dynamic argument, so all three K choices re-enter one compiled
+loop; the megakernel cells run the chunk inside one persistent Pallas
+kernel, interpret mode on CPU).  Every run must be bit-identical per
+job: same TV value block, same heap, same solo-comparable epoch count.
+Uses hypothesis when installed, else the deterministic stub
+(``tests/_hypothesis_stub.py``).  A separate zero-retrace guard drives
+identical consecutive megakernel waves through ``JobService`` and pins
+``trace_count`` flat on the second wave.
 """
 import numpy as np
 from hypothesis import given, settings, strategies as st
@@ -17,6 +23,7 @@ from repro.service import (
     EpochMultiplexer,
     Job,
     JobHandle,
+    JobService,
     WaveTemplate,
 )
 
@@ -76,13 +83,66 @@ def test_all_dispatch_modes_and_chunks_bit_identical(members):
         EpochMultiplexer(handles, dispatch=dispatch).run()
         _assert_same(ref, _snapshot(handles), f"host:{dispatch}")
 
-    template = None
-    for chunk in (1, 4, None):
-        handles = _handles(fleet)
-        mux = DeviceMultiplexer(handles, chunk=chunk, template=template)
-        if template is None:
-            template = WaveTemplate(
-                key=None, program=mux.program, slots=mux.slots, loop=mux.loop
-            )
-        mux.run()
-        _assert_same(ref, _snapshot(handles), f"device:K={chunk}")
+    for megakernel in (False, True):
+        for dispatch in ("masked", "gather"):
+            template = None
+            for chunk in (1, 4, None):
+                handles = _handles(fleet)
+                mux = DeviceMultiplexer(
+                    handles, dispatch=dispatch, chunk=chunk,
+                    template=template, megakernel=megakernel,
+                    megakernel_impl="interpret" if megakernel else "auto",
+                )
+                if template is None:
+                    template = WaveTemplate(
+                        key=None, program=mux.program, slots=mux.slots,
+                        loop=mux.loop,
+                    )
+                mux.run()
+                _assert_same(
+                    ref, _snapshot(handles),
+                    f"device:mega={megakernel}:{dispatch}:K={chunk}",
+                )
+
+
+def test_megakernel_waves_zero_retrace():
+    """Identical consecutive megakernel waves reuse one compiled template:
+    the second wave leaves ``JobService.trace_count`` unchanged (and the
+    template cache reports the hit)."""
+    from repro.apps import fib
+
+    svc = JobService(capacity=512, max_jobs=2, engine="device", chunk=2,
+                     megakernel=True, megakernel_impl="interpret")
+    first = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256)
+             for n in (8, 9)]
+    svc.drain()
+    traced = svc.trace_count
+    assert traced > 0
+    assert svc.template_cache.misses == 1
+    second = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256)
+              for n in (8, 9)]
+    svc.drain()
+    assert svc.trace_count == traced, (
+        "identical consecutive megakernel waves must not retrace"
+    )
+    assert svc.template_cache.hits >= 1
+    for h, n in zip(first + second, (8, 9, 8, 9)):
+        assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
+
+
+def test_megakernel_template_mismatch_rejected():
+    """A cached chunk template bakes its dispatch + chunk driver into the
+    traced loop: reusing it under a different configuration is refused."""
+    import pytest
+
+    fleet = [(get_case("fib"), 512), (get_case("treewalk"), 512)]
+    mux = DeviceMultiplexer(_handles(fleet))
+    template = WaveTemplate(
+        key=None, program=mux.program, slots=mux.slots, loop=mux.loop
+    )
+    with pytest.raises(ValueError, match="dispatch"):
+        DeviceMultiplexer(_handles(fleet), dispatch="gather",
+                          template=template)
+    with pytest.raises(ValueError, match="megakernel"):
+        DeviceMultiplexer(_handles(fleet), megakernel=True,
+                          template=template)

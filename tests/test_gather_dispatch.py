@@ -14,8 +14,11 @@ never launched.  Load-bearing properties:
   * lane utilization is >= masked whenever the fused span has holes
     (fleets with >= 2 active regions), and the skipped holes are accounted
     in ``RunStats.hole_lanes_skipped``;
-  * the resident (device) drivers reject gather exactly like compacted
-    (launch shapes must be fixed at trace time).
+  * the resident (device) drivers run gather as a fixed-shape segmented
+    in-loop pack (DESIGN.md §12) — bit-identical to resident masked, with
+    utilization >= masked and strictly fewer launched lanes on >= 2-region
+    fleets; only compacted stays refused (it sizes launches from runtime
+    populations).
 """
 import jax.numpy as jnp
 import numpy as np
@@ -200,13 +203,128 @@ def test_service_gather_dispatch_end_to_end():
     assert svc.stats().hole_lanes_skipped > 0
 
 
-# ------------------------------------------------------- resident refusal
-def test_resident_drivers_reject_gather():
+# ------------------------------------------------------- resident gather
+def test_resident_drivers_still_reject_compacted():
+    """Gather is now traceable on the resident drivers; compacted is not
+    (it sizes per-type launches from runtime populations)."""
     case = get_case("fib")
     with pytest.raises(ValueError, match="masked"):
-        DeviceEngine(case.program, dispatch="gather")
+        DeviceEngine(case.program, dispatch="compacted")
     with pytest.raises(ValueError, match="masked"):
         DeviceMultiplexer(_handles(get_fleet("fib_fleet")),
-                          dispatch="gather")
+                          dispatch="compacted")
     with pytest.raises(ValueError, match="masked"):
-        JobService(engine="device", dispatch="gather")
+        JobService(engine="device", dispatch="compacted")
+
+
+@pytest.mark.parametrize("name", ["fib", "mergesort"])
+def test_solo_resident_gather_bit_identical(name):
+    """DeviceEngine(dispatch='gather') matches the masked resident run
+    exactly — values, heap, and ChunkSummary-derived stats — and the
+    rung + hole accounting still tiles the full TV every epoch."""
+    case = get_case(name)
+    em = DeviceEngine(case.program, capacity=case.capacity)
+    hm, vm, sm = em.run(case.initial, heap_init=dict(case.heap_init) or None)
+    eg = DeviceEngine(case.program, capacity=case.capacity,
+                      dispatch="gather")
+    hg, vg, sg = eg.run(case.initial, heap_init=dict(case.heap_init) or None)
+    np.testing.assert_array_equal(np.asarray(vg), np.asarray(vm))
+    for k in hm:
+        np.testing.assert_array_equal(np.asarray(hg[k]), np.asarray(hm[k]),
+                                      err_msg=k)
+    assert sg.epochs == sm.epochs
+    assert sg.tasks_executed == sm.tasks_executed
+    assert sg.total_forks == sm.total_forks
+    # the dense rung never exceeds the span rung, and both tile the TV
+    assert sg.lanes_launched <= sm.lanes_launched
+    assert sg.utilization >= sm.utilization
+    assert (sg.lanes_launched + sg.hole_lanes_skipped
+            == sm.lanes_launched + sm.hole_lanes_skipped
+            == case.capacity * sm.epochs)
+    # map payloads launch over the same scattered full-TV domain
+    assert sg.map_elements == sm.map_elements
+    assert sg.map_lanes_launched == sm.map_lanes_launched
+    assert sg.map_utilization >= sm.map_utilization
+
+
+@pytest.mark.parametrize("fleet_name", ["mixed3", "mixed4", "fib_fleet"])
+def test_resident_fleet_gather_bit_identical(fleet_name):
+    """DeviceMultiplexer(dispatch='gather') on every registry fleet is
+    bit-identical per job to solo runs, with strictly fewer launched lanes
+    than resident masked (the fused span's cross-region holes are packed
+    away) and the skipped holes accounted."""
+    fleet = get_fleet(fleet_name)
+    solo = {}
+    for case, quota in fleet:
+        eng = HostEngine(case.program, capacity=quota)
+        solo[case.name] = eng.run(
+            case.initial, heap_init=dict(case.heap_init) or None
+        )
+
+    stats = {}
+    for dispatch in ("masked", "gather"):
+        handles = _handles(fleet)
+        mux = DeviceMultiplexer(handles, dispatch=dispatch)
+        mux.run()
+        for h in handles:
+            sh, sv, ss = solo[h.job.name]
+            assert h.status is JobStatus.DONE
+            np.testing.assert_array_equal(
+                np.asarray(h.result.value), np.asarray(sv),
+                err_msg=f"{h.job.name}:value:{dispatch}",
+            )
+            for k in sh:
+                np.testing.assert_array_equal(
+                    np.asarray(h.result.heap[k]), np.asarray(sh[k]),
+                    err_msg=f"{h.job.name}:{k}:{dispatch}",
+                )
+            assert h.result.stats.epochs == ss.epochs
+            assert h.result.stats.tasks_executed == ss.tasks_executed
+        stats[dispatch] = mux.stats()
+
+    sm, sg = stats["masked"], stats["gather"]
+    capacity = sum(q for _, q in fleet)
+    assert sg.epochs == sm.epochs
+    assert sg.tasks_executed == sm.tasks_executed
+    assert sg.utilization >= sm.utilization
+    assert (sg.lanes_launched + sg.hole_lanes_skipped
+            == sm.lanes_launched + sm.hole_lanes_skipped
+            == capacity * sm.epochs)
+    assert sg.map_utilization >= sm.map_utilization
+    if len(fleet) >= 2:
+        # >= 2 regions fuse: the union span holds cross-region holes the
+        # dense pack must skip, so gather strictly wins on lane volume
+        assert sg.lanes_launched < sm.lanes_launched
+        assert sg.hole_lanes_skipped > sm.hole_lanes_skipped
+        assert sg.utilization > sm.utilization
+
+
+@pytest.mark.parametrize("chunk", [1, 4, None])
+def test_service_device_gather_chunked(chunk):
+    """JobService(engine='device', dispatch='gather') across the K-ladder:
+    values match the masked device service bit-for-bit and the gather rows
+    never launch more lanes."""
+    from repro.apps import fib
+
+    ns = (8, 10, 9)
+
+    def run(dispatch):
+        svc = JobService(capacity=1024, max_jobs=4, engine="device",
+                         dispatch=dispatch, chunk=chunk)
+        handles = [
+            svc.submit(fib.PROGRAM, fib.initial(n), quota=256) for n in ns
+        ]
+        svc.drain()
+        return handles, svc.stats()
+
+    hm, sm = run("masked")
+    hg, sg = run("gather")
+    for h, g, n in zip(hm, hg, ns):
+        assert h.status is JobStatus.DONE and g.status is JobStatus.DONE
+        assert int(np.asarray(g.result.value)[0, 0]) == fib.fib_reference(n)
+        np.testing.assert_array_equal(
+            np.asarray(g.result.value), np.asarray(h.result.value)
+        )
+    assert sg.epochs == sm.epochs
+    assert sg.lanes_launched < sm.lanes_launched
+    assert sg.hole_lanes_skipped > sm.hole_lanes_skipped
