@@ -1,0 +1,240 @@
+"""Benchmark regression gate: fresh run vs committed BENCH_*.json.
+
+The bench artifact carries two kinds of numbers and the gate treats them
+differently, mirroring the paper's accounting split:
+
+* **V_inf terms and other deterministic counters are exact.**  Epochs,
+  tasks, dispatches, readbacks, lane volumes, template hits — these are
+  properties of the *algorithm*, not the machine; any drift is a real
+  semantic change (a scheduler regression, an accounting bug) and fails
+  the gate outright.  They are read from the derived ``k=v`` string
+  (integer-valued keys) and, for trees-bench-v2 artifacts, from the
+  structured ``stats`` block (``RunStats.as_dict()``).
+
+* **Wall-clock is fuzzy.**  ``us_per_call`` only fails when the fresh run
+  is more than ``--time-factor`` times *slower* than the baseline — a
+  shared CI container is noisy, and a speedup (e.g. from fixing the
+  compile-in-the-mean ``_time`` bug) must never fail the gate.  Pass
+  ``--strict`` to also flag implausible speedups beyond the same factor
+  (catches rows that silently stopped doing the work), or
+  ``--ignore-time`` to gate on counters alone.
+
+Rows are matched by name; the gate compares the intersection so a subset
+run (``--only``/``--smoke``) can still be checked against a full
+baseline.  An *empty* intersection is an error — it means the two
+artifacts describe disjoint row sets and "pass" would be vacuous.
+
+Usage::
+
+    python benchmarks/check.py FRESH.json BASELINE.json [options]
+
+Exit status 0 = within tolerance, 1 = drift, 2 = unusable inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# derived keys with these patterns are wall-clock-derived (or ratios of
+# wall-clock) no matter how integer-like their value prints
+_TIME_LIKE = re.compile(
+    r"(_us$|_x$|^us_|util|occ_|frac|parallelism|speedup|overhead"
+    r"|saving|_s$|_wait|lanes_wasted_ratio)"
+)
+
+_INT = re.compile(r"^-?\d+$")
+
+# RunStats counters that must be bit-identical run to run (scheduling is
+# deterministic); float derived fields (utilization, map_utilization) and
+# the host-measured peak are checked for presence only
+_STATS_EXACT = (
+    "epochs",
+    "tasks_executed",
+    "lanes_launched",
+    "dispatches",
+    "scalar_transfers",
+    "total_forks",
+    "hole_lanes_skipped",
+    "map_launches",
+    "map_lanes_launched",
+    "peak_tv_slots",
+    "tasks_by_type",
+    "lanes_by_type",
+)
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        out[k.strip()] = v.strip()
+    return out
+
+
+def exact_keys(pairs: Dict[str, str]) -> Dict[str, str]:
+    """The deterministic subset of a derived dict: integer-valued keys
+    that are not wall-clock-derived."""
+    return {
+        k: v
+        for k, v in pairs.items()
+        if _INT.match(v) and not _TIME_LIKE.search(k)
+    }
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema", "")
+    if not str(schema).startswith("trees-bench-"):
+        raise ValueError(f"{path}: not a trees-bench artifact ({schema!r})")
+    if not isinstance(doc.get("rows"), list):
+        raise ValueError(f"{path}: missing rows[]")
+    return doc
+
+
+def _rows_by_name(doc: dict) -> Dict[str, dict]:
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def check_row(
+    name: str,
+    fresh: dict,
+    base: dict,
+    time_factor: float,
+    strict: bool,
+    ignore_time: bool,
+) -> List[str]:
+    problems: List[str] = []
+
+    if not ignore_time:
+        f_us = float(fresh.get("us_per_call", 0.0))
+        b_us = float(base.get("us_per_call", 0.0))
+        if b_us > 0 and f_us > b_us * time_factor:
+            problems.append(
+                f"{name}: us_per_call {f_us:.1f} is "
+                f"{f_us / b_us:.1f}x slower than baseline {b_us:.1f} "
+                f"(tolerance {time_factor:g}x)"
+            )
+        if strict and f_us > 0 and b_us > f_us * time_factor:
+            problems.append(
+                f"{name}: us_per_call {f_us:.1f} is implausibly "
+                f"{b_us / f_us:.1f}x faster than baseline {b_us:.1f} "
+                f"(--strict tolerance {time_factor:g}x)"
+            )
+
+    fd = exact_keys(parse_derived(fresh.get("derived", "")))
+    bd = exact_keys(parse_derived(base.get("derived", "")))
+    for k in sorted(set(fd) & set(bd)):
+        if fd[k] != bd[k]:
+            problems.append(
+                f"{name}: derived {k}={fd[k]} != baseline {bd[k]}"
+            )
+
+    fs, bs = fresh.get("stats"), base.get("stats")
+    if isinstance(fs, dict) and isinstance(bs, dict):
+        for k in _STATS_EXACT:
+            if k in fs and k in bs and fs[k] != bs[k]:
+                problems.append(
+                    f"{name}: stats.{k}={fs[k]!r} != baseline {bs[k]!r}"
+                )
+    return problems
+
+
+def run_check(
+    fresh_path: str,
+    base_path: str,
+    time_factor: float = 25.0,
+    strict: bool = False,
+    ignore_time: bool = False,
+    out=sys.stdout,
+) -> int:
+    try:
+        fresh = load(fresh_path)
+        base = load(base_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check: {e}", file=out)
+        return 2
+
+    if fresh.get("dispatch") != base.get("dispatch"):
+        print(
+            f"check: dispatch mismatch "
+            f"({fresh.get('dispatch')} vs {base.get('dispatch')}); "
+            "rows are not comparable",
+            file=out,
+        )
+        return 2
+
+    fr, br = _rows_by_name(fresh), _rows_by_name(base)
+    common = sorted(set(fr) & set(br))
+    missing = sorted(set(br) - set(fr))
+    extra = sorted(set(fr) - set(br))
+    if not common:
+        print(
+            f"check: no common rows between {fresh_path} ({len(fr)} rows) "
+            f"and {base_path} ({len(br)} rows) — nothing to gate",
+            file=out,
+        )
+        return 2
+
+    problems: List[str] = []
+    for name in common:
+        problems += check_row(
+            name, fr[name], br[name], time_factor, strict, ignore_time
+        )
+
+    print(
+        f"check: {len(common)} rows compared "
+        f"({len(missing)} baseline-only, {len(extra)} fresh-only), "
+        f"time tolerance {time_factor:g}x"
+        f"{' (strict)' if strict else ''}"
+        f"{' (time ignored)' if ignore_time else ''}",
+        file=out,
+    )
+    if strict and missing:
+        problems.append(
+            "rows present in baseline but missing from fresh run: "
+            + ", ".join(missing)
+        )
+    for p in problems:
+        print(f"  FAIL {p}", file=out)
+    if problems:
+        print(f"check: {len(problems)} failure(s)", file=out)
+        return 1
+    print("check: OK", file=out)
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("fresh", help="JSON artifact from the run under test")
+    ap.add_argument("baseline", help="committed BENCH_*.json to gate against")
+    ap.add_argument(
+        "--time-factor", type=float, default=25.0,
+        help="fail when us_per_call exceeds baseline by this factor "
+        "(default %(default)s; slowdowns only unless --strict)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="also fail on speedups beyond --time-factor and on rows "
+        "missing from the fresh run",
+    )
+    ap.add_argument(
+        "--ignore-time", action="store_true",
+        help="gate only on deterministic counters, not wall-clock",
+    )
+    args = ap.parse_args(argv)
+    return run_check(
+        args.fresh, args.baseline,
+        time_factor=args.time_factor,
+        strict=args.strict,
+        ignore_time=args.ignore_time,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 """Benchmark harness — one function per paper table/figure (DESIGN.md §7).
 
-Prints ``name,us_per_call,derived`` CSV rows.  All sizes are scaled to run
+Prints ``name,us_per_call,compile_us,derived`` CSV rows.  All sizes are
+scaled to run
 on this CPU container in minutes; the *shape* of each comparison mirrors the
 paper's (Fig. 5 Fibonacci overhead, Fig. 6 FFT, Fig. 7/8 BFS/SSSP vs
 hand-coded worklists, Fig. 9 sort, plus the V1/V-inf overhead decomposition
@@ -16,7 +17,7 @@ from typing import Callable, List, Tuple
 
 import numpy as np
 
-ROWS: List[Tuple[str, float, str]] = []
+ROWS: List[tuple] = []
 
 # set by main() from --dispatch; every HostEngine below follows it so the
 # whole harness can be A/B'd masked vs compacted (§5.4 contiguity)
@@ -30,6 +31,11 @@ SMOKE = False
 # persistent Pallas epoch megakernel next to the while_loop K-ladder rows)
 MEGAKERNEL = False
 
+# set by main() from --trace / --metrics: the obs tracer + metrics registry
+# every service/engine below feeds when enabled (None = disabled, free)
+TRACER = None
+METRICS = None
+
 
 def jax_backend() -> str:
     import jax
@@ -37,17 +43,49 @@ def jax_backend() -> str:
     return jax.default_backend()
 
 
-def _time(fn: Callable, repeats: int = 3) -> float:
+class Timing(float):
+    """Steady-state seconds per call, with the warmup's one-time cost kept
+    on the side.  The value *is* the steady-state mean (so existing
+    arithmetic on ``_time`` results is unchanged); ``compile_s`` carries
+    the first call — tracing + XLA compilation — as its own number instead
+    of letting it pollute the mean or vanish."""
+
+    compile_s: float = 0.0
+
+
+def _time(fn: Callable, repeats: int = 3) -> Timing:
+    # first call pays tracing + compilation; time it separately so the
+    # repeats measure steady-state and the compile cost stays visible.
+    # NOTE: closures must reuse one engine/service across calls — a fresh
+    # engine per call owns fresh jit caches and recompiles every "repeat",
+    # which is exactly the bug this split makes diffable (compile_us ~ 0
+    # on a row means its repeats really were steady-state).
+    t0 = time.perf_counter()
     fn()  # warmup / compile
+    compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     for _ in range(repeats):
         fn()
-    return (time.perf_counter() - t0) / repeats
+    t = Timing((time.perf_counter() - t0) / repeats)
+    t.compile_s = compile_s
+    return t
 
 
-def row(name: str, us: float, derived: str = ""):
-    ROWS.append((name, us, derived))
-    print(f"{name},{us:.1f},{derived}", flush=True)
+def row(name: str, us: float, derived: str = "", stats=None):
+    """Record one benchmark row.
+
+    ``us`` may be a plain float (microseconds) or carry a ``Timing`` via
+    the caller multiplying one by 1e6 — compile time is passed explicitly
+    by callers that have it.  ``stats`` is an optional RunStats whose
+    ``as_dict()`` lands structured in the JSON artifact (one metric
+    vocabulary with obs/export.py)."""
+    compile_us = 0.0
+    base = us
+    if isinstance(us, Timing):
+        base = float(us) * 1e6
+        compile_us = us.compile_s * 1e6
+    ROWS.append((name, base, compile_us, derived, stats))
+    print(f"{name},{base:.1f},{compile_us:.1f},{derived}", flush=True)
 
 
 # ------------------------------------------------------------ Fig 5: fib
@@ -58,30 +96,40 @@ def bench_fib():
     for n in (10,) if SMOKE else (12, 14, 16):
         _, _, ostats = run_oracle(fib.PROGRAM, fib.initial(n), capacity=1 << 14)
 
+        # one engine across warmup + repeats: its jit caches persist, so
+        # the repeats measure steady-state dispatch (a fresh engine per
+        # call would retrace each "repeat" — the compile_us column guards
+        # against that regressing)
+        host_eng = HostEngine(
+            fib.PROGRAM, capacity=1 << 14, collect_stats=False,
+            dispatch=DISPATCH, tracer=TRACER,
+        )
+
         def run_host():
-            HostEngine(fib.PROGRAM, capacity=1 << 14, collect_stats=False, dispatch=DISPATCH).run(
-                fib.initial(n)
-            )
+            host_eng.run(fib.initial(n))
 
         eng = HostEngine(fib.PROGRAM, capacity=1 << 14, dispatch=DISPATCH)
         _, vals, hstats = eng.run(fib.initial(n))
-        t_host = _time(run_host, repeats=1)
+        t_host = _time(run_host)
         rep = compare(ostats, hstats)
         row(
-            f"fib{n}_trees_host", t_host * 1e6,
+            f"fib{n}_trees_host", t_host,
             f"tasks={ostats.tasks_executed};epochs={ostats.epochs};"
             f"us_per_task={t_host*1e6/ostats.tasks_executed:.1f};"
             f"util={rep.utilization:.2f}",
+            stats=hstats,
+        )
+
+        dev_eng = DeviceEngine(
+            fib.PROGRAM, capacity=1 << 14, stack_depth=512, tracer=TRACER
         )
 
         def run_dev():
-            DeviceEngine(fib.PROGRAM, capacity=1 << 14, stack_depth=512).run(
-                fib.initial(n)
-            )
+            dev_eng.run(fib.initial(n))
 
-        t_dev = _time(run_dev, repeats=1)
+        t_dev = _time(run_dev)
         row(
-            f"fib{n}_trees_device", t_dev * 1e6,
+            f"fib{n}_trees_device", t_dev,
             f"speedup_vs_host={t_host/t_dev:.2f}",
         )
 
@@ -92,7 +140,7 @@ def bench_fib():
 
         t_seq = _time(run_seq)
         row(
-            f"fib{n}_sequential", t_seq * 1e6,
+            f"fib{n}_sequential", t_seq,
             f"trees_overhead_x={t_host/max(t_seq,1e-9):.1f}",
         )
 
@@ -107,13 +155,14 @@ def bench_fft():
     for n in (64, 256):
         xr, xi = fft.random_input(n)
         prog = fft.make_program(n)
+        eng = HostEngine(
+            prog, capacity=1 << 13, collect_stats=False, dispatch=DISPATCH
+        )
 
         def run_trees():
-            HostEngine(prog, capacity=1 << 13, collect_stats=False, dispatch=DISPATCH).run(
-                fft.initial(n), heap_init=dict(xr=xr, xi=xi)
-            )
+            eng.run(fft.initial(n), heap_init=dict(xr=xr, xi=xi))
 
-        t_trees = _time(run_trees, repeats=1)
+        t_trees = _time(run_trees)
 
         xc = xr + 1j * xi
 
@@ -123,7 +172,7 @@ def bench_fft():
 
         t_native = _time(lambda: np.asarray(native(xc)))
         row(
-            f"fft{n}_trees", t_trees * 1e6,
+            f"fft{n}_trees", t_trees,
             f"native_fft_us={t_native*1e6:.1f};"
             f"generality_cost_x={t_trees/max(t_native,1e-9):.1f}",
         )
@@ -137,40 +186,44 @@ def bench_graph():
 
     n = 256
     adj_off, adj = bfs.random_graph(n, avg_degree=4, seed=0)
+    bfs_eng = HostEngine(
+        bfs.make_program(n, len(adj)), capacity=1 << 15,
+        collect_stats=False, dispatch=DISPATCH,
+    )
 
     def run_trees_bfs():
-        prog = bfs.make_program(n, len(adj))
-        HostEngine(prog, capacity=1 << 15, collect_stats=False, dispatch=DISPATCH).run(
-            bfs.initial(0), heap_init=bfs.heap_init(adj_off, adj, n)
-        )
+        bfs_eng.run(bfs.initial(0), heap_init=bfs.heap_init(adj_off, adj, n))
 
-    t_trees = _time(run_trees_bfs, repeats=1)
+    t_trees = _time(run_trees_bfs)
 
     def run_wl_bfs():
         worklist.bfs_worklist(adj_off, adj, 0, n)
 
-    t_wl = _time(run_wl_bfs, repeats=1)
+    t_wl = _time(run_wl_bfs)
     row(
-        f"bfs_n{n}_trees", t_trees * 1e6,
+        f"bfs_n{n}_trees", t_trees,
         f"worklist_us={t_wl*1e6:.1f};overhead_vs_native_x={t_trees/t_wl:.2f}",
     )
 
     wgt = sssp.random_weights(len(adj), seed=1)
+    sssp_eng = HostEngine(
+        sssp.make_program(n, len(adj)), capacity=1 << 16,
+        collect_stats=False, dispatch=DISPATCH,
+    )
 
     def run_trees_sssp():
-        prog = sssp.make_program(n, len(adj))
-        HostEngine(prog, capacity=1 << 16, collect_stats=False, dispatch=DISPATCH).run(
+        sssp_eng.run(
             sssp.initial(0), heap_init=sssp.heap_init(adj_off, adj, wgt, n)
         )
 
-    t_trees = _time(run_trees_sssp, repeats=1)
+    t_trees = _time(run_trees_sssp)
 
     def run_wl_sssp():
         worklist.sssp_worklist(adj_off, adj, wgt, 0, n)
 
-    t_wl = _time(run_wl_sssp, repeats=1)
+    t_wl = _time(run_wl_sssp)
     row(
-        f"sssp_n{n}_trees", t_trees * 1e6,
+        f"sssp_n{n}_trees", t_trees,
         f"worklist_us={t_wl*1e6:.1f};overhead_vs_native_x={t_trees/t_wl:.2f}",
     )
 
@@ -184,23 +237,27 @@ def bench_sort():
 
     n = 64
     x = mergesort.random_input(n)
+    engs = {
+        use_map: HostEngine(
+            mergesort.make_program(n, use_map=use_map), capacity=1 << 13,
+            collect_stats=False, dispatch=DISPATCH,
+        )
+        for use_map in (False, True)
+    }
 
     def run(use_map):
-        prog = mergesort.make_program(n, use_map=use_map)
-        HostEngine(prog, capacity=1 << 13, collect_stats=False, dispatch=DISPATCH).run(
-            mergesort.initial(n), heap_init=dict(inp=x)
-        )
+        engs[use_map].run(mergesort.initial(n), heap_init=dict(inp=x))
 
     t_naive = _time(lambda: run(False), repeats=1)
     t_map = _time(lambda: run(True), repeats=1)
     xj = jnp.asarray(x)
     t_bitonic = _time(lambda: np.asarray(bitonic.bitonic_sort(xj)))
-    row(f"sort{n}_trees_naive", t_naive * 1e6,
+    row(f"sort{n}_trees_naive", t_naive,
         f"vs_bitonic_x={t_naive/max(t_bitonic,1e-9):.1f}")
-    row(f"sort{n}_trees_map", t_map * 1e6,
+    row(f"sort{n}_trees_map", t_map,
         f"map_speedup_vs_naive_x={t_naive/t_map:.2f};"
         f"vs_bitonic_x={t_map/max(t_bitonic,1e-9):.1f}")
-    row(f"sort{n}_bitonic_native", t_bitonic * 1e6, "")
+    row(f"sort{n}_bitonic_native", t_bitonic, "")
 
 
 # --------------------------------------- §4.4: V1 / V_inf decomposition
@@ -211,16 +268,14 @@ def bench_overhead():
     prog = nqueens.make_program(7)
     _, _, ostats = run_oracle(prog, nqueens.initial(), capacity=1 << 14)
     eng = HostEngine(prog, capacity=1 << 14, dispatch=DISPATCH)
-    t = _time(
-        lambda: HostEngine(
-            prog, capacity=1 << 14, collect_stats=False, dispatch=DISPATCH
-        ).run(nqueens.initial()),
-        repeats=1,
+    timed_eng = HostEngine(
+        prog, capacity=1 << 14, collect_stats=False, dispatch=DISPATCH
     )
+    t = _time(lambda: timed_eng.run(nqueens.initial()), repeats=1)
     _, _, st = eng.run(nqueens.initial())
     rep = compare(ostats, st)
     row(
-        "nqueens7_overhead", t * 1e6,
+        "nqueens7_overhead", t,
         f"T1={rep.t1_tasks};Tinf={rep.t_inf_epochs};"
         f"parallelism={rep.parallelism:.1f};"
         f"V1_lanes={rep.v1_lane_factor:.2f};"
@@ -271,7 +326,7 @@ def bench_dispatch():
             f"occ_{t}={o:.2f}" for t, o in sorted(sc.occupancy_by_type.items())
         )
         row(
-            f"dispatch_{name}_{DISPATCH}", times[DISPATCH] * 1e6,
+            f"dispatch_{name}_{DISPATCH}", times[DISPATCH],
             f"util_masked={sm.utilization:.2f};"
             f"util_compacted={sc.utilization:.2f};"
             f"util_gather={sg.utilization:.2f};"
@@ -285,6 +340,7 @@ def bench_dispatch():
             f"vinf_masked_us={vinf_seconds(sm)*1e6:.0f};"
             f"vinf_compacted_us={vinf_seconds(sc)*1e6:.0f};"
             f"vinf_gather_us={vinf_seconds(sg)*1e6:.0f};{occ}",
+            stats=stats[DISPATCH],
         )
 
 
@@ -307,6 +363,7 @@ def bench_service():
         svc = JobService(
             capacity=sum(q for _, q in fleet), dispatch=DISPATCH,
             max_jobs=n_jobs or len(fleet),
+            metrics=METRICS, tracer=TRACER,
         )
         for case, quota in fleet:
             svc.submit_case(case, quota=quota)
@@ -321,9 +378,10 @@ def bench_service():
         fs = svc.stats()
         t = _time(lambda: run_service([base] * 2), repeats=1)
         row(
-            f"service_fibx2_{DISPATCH}", t * 1e6,
+            f"service_fibx2_{DISPATCH}", t,
             f"jobs=2;fleet_dispatches={fs.dispatches};"
             f"dispatches_per_job={fs.dispatches / 2:.1f}",
+            stats=fs,
         )
         return
 
@@ -339,13 +397,14 @@ def bench_service():
     fs = svc.stats()
     t = _time(lambda: run_service(get_fleet("mixed3")), repeats=1)
     row(
-        f"service_mixed3_{DISPATCH}", t * 1e6,
+        f"service_mixed3_{DISPATCH}", t,
         f"jobs={len(fleet)};fleet_dispatches={fs.dispatches};"
         f"solo_dispatches={solo_disp};"
         f"fleet_transfers={fs.scalar_transfers};solo_transfers={solo_xfer};"
         f"vinf_saving_x={(solo_disp + solo_xfer) / max(1, fs.dispatches + fs.scalar_transfers):.2f};"
         f"util={fs.utilization:.2f};"
         f"hole_lanes_skipped={fs.hole_lanes_skipped}",
+        stats=fs,
     )
 
     # throughput vs number of concurrent jobs (homogeneous fib fleet)
@@ -356,7 +415,7 @@ def bench_service():
         fs = svc.stats()
         t = _time(lambda f=fleet_n: run_service(f), repeats=1)
         row(
-            f"service_fibx{n}_{DISPATCH}", t * 1e6,
+            f"service_fibx{n}_{DISPATCH}", t,
             f"jobs={n};fleet_dispatches={fs.dispatches};"
             f"us_per_job={t * 1e6 / n:.1f};"
             f"dispatches_per_job={fs.dispatches / n:.1f}",
@@ -407,6 +466,7 @@ def bench_device_service():
             chunk=chunk if engine == "device" else None,
             template_cache=cache,
             megakernel=megakernel, megakernel_impl=megakernel_impl,
+            metrics=METRICS, tracer=TRACER,
         )
         for case, quota in fleet:
             svc.submit_case(case, quota=quota)
@@ -437,7 +497,7 @@ def bench_device_service():
         host_vinf = hs.dispatches + hs.scalar_transfers
         dev_vinf = ds.dispatches + ds.scalar_transfers
         row(
-            f"device_service_{fname}", t_dev * 1e6,
+            f"device_service_{fname}", t_dev,
             f"jobs={len(fleet)};resident_vinf={dev_vinf};"
             f"hostmux_vinf={host_vinf};solo_vinf={solo_vinf};"
             f"vinf_vs_hostmux_x={host_vinf / max(1, dev_vinf):.1f};"
@@ -447,6 +507,7 @@ def bench_device_service():
             f"map_util={ds.map_utilization:.3f};"
             f"util={ds.utilization:.3f};"
             f"hole_lanes_skipped={ds.hole_lanes_skipped}",
+            stats=ds,
         )
 
         # the K-ladder: readback cadence between host-mux and resident
@@ -462,13 +523,14 @@ def bench_device_service():
             expected = 1 if K is None else math.ceil(ks.epochs / K)
             row(
                 f"device_service_{fname}_k{'inf' if K is None else K}",
-                t_k * 1e6,
+                t_k,
                 f"jobs={len(fleet)};chunk={'inf' if K is None else K};"
                 f"epochs={ks.epochs};readbacks={ks.scalar_transfers};"
                 f"expected_readbacks={expected};dispatches={ks.dispatches};"
                 f"template_hits={cache.hits};"
                 f"map_lanes_wasted={ks.map_lanes_wasted};"
                 f"hole_lanes_skipped={ks.hole_lanes_skipped}",
+                stats=ks,
             )
 
         if not MEGAKERNEL:
@@ -504,7 +566,7 @@ def bench_device_service():
                 row(
                     f"device_service_{fname}_mega_{dispatch}"
                     f"_k{'inf' if K is None else K}",
-                    t_m * 1e6,
+                    t_m,
                     f"jobs={len(fleet)};chunk={'inf' if K is None else K};"
                     f"impl={impl};epochs={ms.epochs};"
                     f"readbacks={ms.scalar_transfers};"
@@ -515,6 +577,7 @@ def bench_device_service():
                     f"template_hits={cache.hits};"
                     f"map_lanes_wasted={ms.map_lanes_wasted};"
                     f"util={ms.utilization:.3f}",
+                    stats=ms,
                 )
 
 
@@ -542,16 +605,20 @@ def bench_serving():
         done = srv.run_to_completion()
         return sum(len(r.output) for r in done), srv.epochs
 
-    # warm
+    # warm (each serve() builds its own server, so the warm call pays the
+    # jit tracing shared by the later calls; record it as compile time)
+    t0 = time.perf_counter()
     serve(4)
+    warm_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     n_tok, epochs = serve(4)
-    dt = time.perf_counter() - t0
+    dt = Timing(time.perf_counter() - t0)
+    dt.compile_s = warm_s
     t0 = time.perf_counter()
     n1, e1 = serve(1)
     dt1 = time.perf_counter() - t0
     row(
-        "serve_8req_slots4", dt * 1e6,
+        "serve_8req_slots4", dt,
         f"tokens={n_tok};epochs={epochs};"
         f"batch_speedup_vs_slots1={dt1/dt:.2f}",
     )
@@ -603,17 +670,28 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
     trajectory (V_inf ladders, utilization, map waste) is diffable across
     PRs instead of living only in scrollback.  ``groups`` records which
     benchmark groups actually ran — two artifacts are only comparable row
-    set to row set, never across different group selections."""
+    set to row set, never across different group selections.  Rows that
+    carried a RunStats serialize it via ``RunStats.as_dict()`` — the same
+    metric vocabulary ``obs/export.py`` exports — so ``check.py`` gates on
+    structured counters, not just the derived string."""
+    rows = []
+    for n, us, cus, d, s in ROWS:
+        r = {
+            "name": n,
+            "us_per_call": round(us, 1),
+            "compile_us": round(cus, 1),
+            "derived": d,
+        }
+        if s is not None:
+            r["stats"] = s.as_dict()
+        rows.append(r)
     payload = {
-        "schema": "trees-bench-v1",
+        "schema": "trees-bench-v2",
         "dispatch": dispatch,
         "smoke": smoke,
         "megakernel": MEGAKERNEL,
         "groups": sorted(groups),
-        "rows": [
-            {"name": n, "us_per_call": round(us, 1), "derived": d}
-            for n, us, d in ROWS
-        ],
+        "rows": rows,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -621,7 +699,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
 
 
 def main(argv=None) -> None:
-    global DISPATCH, SMOKE, MEGAKERNEL
+    global DISPATCH, SMOKE, MEGAKERNEL, TRACER, METRICS
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--dispatch", choices=("masked", "compacted", "gather"),
@@ -650,16 +728,34 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_6.json for full or --smoke runs, off for --only subset "
+        "to BENCH_7.json for full runs, off for --only subset or --smoke "
         "runs (pass a path to force, '' to disable)",
+    )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="run the service benchmarks with the obs span tracer on and "
+        "write the Chrome-trace-event JSON (perfetto-loadable) here",
+    )
+    ap.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="run with the obs metrics registry on and write its samples "
+        "as JSONL here (plus Prometheus text exposition at PATH.prom)",
     )
     args = ap.parse_args(argv)
     DISPATCH = args.dispatch
     SMOKE = args.smoke
     MEGAKERNEL = args.megakernel
+    if args.trace:
+        from repro.obs import SpanTracer
+
+        TRACER = SpanTracer()
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+
+        METRICS = MetricsRegistry()
     only = args.only or (list(SMOKE_GROUPS) if args.smoke else None)
     ran = []
-    print("name,us_per_call,derived")
+    print("name,us_per_call,compile_us,derived")
     for name, fn in BENCHES.items():
         if only and name not in only:
             continue
@@ -669,9 +765,16 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_6.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_7.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
+    if args.trace:
+        TRACER.write(args.trace)
+    if args.metrics:
+        from repro.obs import write_jsonl, write_prometheus
+
+        write_jsonl(METRICS, args.metrics)
+        write_prometheus(METRICS, args.metrics + ".prom")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import tvm
+from ..obs.trace import NULL_TRACER
 from .program import InitialTask, Program
 from .scheduler import (  # noqa: F401  (re-exports kept for back-compat)
     COMPACTED,
@@ -138,10 +139,12 @@ class MapLauncher:
     """
 
     def __init__(self, program: Program, donate: bool = False,
-                 on_trace: Optional[Callable[[], None]] = None):
+                 on_trace: Optional[Callable[[], None]] = None,
+                 tracer=None):
         self.program = program
         self._donate = donate
         self._on_trace = on_trace or (lambda: None)
+        self.tracer = tracer or NULL_TRACER
         self._cache: Dict[Tuple[int, int, int], Any] = {}
 
     def _get_step(self, mid: int, P: int, D: int):
@@ -174,7 +177,10 @@ class MapLauncher:
             D = launch_bucket(dmax, minimum=8)
             P = int(where.shape[0])
             mstep = self._get_step(ml.map_id, P, D)
-            heap = mstep(heap, ml.where, ml.argi, ml.argf)
+            with self.tracer.span(
+                "map", "host", map_id=ml.map_id, lanes=P, width=D,
+            ), self.tracer.annotation(f"trees:map{ml.map_id}"):
+                heap = mstep(heap, ml.where, ml.argi, ml.argf)
             col.dispatch()
             # what to record is the collector's decision (NullStats ignores
             # the element count), not an engine-level flag's
@@ -358,6 +364,7 @@ class EpochLoop:
         skip_idle_types: bool = False,
         megakernel: bool = False,
         megakernel_impl: str = "auto",
+        tracer=None,
     ):
         self.program = program
         self.policy: DispatchPolicy = resolve_policy(dispatch)
@@ -378,8 +385,12 @@ class EpochLoop:
         # so "two identical consecutive waves retraced nothing" is a
         # testable invariant of the wave-template cache, not a hope
         self.trace_count = 0
+        # span tracing is opt-in: NULL_TRACER's hooks are constant-time
+        # no-ops, so the disabled path stays off the critical budget
+        self.tracer = tracer or NULL_TRACER
         self.maps = MapLauncher(program, donate=donate,
-                                on_trace=self._mark_trace)
+                                on_trace=self._mark_trace,
+                                tracer=self.tracer)
         self._step_cache: Dict[Any, Any] = {}
         self._compact_cache: Dict[int, Any] = {}
         self._gather_cache: Dict[int, Any] = {}
@@ -601,43 +612,63 @@ class EpochLoop:
             cen_j = jnp.asarray(cen_np)
         dispatches = 1
         by_type = None
+        tr = self.tracer
         if self.policy.name == "compacted":
-            perm, counts_dev = self.compact_pass(P)(
-                state, start_j, count_j, cen_j
-            )
-            counts = np.asarray(jax.device_get(counts_dev), np.int64)
+            # the pack span includes its count readback (the §5.4 extra
+            # V_inf dispatch + transfer), so its duration is that term's
+            # real critical-path cost
+            with tr.span("pack", "host", mode="compacted", width=P):
+                perm, counts_dev = self.compact_pass(P)(
+                    state, start_j, count_j, cen_j
+                )
+                counts = np.asarray(jax.device_get(counts_dev), np.int64)
             col.dispatch()
             col.transfer()
             dispatches += 1
             buckets, toffs, launched, by_type = size_type_buckets(
                 self.policy, counts, self.task_names
             )
-            state, heap, summary, map_launches = self.compacted_step(
-                P, buckets
-            )(
-                state, heap, arena, start_j, count_j, cen_j, perm,
-                jnp.asarray(toffs, jnp.int32), jnp.asarray(counts, jnp.int32),
-            )
+            with tr.span(
+                "dispatch", "host", mode="compacted", launched=launched,
+            ), tr.annotation("trees:epoch_step"):
+                state, heap, summary, map_launches = self.compacted_step(
+                    P, buckets
+                )(
+                    state, heap, arena, start_j, count_j, cen_j, perm,
+                    jnp.asarray(toffs, jnp.int32),
+                    jnp.asarray(counts, jnp.int32),
+                )
         elif self.policy.name == "gather":
-            perm, count_dev = self.gather_pass(P)(
-                state, start_j, count_j, cen_j
-            )
-            n_sched = int(jax.device_get(count_dev))
+            with tr.span("pack", "host", mode="gather", width=P):
+                perm, count_dev = self.gather_pass(P)(
+                    state, start_j, count_j, cen_j
+                )
+                n_sched = int(jax.device_get(count_dev))
             col.dispatch()
             col.transfer()
             dispatches += 1
             G = self.policy.epoch_bucket(n_sched)
-            state, heap, summary, map_launches = self.gather_step(P, G)(
-                state, heap, arena, start_j, perm
-            )
+            with tr.span(
+                "dispatch", "host", mode="gather", launched=G, holes=P - G,
+            ), tr.annotation("trees:epoch_step"):
+                state, heap, summary, map_launches = self.gather_step(P, G)(
+                    state, heap, arena, start_j, perm
+                )
             launched = G
             col.holes_skipped(P - G)
         else:
-            state, heap, summary, map_launches = self.masked_step(P)(
-                state, heap, arena, start_j, count_j, cen_j
-            )
+            with tr.span(
+                "dispatch", "host", mode="masked", launched=P,
+            ), tr.annotation("trees:epoch_step"):
+                state, heap, summary, map_launches = self.masked_step(P)(
+                    state, heap, arena, start_j, count_j, cen_j
+                )
             launched = P
-        fetched = jax.device_get(readback(summary, state))
+        # dispatch spans measure enqueue time (XLA launches are async); the
+        # readback span absorbs the wait — exactly the paper's per-epoch
+        # scalar-transfer stall
+        with tr.span("readback", "host"):
+            fetched = jax.device_get(readback(summary, state))
         col.dispatch()
         col.transfer()
         return (
@@ -1048,6 +1079,7 @@ class HostEngine:
         rank_fn: Optional[Callable] = None,
         pack_fn: Optional[Callable] = None,
         stats_factory: Optional[Callable[[], StatsCollector]] = None,
+        tracer=None,
     ):
         self.program = program
         self.capacity = capacity
@@ -1058,7 +1090,9 @@ class HostEngine:
             program, dispatch,
             rank_fn=rank_fn, pack_fn=pack_fn,
             fork_offsets_fn=fork_offsets_fn, donate=donate,
+            tracer=tracer,
         )
+        self.tracer = self.loop.tracer
         self.policy = self.loop.policy
 
     def _collector(self) -> StatsCollector:
@@ -1096,32 +1130,44 @@ class HostEngine:
         sched.reset()
         col = self._collector()
         n_epochs = 0  # loop guard lives here, not in the pluggable collector
+        tr = self.tracer
+        if tr.enabled:
+            tr.thread(1, "host-epochs")
 
         while sched:  # termination predicate: host stacks drained
             if n_epochs >= max_epochs:
                 raise EngineError(f"exceeded max_epochs={max_epochs}")
             n_epochs += 1
             d = sched.pop()
-            (state, heap, _summary, fetched, map_launches, launched,
-             by_type, _disp) = self.loop.run_epoch(
-                state, heap, None, d.start, d.count, d.cen, col,
-                self._readback,
-            )
-            total_forks, join_sched, map_sched, n_active, overflow, nf = (
-                fetched
-            )
-            if overflow:
-                raise EngineError(
-                    f"task vector overflow: capacity={self.capacity}"
+            with tr.span(
+                "epoch", "host", tid=1,
+                cen=d.cen, ranges=d.n_ranges, mode=self.policy.name,
+            ) as sargs:
+                (state, heap, _summary, fetched, map_launches, launched,
+                 by_type, _disp) = self.loop.run_epoch(
+                    state, heap, None, d.start, d.count, d.cen, col,
+                    self._readback,
                 )
-            if join_sched:
-                sched.push_join(d.cen, d.start, d.count)
-            sched.push_forked(
-                d.cen + 1, int(nf) - int(total_forks), int(total_forks)
-            )
+                total_forks, join_sched, map_sched, n_active, overflow, nf = (
+                    fetched
+                )
+                if overflow:
+                    raise EngineError(
+                        f"task vector overflow: capacity={self.capacity}"
+                    )
+                if join_sched:
+                    sched.push_join(d.cen, d.start, d.count)
+                sched.push_forked(
+                    d.cen + 1, int(nf) - int(total_forks), int(total_forks)
+                )
 
-            if map_sched:
-                heap = self.loop.maps.run(map_launches, heap, col)
+                if map_sched:
+                    heap = self.loop.maps.run(map_launches, heap, col)
+                if tr.enabled:
+                    sargs.update(
+                        launched=launched, active=int(n_active),
+                        util=int(n_active) / max(1, launched),
+                    )
 
             col.epoch(d.cen, d.n_ranges)
             col.lanes(int(n_active), launched, by_type)
@@ -1156,6 +1202,7 @@ class DeviceEngine:
         dispatch: Any = MASKED,
         megakernel: bool = False,
         megakernel_impl: str = "auto",
+        tracer=None,
     ):
         self.program = program
         self.capacity = capacity
@@ -1165,7 +1212,9 @@ class DeviceEngine:
         self.loop = EpochLoop(program, dispatch,
                               fork_offsets_fn=fork_offsets_fn,
                               megakernel=megakernel,
-                              megakernel_impl=megakernel_impl)
+                              megakernel_impl=megakernel_impl,
+                              tracer=tracer)
+        self.tracer = self.loop.tracer
         self.policy = self.loop.policy
 
     def run(
@@ -1181,9 +1230,28 @@ class DeviceEngine:
         carry = _fresh_resident_carry(
             state, heap, None, jstack, rstack, sp, n_regions=1
         )
-        out = self.loop.run_resident(carry, max_epochs, n_regions=1)
-        # the one scalar transfer of the whole run
-        s = self.loop.chunk_summary(out)
+        tr = self.tracer
+        if tr.enabled:
+            tr.thread(2, "resident")
+        # the resident loop is unobservable per epoch by design (no per-epoch
+        # readbacks to hang spans on): one "wave" span covers the whole
+        # dispatch, and the per-epoch story is reconstructed from the
+        # ChunkSummary deltas attached to it after the single readback
+        with tr.span(
+            "wave", "resident", tid=2,
+            driver="device", mode=self.policy.name,
+            megakernel=self.loop.megakernel,
+        ) as sargs:
+            with tr.annotation("trees:resident_wave"):
+                out = self.loop.run_resident(carry, max_epochs, n_regions=1)
+            # the one scalar transfer of the whole run
+            with tr.span("readback", "resident", tid=2):
+                s = self.loop.chunk_summary(out)
+            if tr.enabled:
+                sargs.update(
+                    epochs=s.n_epochs, tasks=int(s.job_tasks[0]),
+                    holes=s.hole_lanes,
+                )
         if s.failed.any():
             raise EngineError("TV capacity or stack depth exhausted")
         if (s.sp > 0).any():

@@ -416,6 +416,52 @@ class RunStats:
             for t, lanes in self.lanes_by_type.items()
         }
 
+    def as_dict(self, derived: bool = True) -> Dict[str, object]:
+        """Canonical ``metric name -> value`` view of this run.
+
+        The single source of truth for stats metric names: the benchmark
+        JSON artifact (``benchmarks/run.py::write_json``) and the metrics
+        exporter (``obs/export.py::export_run_stats``) both spell their
+        keys from here, so a renamed or added field propagates everywhere
+        at once.  ``derived=True`` appends the ratio properties
+        (utilization, map waste) next to the raw counters.
+        """
+        out: Dict[str, object] = {
+            f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+        }
+        out["tasks_by_type"] = dict(self.tasks_by_type)
+        out["lanes_by_type"] = dict(self.lanes_by_type)
+        if derived:
+            out["utilization"] = self.utilization
+            out["map_lanes_wasted"] = self.map_lanes_wasted
+            out["map_utilization"] = self.map_utilization
+        return out
+
+    def merge(self, s: "RunStats") -> "RunStats":
+        """Accumulate another run/wave's stats into this one, in place.
+
+        Counters add; ``peak_tv_slots`` is a high-water mark and takes the
+        max; the per-type dicts merge per key.  Returns ``self`` so
+        ``total = RunStats().merge(a).merge(b)`` chains.
+        """
+        self.epochs += s.epochs
+        self.tasks_executed += s.tasks_executed
+        self.lanes_launched += s.lanes_launched
+        self.total_forks += s.total_forks
+        self.map_launches += s.map_launches
+        self.map_elements += s.map_elements
+        self.map_lanes_launched += s.map_lanes_launched
+        self.peak_tv_slots = max(self.peak_tv_slots, s.peak_tv_slots)
+        self.dispatches += s.dispatches
+        self.scalar_transfers += s.scalar_transfers
+        self.ranges_coalesced += s.ranges_coalesced
+        self.hole_lanes_skipped += s.hole_lanes_skipped
+        for k, v in s.tasks_by_type.items():
+            self.tasks_by_type[k] = self.tasks_by_type.get(k, 0) + v
+        for k, v in s.lanes_by_type.items():
+            self.lanes_by_type[k] = self.lanes_by_type.get(k, 0) + v
+        return self
+
 
 class StatsCollector:
     """No-op base; engines call these hooks, collectors interpret them.

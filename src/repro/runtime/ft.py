@@ -13,7 +13,6 @@ re-meshing on restart goes through checkpointing.reshard.
 from __future__ import annotations
 
 import dataclasses
-import logging
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -21,9 +20,10 @@ import numpy as np
 
 from ..checkpointing import CheckpointManager
 from ..data import place_batch
+from ..obs.log import get_logger, kv
 from .stragglers import StragglerMonitor
 
-log = logging.getLogger("repro.runtime")
+log = get_logger("runtime")
 
 
 class InjectedFailure(RuntimeError):
@@ -92,8 +92,8 @@ class TrainRunner:
             ev = self.straggler.end_step(step)
             if ev is not None:
                 log.warning(
-                    "straggler step %d: %.3fs vs ema %.3fs",
-                    ev.step, ev.elapsed, ev.ema,
+                    "straggler %s",
+                    kv(step=ev.step, elapsed_s=ev.elapsed, ema_s=ev.ema),
                 )
             step += 1
             if step % self.ckpt_every == 0 or step == n_steps:
@@ -124,7 +124,10 @@ class TrainRunner:
                 restarts += 1
                 if restarts > max_restarts:
                     raise
-                log.warning("failure: %s — restarting from checkpoint", e)
+                log.warning(
+                    "restarting from checkpoint %s",
+                    kv(failure=e, restarts=restarts),
+                )
                 self.ckpt.wait()
                 latest = self.ckpt.latest_step()
                 if latest is None:

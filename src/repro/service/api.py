@@ -36,24 +36,13 @@ from .multiplexer import DeviceMultiplexer, EpochMultiplexer
 
 
 def merge_stats(into: RunStats, s: RunStats) -> RunStats:
-    """Accumulate one wave's fleet stats into a running total."""
-    into.epochs += s.epochs
-    into.tasks_executed += s.tasks_executed
-    into.lanes_launched += s.lanes_launched
-    into.total_forks += s.total_forks
-    into.map_launches += s.map_launches
-    into.map_elements += s.map_elements
-    into.map_lanes_launched += s.map_lanes_launched
-    into.peak_tv_slots = max(into.peak_tv_slots, s.peak_tv_slots)
-    into.dispatches += s.dispatches
-    into.scalar_transfers += s.scalar_transfers
-    into.ranges_coalesced += s.ranges_coalesced
-    into.hole_lanes_skipped += s.hole_lanes_skipped
-    for k, v in s.tasks_by_type.items():
-        into.tasks_by_type[k] = into.tasks_by_type.get(k, 0) + v
-    for k, v in s.lanes_by_type.items():
-        into.lanes_by_type[k] = into.lanes_by_type.get(k, 0) + v
-    return into
+    """Accumulate one wave's fleet stats into a running total.
+
+    Kept as an exported alias; the merge itself lives on
+    :meth:`~repro.core.scheduler.RunStats.merge` (one source of truth,
+    next to ``as_dict`` — the shared metric vocabulary).
+    """
+    return into.merge(s)
 
 
 class JobService:
@@ -108,6 +97,8 @@ class JobService:
         template_cache: Optional[WaveTemplateCache] = None,
         megakernel: bool = False,
         megakernel_impl: str = "auto",
+        metrics=None,
+        tracer=None,
     ):
         if engine not in ("host", "device"):
             raise ValueError(
@@ -158,12 +149,94 @@ class JobService:
         self.default_quota = default_quota
         self.collect_stats = collect_stats
         self._rank_fn = rank_fn
+        # observability (DESIGN.md §13), both opt-in: ``metrics`` is a
+        # MetricsRegistry fed with per-wave run series (via the collector
+        # adapter) and the per-tenant job lifecycle series below; ``tracer``
+        # receives epoch/chunk span timelines from the wave drivers
+        self.metrics = metrics
+        self.tracer = tracer
         self._ids = itertools.count()
         self._queue: List[JobHandle] = []
         self._handles: Dict[int, JobHandle] = {}
         self._mux: Optional[EpochMultiplexer] = None
         self._stats = RunStats()
         self._admit_ready = False  # a region was freed since the last scan
+
+    # ------------------------------------------------------- observability
+    def _stats_factory(self):
+        """Per-wave collector factory: the plain collector when metrics are
+        off (the disabled path allocates nothing extra), the registry
+        adapter around it when on."""
+        if self.metrics is None:
+            return None
+        from ..core.scheduler import NullStats, RunStatsCollector, \
+            resolve_policy
+        from ..obs.metrics import MetricsCollector
+
+        registry = self.metrics
+        driver = self.engine
+        dispatch = resolve_policy(self.dispatch).name
+        collect = self.collect_stats
+
+        def factory():
+            inner = RunStatsCollector() if collect else NullStats()
+            return MetricsCollector(
+                inner, registry, driver=driver, dispatch=dispatch,
+                app="service",
+            )
+
+        return factory
+
+    def _observe_completions(self, done: List[JobHandle]) -> None:
+        """Feed the per-tenant lifecycle series for newly finished jobs:
+        queue-wait and run-time latency histograms plus a completion
+        counter labeled by terminal status."""
+        if self.metrics is None or not done:
+            return
+        r = self.metrics
+        lab = ("tenant",)
+        qw = r.histogram(
+            "trees_job_queue_wait_seconds",
+            "seconds from submit to first co-scheduled epoch", lab,
+        )
+        rt = r.histogram(
+            "trees_job_run_seconds",
+            "seconds from first co-scheduled epoch to completion", lab,
+        )
+        fin = r.counter(
+            "trees_jobs_finished_total",
+            "jobs reaching a terminal status", ("tenant", "status"),
+        )
+        for h in done:
+            tenant = h.job.name or h.job.program.name
+            if h.queue_wait is not None:
+                qw.labels(tenant=tenant).observe(h.queue_wait)
+            if h.run_time is not None:
+                rt.labels(tenant=tenant).observe(h.run_time)
+            fin.labels(tenant=tenant, status=h.status.value).inc()
+        # completions follow the wave's compiled steps, so the trace-count
+        # gauge set at lookup time (pre-compile) is refreshed here with
+        # whatever the wave actually traced
+        r.gauge(
+            "trees_wave_template_traces",
+            "traced builder bodies across all wave templates",
+        ).labels().set(self.template_cache.trace_count)
+
+    def _observe_template_cache(self, hit: bool) -> None:
+        """Mirror the wave-template cache's reuse counters into the
+        registry (hit/miss per wave build, plus the monotone trace-count
+        gauge the compile-regression guard watches)."""
+        if self.metrics is None:
+            return
+        r = self.metrics
+        r.counter(
+            "trees_wave_template_lookups_total",
+            "wave-template cache lookups", ("outcome",),
+        ).labels(outcome="hit" if hit else "miss").inc()
+        r.gauge(
+            "trees_wave_template_traces",
+            "traced builder bodies across all wave templates",
+        ).labels().set(self.template_cache.trace_count)
 
     # ------------------------------------------------------------- submit
     def submit(
@@ -274,15 +347,18 @@ class JobService:
                     megakernel=self.megakernel,
                 )
                 tpl = self.template_cache.lookup(key)
+                self._observe_template_cache(hit=tpl is not None)
                 self._mux = DeviceMultiplexer(
                     wave,
                     dispatch=self.dispatch,
                     stack_depth=self.stack_depth,
                     chunk=self.chunk,
                     collect_stats=self.collect_stats,
+                    stats_factory=self._stats_factory(),
                     template=tpl,
                     megakernel=self.megakernel,
                     megakernel_impl=self.megakernel_impl,
+                    tracer=self.tracer,
                 )
                 if tpl is None:
                     self.template_cache.store(
@@ -301,7 +377,9 @@ class JobService:
                     pop_policy=self.pop_policy,
                     gang=self.gang,
                     collect_stats=self.collect_stats,
+                    stats_factory=self._stats_factory(),
                     rank_fn=self._rank_fn,
+                    tracer=self.tracer,
                 )
             self._admit_ready = False
         elif self._admit_ready and self._queue:
@@ -317,6 +395,7 @@ class JobService:
         done = self._mux.step()
         if done:
             self._admit_ready = True
+            self._observe_completions(done)
         return done
 
     def _take_wave(self) -> List[JobHandle]:

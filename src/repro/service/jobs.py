@@ -20,6 +20,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import time
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -91,17 +92,57 @@ class JobResult:
 
 @dataclasses.dataclass
 class JobHandle:
-    """Submission ticket: poll ``status``, read ``result`` when DONE."""
+    """Submission ticket: poll ``status``, read ``result`` when DONE.
+
+    Lifecycle timestamps (``time.monotonic`` seconds) are stamped at the
+    QUEUED -> RUNNING -> DONE/FAILED transitions, so per-tenant latency
+    splits into the two numbers a serving operator actually tunes:
+    ``queue_wait`` (admission backpressure — capacity vs quota pressure)
+    and ``run_time`` (co-scheduled execution).  The service feeds both into
+    the ``trees_job_queue_wait_seconds`` / ``trees_job_run_seconds``
+    histograms (DESIGN.md §13).
+    """
 
     job_id: int
     job: Job
     status: JobStatus = JobStatus.QUEUED
     result: Optional[JobResult] = None
     error: Optional[Exception] = None
+    submitted_at: float = dataclasses.field(
+        default_factory=time.monotonic
+    )
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
     @property
     def done(self) -> bool:
         return self.status in (JobStatus.DONE, JobStatus.FAILED)
+
+    def mark_running(self) -> None:
+        """Stamp the QUEUED -> RUNNING transition (idempotent: a device
+        wave reseeds regions across chunks, only the first admit counts)."""
+        self.status = JobStatus.RUNNING
+        if self.started_at is None:
+            self.started_at = time.monotonic()
+
+    def mark_finished(self) -> None:
+        """Stamp the terminal transition (status set by the caller)."""
+        if self.finished_at is None:
+            self.finished_at = time.monotonic()
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds spent QUEUED, once running (None before that)."""
+        if self.started_at is None:
+            return None
+        return self.started_at - self.submitted_at
+
+    @property
+    def run_time(self) -> Optional[float]:
+        """Seconds spent RUNNING, once finished (None before that)."""
+        if self.started_at is None or self.finished_at is None:
+            return None
+        return self.finished_at - self.started_at
 
 
 def validate_job(job: Job, capacity: int) -> None:

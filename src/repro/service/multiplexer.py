@@ -65,6 +65,7 @@ from ..core.engine import (
     _fresh_resident_carry,
 )
 from ..core.program import HeapVar, MapType, Program, TaskType, pack_args
+from ..obs.trace import NULL_TRACER
 from ..core.scheduler import (
     EpochScheduler,
     NullStats,
@@ -388,7 +389,7 @@ class _FleetBase:
                 self._heap[slot.prefix + k] = v
             sched = EpochScheduler(coalesce=self.coalesce)
             sched.reset(cen=1, start=slot.base, count=1)
-            h.status = JobStatus.RUNNING
+            h.mark_running()
             self._regions.append(
                 _Region(
                     slot=slot, handle=h, sched=sched, stats=JobStats(),
@@ -495,6 +496,7 @@ class _FleetBase:
         }
         r.handle.result = JobResult(heap=heap, value=value, stats=r.stats)
         r.handle.status = JobStatus.DONE
+        r.handle.mark_finished()
         return self._release(j)
 
     def _fail(self, j: int, reason: Optional[str] = None) -> JobHandle:
@@ -505,6 +507,7 @@ class _FleetBase:
                f"quota={r.active_quota}"
         )
         r.handle.status = JobStatus.FAILED
+        r.handle.mark_finished()
         return self._release(j)
 
     def _release(self, j: int) -> JobHandle:
@@ -546,6 +549,7 @@ class EpochMultiplexer(_FleetBase):
         rank_fn=None,
         pack_fn=None,
         seg_offsets_fn=None,
+        tracer=None,
     ):
         super().__init__(
             handles, capacity=capacity, coalesce=coalesce,
@@ -558,7 +562,9 @@ class EpochMultiplexer(_FleetBase):
             # fused fleets have many task types but type-homogeneous epochs
             # stay common, so idle types skip via lax.cond
             skip_idle_types=True,
+            tracer=tracer,
         )
+        self.tracer = self._loop.tracer
         self.policy = self._loop.policy
         self._rotor = 0
         self._global_epochs = 0
@@ -592,14 +598,27 @@ class EpochMultiplexer(_FleetBase):
         for d in pops.values():
             cen_np[d.start - lo : d.start - lo + d.count] = d.cen
 
-        (self._state, self._heap, summary, fetched, map_launches, launched,
-         by_type, shared_dispatches) = self._loop.run_epoch(
-            self._state, self._heap, self._arena, lo, hi - lo, cen_np, col,
-            self._readback,
-        )
-        job_forks, job_join, job_active, job_overflow, job_next, map_sched = (
-            fetched
-        )
+        tr = self.tracer
+        if tr.enabled:
+            tr.thread(1, "host-epochs")
+        with tr.span(
+            "epoch", "host", tid=1,
+            epoch=self._global_epochs, jobs=len(chosen), span=hi - lo,
+            mode=self.policy.name,
+        ) as sargs:
+            (self._state, self._heap, summary, fetched, map_launches,
+             launched, by_type, shared_dispatches) = self._loop.run_epoch(
+                self._state, self._heap, self._arena, lo, hi - lo, cen_np,
+                col, self._readback,
+            )
+            job_forks, job_join, job_active, job_overflow, job_next, \
+                map_sched = fetched
+            if tr.enabled:
+                n_act = int(job_active.sum())
+                sargs.update(
+                    launched=launched, active=n_act,
+                    util=n_act / max(1, launched),
+                )
         # the region cursors advance on device; only the readback copy above
         # crosses to the host
         self._arena = dataclasses.replace(self._arena, next=summary.job_next)
@@ -666,7 +685,7 @@ class EpochMultiplexer(_FleetBase):
         r.sched = sched
         r.stats = JobStats()
         r.active_quota = job.quota
-        handle.status = JobStatus.RUNNING
+        handle.mark_running()
 
 
 # --------------------------------------------------------------------------
@@ -743,6 +762,7 @@ class DeviceMultiplexer(_FleetBase):
         template=None,
         megakernel: bool = False,
         megakernel_impl: str = "auto",
+        tracer=None,
     ):
         super().__init__(
             handles, capacity=capacity,
@@ -791,7 +811,12 @@ class DeviceMultiplexer(_FleetBase):
                 megakernel=megakernel, megakernel_impl=megakernel_impl,
             )
         self.policy = self._loop.policy
+        # the mux owns its tracer rather than the (possibly template-shared)
+        # loop: resident spans are emitted at chunk boundaries on the host
+        # side, so a cached template can serve waves traced and untraced
+        self.tracer = tracer or NULL_TRACER
         self._carry = None
+        self._chunk_seq = 0
         self._ledger = _ChunkLedger(len(self._slots))
 
     @property
@@ -833,15 +858,38 @@ class DeviceMultiplexer(_FleetBase):
             limit = max_epochs
         else:
             limit = min(max_epochs, self._ledger.epochs + self.chunk)
-        carry = self._loop.run_chunk(self._carry, limit, n_regions=J)
-        self._carry = carry
-        # the bulk state stays on device; these references keep _finalize /
-        # _seed_region working on the current wave state
-        self._state, self._heap, self._arena = (
-            carry.state, carry.heap, carry.arena
-        )
-        s = self._loop.chunk_summary(carry)  # the chunk's one readback
-        self._account(s, riders)
+        tr = self.tracer
+        if tr.enabled:
+            tr.thread(2, "resident")
+        self._chunk_seq += 1
+        # one "chunk" span per resident loop invocation, with the chunk's
+        # single dispatch and readback as children — a wave of E epochs
+        # renders as exactly ⌈E/K⌉ readback spans, the V_inf cadence made
+        # countable.  Per-epoch detail inside the chunk is unobservable by
+        # design (no readbacks to hang spans on); the deltas the readback
+        # reveals are attached to the span's args instead.
+        with tr.span(
+            "chunk", "resident", tid=2,
+            seq=self._chunk_seq, jobs=len(riders), k=self.chunk,
+            mode=self.policy.name, megakernel=self._loop.megakernel,
+        ) as sargs:
+            with tr.span("dispatch", "resident", tid=2), tr.annotation(
+                "trees:resident_chunk"
+            ):
+                carry = self._loop.run_chunk(self._carry, limit, n_regions=J)
+            self._carry = carry
+            # the bulk state stays on device; these references keep
+            # _finalize / _seed_region working on the current wave state
+            self._state, self._heap, self._arena = (
+                carry.state, carry.heap, carry.arena
+            )
+            # the chunk's one readback (XLA launches are async: the dispatch
+            # span above is enqueue time, this wait is the real chunk)
+            with tr.span("readback", "resident", tid=2):
+                s = self._loop.chunk_summary(carry)
+            deltas = self._account(s, riders)
+            if tr.enabled:
+                sargs.update(deltas)
         return self._settle(s, riders, max_epochs)
 
     def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
@@ -853,9 +901,10 @@ class DeviceMultiplexer(_FleetBase):
         return out
 
     # --------------------------------------------------------- accounting
-    def _account(self, s: ChunkSummary, riders: List[int]) -> None:
+    def _account(self, s: ChunkSummary, riders: List[int]) -> Dict[str, int]:
         """Credit this chunk's delta to the fleet collector and to every
-        region that rode the chunk's fused launch."""
+        region that rode the chunk's fused launch; returns the delta terms
+        (the chunk span's trace args)."""
         col = self._col
         col.dispatch()
         col.transfer()
@@ -864,24 +913,26 @@ class DeviceMultiplexer(_FleetBase):
             self._regions[j].stats.shared_transfers += 1
         led = self._ledger
         d_epochs = s.n_epochs - led.epochs
+        d_holes = s.hole_lanes - led.hole_lanes
+        d_tasks = int((s.job_tasks - led.job_tasks).sum())
+        d_lanes = d_epochs * self.capacity - d_holes
         if d_epochs > 0:
             # every global epoch fused all regions live then; bulk O(1)
             # accounting from the readback, same ledger semantics as the
             # host driver's per-epoch calls.  The task launches were
             # span-bucketed on device, so launched lanes are the full-TV
-            # total minus the hole lanes the ladder skipped.
-            d_holes = s.hole_lanes - led.hole_lanes
+            # total minus the hole lanes the ladder skipped.  Holes are
+            # reported *before* the matching lanes() call (the pairing the
+            # metrics adapter's hole-fraction fold relies on — the host
+            # gather path keeps the same order).
             col.epoch(
                 s.n_epochs,
                 n_ranges=int((s.job_epochs - led.job_epochs).sum()),
                 n=d_epochs,
             )
-            col.lanes(
-                int((s.job_tasks - led.job_tasks).sum()),
-                d_epochs * self.capacity - d_holes, None,
-            )
-            col.forks(int((s.job_forks - led.job_forks).sum()))
             col.holes_skipped(d_holes)
+            col.lanes(d_tasks, d_lanes, None)
+            col.forks(int((s.job_forks - led.job_forks).sum()))
         bases = np.asarray([sl.base for sl in self._slots])
         col.tv_peak(int((s.job_peak + bases).max()))
         d_maps = s.map_launches - led.map_launches
@@ -898,6 +949,10 @@ class DeviceMultiplexer(_FleetBase):
         led.map_elements = s.map_elements
         led.map_lanes = s.map_lanes
         led.hole_lanes = s.hole_lanes
+        return {
+            "epochs": d_epochs, "tasks": d_tasks, "lanes": d_lanes,
+            "holes": d_holes, "maps": d_maps,
+        }
 
     def _settle(self, s: ChunkSummary, riders: List[int],
                 max_epochs: int) -> List[JobHandle]:
@@ -975,4 +1030,4 @@ class DeviceMultiplexer(_FleetBase):
         r.sched = None
         r.stats = JobStats()
         r.active_quota = job.quota
-        handle.status = JobStatus.RUNNING
+        handle.mark_running()
