@@ -24,9 +24,19 @@ run (``--only``/``--smoke``) can still be checked against a full
 baseline.  An *empty* intersection is an error — it means the two
 artifacts describe disjoint row sets and "pass" would be vacuous.
 
+* **Self-tuning rows are gated against their own static envelope.**  Rows
+  produced under ``--dispatch auto`` / ``--chunk auto`` embed the static
+  modes' wall-clock measured *in the same run* as ``us_best_static`` /
+  ``us_worst_static``; ``--auto`` asserts, one-sided and fuzzy
+  (``--auto-factor``), that the controller's row is no slower than the
+  worst static choice — the "never lose" contract of DESIGN.md §14.
+  This gate is self-contained (no baseline artifact needed), so the
+  baseline argument is optional when ``--auto`` is given.
+
 Usage::
 
     python benchmarks/check.py FRESH.json BASELINE.json [options]
+    python benchmarks/check.py FRESH.json --auto            # envelope only
 
 Exit status 0 = within tolerance, 1 = drift, 2 = unusable inputs.
 """
@@ -145,6 +155,67 @@ def check_row(
     return problems
 
 
+def run_auto_check(
+    fresh_path: str,
+    auto_factor: float = 1.25,
+    out=sys.stdout,
+) -> int:
+    """Gate self-tuning rows against the static envelope they embed.
+
+    A row participates when its derived string carries
+    ``us_worst_static`` (emitted only by ``--dispatch auto`` /
+    ``--chunk auto`` runs, measured in the same process on the same
+    machine — so the comparison needs no cross-run fuzz, only a noise
+    factor).  One-sided: auto being *faster* than every static mode can
+    never fail.
+    """
+    try:
+        fresh = load(fresh_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check: {e}", file=out)
+        return 2
+
+    gated = 0
+    problems: List[str] = []
+    for r in fresh["rows"]:
+        d = parse_derived(r.get("derived", ""))
+        if "us_worst_static" not in d:
+            continue
+        gated += 1
+        name = r["name"]
+        f_us = float(r.get("us_per_call", 0.0))
+        worst = float(d["us_worst_static"])
+        best = float(d.get("us_best_static", worst))
+        if worst > 0 and f_us > worst * auto_factor:
+            problems.append(
+                f"{name}: auto us_per_call {f_us:.1f} is slower than the "
+                f"worst static mode {worst:.1f} (x{auto_factor:g} "
+                f"tolerance) — the controller is losing"
+            )
+        vs_best = f_us / best if best > 0 else float("inf")
+        print(
+            f"  auto {name}: {f_us:.1f}us vs static "
+            f"[{best:.1f}, {worst:.1f}]us ({vs_best:.2f}x best)",
+            file=out,
+        )
+    if gated == 0:
+        print(
+            f"check: {fresh_path} has no us_worst_static rows — was it "
+            "run with --dispatch auto / --chunk auto?",
+            file=out,
+        )
+        return 2
+    print(f"check: {gated} auto row(s) gated against their static "
+          f"envelope (tolerance {auto_factor:g}x worst)", file=out)
+    for p in problems:
+        print(f"  FAIL {p}", file=out)
+    if problems:
+        print(f"check: {len(problems)} failure(s)", file=out)
+        return 1
+    print("check: auto OK", file=out)
+    return 0
+
+
 def run_check(
     fresh_path: str,
     base_path: str,
@@ -212,7 +283,11 @@ def run_check(
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
     ap.add_argument("fresh", help="JSON artifact from the run under test")
-    ap.add_argument("baseline", help="committed BENCH_*.json to gate against")
+    ap.add_argument(
+        "baseline", nargs="?", default=None,
+        help="committed BENCH_*.json to gate against (optional with "
+        "--auto: the envelope gate is self-contained)",
+    )
     ap.add_argument(
         "--time-factor", type=float, default=25.0,
         help="fail when us_per_call exceeds baseline by this factor "
@@ -227,13 +302,30 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--ignore-time", action="store_true",
         help="gate only on deterministic counters, not wall-clock",
     )
-    args = ap.parse_args(argv)
-    return run_check(
-        args.fresh, args.baseline,
-        time_factor=args.time_factor,
-        strict=args.strict,
-        ignore_time=args.ignore_time,
+    ap.add_argument(
+        "--auto", action="store_true",
+        help="also gate self-tuning rows against the static envelope "
+        "they embed (us_per_call <= us_worst_static * --auto-factor)",
     )
+    ap.add_argument(
+        "--auto-factor", type=float, default=1.25,
+        help="one-sided noise tolerance for the --auto envelope gate "
+        "(default %(default)s)",
+    )
+    args = ap.parse_args(argv)
+    if args.baseline is None and not args.auto:
+        ap.error("baseline artifact required unless --auto is given")
+    rc = 0
+    if args.baseline is not None:
+        rc = run_check(
+            args.fresh, args.baseline,
+            time_factor=args.time_factor,
+            strict=args.strict,
+            ignore_time=args.ignore_time,
+        )
+    if args.auto:
+        rc = max(rc, run_auto_check(args.fresh, args.auto_factor))
+    return rc
 
 
 if __name__ == "__main__":

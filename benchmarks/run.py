@@ -20,8 +20,13 @@ import numpy as np
 ROWS: List[tuple] = []
 
 # set by main() from --dispatch; every HostEngine below follows it so the
-# whole harness can be A/B'd masked vs compacted (§5.4 contiguity)
+# whole harness can be A/B'd masked vs compacted (§5.4 contiguity) or run
+# under the self-tuning controller ("auto", DESIGN.md §14)
 DISPATCH = "masked"
+
+# set by main() from --chunk: "auto" runs the device_service rows with the
+# adaptive chunk-size controller and emits the *_kauto rows (DESIGN.md §14)
+CHUNK = None
 
 # set by main() from --smoke: shrink every group to a CI-sized subset so the
 # workflow's benchmarks step can guard the rows against bit-rot in minutes
@@ -304,11 +309,14 @@ def bench_dispatch():
     from repro.apps import get_case
     from repro.core import HostEngine
 
+    statics = ("masked", "compacted", "gather")
     for name in ("fib", "nqueens", "bfs"):
         case = get_case(name)
         stats = {}
         times = {}
-        for policy in ("masked", "compacted", "gather"):
+        decisions = {}
+        policies = statics + ("auto",) if DISPATCH == "auto" else statics
+        for policy in policies:
             eng = HostEngine(
                 case.program, capacity=case.capacity, dispatch=policy
             )
@@ -321,10 +329,26 @@ def bench_dispatch():
                 ),
                 repeats=1,
             )
+            if policy == "auto":
+                decisions = dict(eng.controller.decisions)
         sm, sc, sg = stats["masked"], stats["compacted"], stats["gather"]
         occ = ";".join(
             f"occ_{t}={o:.2f}" for t, o in sorted(sc.occupancy_by_type.items())
         )
+        # under --dispatch auto: the controller's per-epoch decision
+        # counts, the auto leg's own clock, and the static envelope it is
+        # gated against (check.py --auto: us_per_call <= worst static)
+        auto = ""
+        if DISPATCH == "auto":
+            static_us = {p: times[p] * 1e6 for p in statics}
+            dec = ";".join(
+                f"auto_{m}={c}" for m, c in sorted(decisions.items())
+            )
+            auto = (
+                f";util_auto={stats['auto'].utilization:.2f};"
+                f"us_best_static={min(static_us.values()):.1f};"
+                f"us_worst_static={max(static_us.values()):.1f};{dec}"
+            )
         row(
             f"dispatch_{name}_{DISPATCH}", times[DISPATCH],
             f"util_masked={sm.utilization:.2f};"
@@ -339,7 +363,7 @@ def bench_dispatch():
             f"hole_lanes_skipped={sg.hole_lanes_skipped};"
             f"vinf_masked_us={vinf_seconds(sm)*1e6:.0f};"
             f"vinf_compacted_us={vinf_seconds(sc)*1e6:.0f};"
-            f"vinf_gather_us={vinf_seconds(sg)*1e6:.0f};{occ}",
+            f"vinf_gather_us={vinf_seconds(sg)*1e6:.0f};{occ}{auto}",
             stats=stats[DISPATCH],
         )
 
@@ -511,6 +535,7 @@ def bench_device_service():
         )
 
         # the K-ladder: readback cadence between host-mux and resident
+        k_times = {}
         for K in ladder:
             cache = WaveTemplateCache()
             ks = run_svc(fleet, "device", chunk=K, cache=cache).stats()
@@ -520,6 +545,7 @@ def bench_device_service():
                 ),
                 repeats=1,
             )
+            k_times[K] = float(t_k)
             expected = 1 if K is None else math.ceil(ks.epochs / K)
             row(
                 f"device_service_{fname}_k{'inf' if K is None else K}",
@@ -531,6 +557,42 @@ def bench_device_service():
                 f"map_lanes_wasted={ks.map_lanes_wasted};"
                 f"hole_lanes_skipped={ks.hole_lanes_skipped}",
                 stats=ks,
+            )
+
+        if CHUNK == "auto":
+            # self-tuning endpoint: dispatch="auto" + chunk="auto" through
+            # the service front door, timed against the static K-ladder's
+            # envelope (check.py --auto gates us_per_call <= worst static;
+            # the acceptance target is within 10% of the best)
+            cache = WaveTemplateCache()
+            holder = {}
+
+            def run_auto(f=fleet, c=cache):
+                holder["svc"] = run_svc(
+                    f, "device", chunk="auto", cache=c, dispatch="auto"
+                )
+
+            run_auto()
+            as_ = holder["svc"].stats()
+            t_a = _time(run_auto, repeats=1)
+            svc_a = holder["svc"]
+            kctl, dctl = svc_a.chunk_controller, svc_a.controller
+            dec = ";".join(
+                f"auto_{m}={c}"
+                for m, c in sorted(dctl.decisions.items())
+            ) if dctl is not None else ""
+            row(
+                f"device_service_{fname}_kauto", t_a,
+                f"jobs={len(fleet)};chunk=auto;epochs={as_.epochs};"
+                f"readbacks={as_.scalar_transfers};"
+                f"dispatches={as_.dispatches};"
+                f"k_final={kctl.current()};k_widened={kctl.widened};"
+                f"k_shrunk={kctl.shrunk};{dec};"
+                f"template_hits={cache.hits};"
+                f"us_best_static={min(k_times.values())*1e6:.1f};"
+                f"us_worst_static={max(k_times.values())*1e6:.1f};"
+                f"hole_lanes_skipped={as_.hole_lanes_skipped}",
+                stats=as_,
             )
 
         if not MEGAKERNEL:
@@ -688,6 +750,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
     payload = {
         "schema": "trees-bench-v2",
         "dispatch": dispatch,
+        "chunk": CHUNK,
         "smoke": smoke,
         "megakernel": MEGAKERNEL,
         "groups": sorted(groups),
@@ -699,15 +762,21 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
 
 
 def main(argv=None) -> None:
-    global DISPATCH, SMOKE, MEGAKERNEL, TRACER, METRICS
+    global DISPATCH, CHUNK, SMOKE, MEGAKERNEL, TRACER, METRICS
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--dispatch", choices=("masked", "compacted", "gather"),
+        "--dispatch", choices=("masked", "compacted", "gather", "auto"),
         default="masked",
         help="HostEngine dispatch policy for every benchmark "
         "(masked = seed full-width vmap; compacted = §5.4 dense "
         "per-type launches; gather = §11 dense-frontier pack, hole "
-        "lanes skipped)",
+        "lanes skipped; auto = §14 telemetry-driven per-epoch choice)",
+    )
+    ap.add_argument(
+        "--chunk", choices=("auto",), default=None,
+        help="device_service chunk policy: 'auto' adds the *_kauto rows "
+        "(adaptive-K controller, DESIGN.md §14) next to the static "
+        "K-ladder",
     )
     ap.add_argument(
         "--only", nargs="+", choices=sorted(BENCHES), default=None,
@@ -728,7 +797,7 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_7.json for full runs, off for --only subset or --smoke "
+        "to BENCH_8.json for full runs, off for --only subset or --smoke "
         "runs (pass a path to force, '' to disable)",
     )
     ap.add_argument(
@@ -743,6 +812,7 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
     DISPATCH = args.dispatch
+    CHUNK = args.chunk
     SMOKE = args.smoke
     MEGAKERNEL = args.megakernel
     if args.trace:
@@ -765,7 +835,7 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_7.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_8.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
     if args.trace:

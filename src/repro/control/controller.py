@@ -1,0 +1,407 @@
+"""Self-tuning controllers: telemetry in, dispatch/chunk decisions out.
+
+This module closes the runtime's first feedback loop (ROADMAP
+"self-tuning runtime", DESIGN.md §14): the §13 telemetry substrate
+measures hole fraction, lane utilization and queue heat, and nothing
+consumed them until now.  Two independent controllers turn those series
+into online decisions:
+
+* :class:`DispatchController` — per fused epoch, pick ``masked`` /
+  ``compacted`` / ``gather`` from the observed frontier fill (rolling
+  window of ``active / full_span`` readbacks) priced against a
+  :class:`CostModel`.  All three modes are bit-identical by construction
+  (DESIGN.md §5.4/§11), so the choice only moves *overhead*, never
+  results — which is what makes an online controller safe to ship
+  inside the epoch loop.
+* :class:`ChunkController` — between resident chunks, adapt the epoch
+  bound K: widen while no completions surface (each readback that finds
+  nothing finished was a wasted device->host sync), shrink when the job
+  queue runs hot (``trees_job_queue_wait_seconds`` — a long K starves
+  admission at the next boundary).  ``run_chunk``'s epoch bound is a
+  dynamic argument of one compiled template per (regions, capacity,
+  depth), so K adaptation re-enters the cached template and can never
+  retrace.
+
+The :class:`CostModel` defaults to the roofline constants in
+``benchmarks/roofline.py`` (V_inf critical-path prices); a one-shot
+:meth:`CostModel.calibrated` micro-probe measures this host's actual
+dispatch round-trip and per-lane slope instead, cached process-wide (and
+optionally on disk) so steady state never pays probing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from ..obs.metrics import RollingWindow
+
+# Roofline constants are the calibration fallback: pulled from
+# benchmarks/roofline.py when importable (the benchmarks/ directory is not
+# a package on sys.path in library use), else the same literals.
+_DISPATCH_LATENCY_S = 40e-6
+_TRANSFER_LATENCY_S = 15e-6
+try:  # pragma: no cover - import path depends on caller's sys.path
+    from benchmarks.roofline import DISPATCH_LATENCY_S as _DISPATCH_LATENCY_S
+    from benchmarks.roofline import TRANSFER_LATENCY_S as _TRANSFER_LATENCY_S
+except Exception:
+    pass
+
+AUTO_MODES = ("masked", "compacted", "gather")
+RESIDENT_AUTO_MODES = ("masked", "gather")
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Power-of-2 launch rounding (mirror of scheduler.launch_bucket,
+    kept dependency-free so the cost model imports nothing heavy)."""
+    if n <= minimum:
+        return minimum
+    return 1 << (int(n) - 1).bit_length()
+
+
+# process-wide calibration cache: one probe per backend per process
+_CALIBRATION_CACHE: Dict[str, "CostModel"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-epoch critical-path price of each dispatch mode (seconds).
+
+    ``dispatch_s``/``transfer_s`` are the V_inf launch/readback latencies
+    (roofline defaults); ``lane_s`` the marginal phase-2/3 cost of one
+    launched task lane; ``pack_lane_s`` the per-lane cost of the rank/
+    scan pack pass; ``per_type_s`` the per-live-type overhead of the §5.4
+    compacted step's dense slices.  With the default symmetric lane
+    costs, compacted is dominated by gather (same pack price, extra
+    per-type slices) — DESIGN.md §14 spells out when to bias it back in.
+    """
+
+    dispatch_s: float = _DISPATCH_LATENCY_S
+    transfer_s: float = _TRANSFER_LATENCY_S
+    lane_s: float = 60e-9
+    pack_lane_s: float = 8e-9
+    per_type_s: float = 2e-6
+    source: str = "roofline"
+
+    # ------------------------------------------------------------ pricing
+    def epoch_costs(self, span_bucket: int, fill: float,
+                    n_types: int = 1) -> Dict[str, float]:
+        """Predicted cost of one fused epoch under each mode.
+
+        ``span_bucket`` is the full-frontier launch width P (what masked
+        pays); ``fill`` the predicted active fraction of that span.  The
+        gather/compacted prediction launches the rung covering the
+        predicted live count, and both pay the extra pack dispatch + count
+        readback (DESIGN.md §11: ``2*dispatch + transfer`` vs masked's
+        ``dispatch + transfer``).
+        """
+        P = max(1, int(span_bucket))
+        fill = min(1.0, max(0.0, float(fill)))
+        pred_active = max(1, int(round(fill * P)))
+        dense = _bucket(pred_active)
+        masked = self.dispatch_s + self.transfer_s + P * self.lane_s
+        pack = self.dispatch_s + self.transfer_s + P * self.pack_lane_s
+        gather = masked - (P - min(P, dense)) * self.lane_s + pack
+        compacted = gather + max(1, n_types) * self.per_type_s
+        return {"masked": masked, "compacted": compacted, "gather": gather}
+
+    # -------------------------------------------------------- calibration
+    @classmethod
+    def calibrated(cls, capacity: int = 4096, repeats: int = 5,
+                   path: Optional[str] = None) -> "CostModel":
+        """One-shot micro-probe of this host's actual constants.
+
+        Measures (a) the jitted no-op dispatch + ``device_get`` round trip
+        (splits it 2:1 into dispatch vs transfer, matching the roofline
+        ratio), (b) the per-lane slope of an elementwise step at two
+        widths, and (c) the per-lane cost of ``lane_pack``.  The result is
+        cached per backend for the life of the process — and persisted to
+        ``path`` (JSON) when given — so a steady-state controller never
+        probes again ("one-shot" is the contract, not a rate limit).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        backend = jax.default_backend()
+        cached = _CALIBRATION_CACHE.get(backend)
+        if cached is not None:
+            return cached
+        if path is not None:
+            loaded = cls.load(path, backend=backend)
+            if loaded is not None:
+                _CALIBRATION_CACHE[backend] = loaded
+                return loaded
+
+        def _min_time(fn, *args) -> float:
+            fn(*args)  # compile outside the timed reps
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        # (a) dispatch + scalar readback round trip
+        noop = jax.jit(lambda x: x + 1)
+        zero = jnp.zeros((), jnp.int32)
+        rtt = _min_time(lambda x: jax.device_get(noop(x)), zero)
+        dispatch_s = rtt * (2.0 / 3.0)
+        transfer_s = rtt * (1.0 / 3.0)
+
+        # (b) per-lane slope of a masked-step-shaped elementwise pass
+        def _lanes(v):
+            return (v * 3 + 1) % 7
+
+        small = jnp.zeros((max(64, capacity // 8),), jnp.int32)
+        large = jnp.zeros((capacity,), jnp.int32)
+        stepper = jax.jit(_lanes)
+        t_small = _min_time(stepper, small)
+        t_large = _min_time(stepper, large)
+        dlanes = large.shape[0] - small.shape[0]
+        lane_s = max(1e-10, (t_large - t_small) / max(1, dlanes))
+
+        # (c) per-lane cost of the pack pass
+        from ..kernels.ops import lane_pack
+
+        mask = jnp.arange(capacity) % 2 == 0
+        packer = jax.jit(lambda m: lane_pack(m)[0])
+        pack_lane_s = max(1e-10, _min_time(packer, mask) / capacity)
+
+        model = cls(dispatch_s=dispatch_s, transfer_s=transfer_s,
+                    lane_s=lane_s, pack_lane_s=pack_lane_s,
+                    source=f"calibrated:{backend}")
+        _CALIBRATION_CACHE[backend] = model
+        if path is not None:
+            model.save(path, backend=backend)
+        return model
+
+    def save(self, path: str, backend: str = "any") -> None:
+        payload = dataclasses.asdict(self)
+        payload["backend"] = backend
+        pathlib.Path(path).write_text(json.dumps(payload, indent=2))
+
+    @classmethod
+    def load(cls, path: str, backend: str = "any") -> Optional["CostModel"]:
+        p = pathlib.Path(path)
+        if not p.exists():
+            return None
+        try:
+            payload = json.loads(p.read_text())
+        except (OSError, ValueError):
+            return None
+        if payload.pop("backend", "any") not in ("any", backend):
+            return None
+        try:
+            return cls(**payload)
+        except TypeError:
+            return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One per-epoch dispatch decision, with its evidence attached.
+
+    ``fill`` is the rolling-window estimate of ``active / full_span``
+    (None until the first readback lands); ``hole_fraction`` its
+    complement; ``costs`` the model's per-mode price in seconds;
+    ``reason`` is "no-data" (cold start -> masked), "cost" (argmin) or
+    "hysteresis" (kept the previous mode inside the switching band).
+    """
+
+    mode: str
+    fill: Optional[float]
+    costs: Dict[str, float]
+    reason: str
+    span_bucket: int
+
+    @property
+    def hole_fraction(self) -> Optional[float]:
+        return None if self.fill is None else max(0.0, 1.0 - self.fill)
+
+
+class DispatchController:
+    """Per-epoch dispatch selection from observed frontier fill.
+
+    The observation loop is driver-fed: after each epoch readback the
+    driver reports ``observe(n_active, full_span_bucket)`` — active lanes
+    against the *full* frontier width, not the launched width, so a
+    gather epoch that launches a dense rung still measures the true hole
+    fraction it is hiding.  ``choose`` then prices the next epoch's
+    modes at the rolling fill estimate and picks the argmin, with a
+    hysteresis band so marginal cost differences cannot flap the mode
+    (every flap risks a fresh jit specialization at a new (mode, width)
+    key).  Cold start is masked: the cheapest critical path when nothing
+    is known, and the mode whose readback seeds the window.
+    """
+
+    def __init__(self, cost: Optional[CostModel] = None,
+                 modes: Sequence[str] = AUTO_MODES,
+                 n_types: int = 1, window: int = 32,
+                 hysteresis: float = 0.15,
+                 registry=None, driver: str = "host", app: str = "?"):
+        for m in modes:
+            if m not in AUTO_MODES:
+                raise ValueError(f"unknown auto dispatch mode {m!r}")
+        self.cost = cost or CostModel()
+        self.modes = tuple(modes)
+        self.n_types = max(1, int(n_types))
+        self.window = RollingWindow(window)
+        self.hysteresis = float(hysteresis)
+        self.decisions: Dict[str, int] = {m: 0 for m in self.modes}
+        self.last_decision: Optional[Decision] = None
+        self._last_mode: Optional[str] = None
+        self._decided, self._hole_gauge, self._fill_gauge = None, None, None
+        if registry is not None:
+            self.bind_registry(registry, driver=driver, app=app)
+
+    # ------------------------------------------------------------ metrics
+    def bind_registry(self, registry, driver: str = "host",
+                      app: str = "?") -> None:
+        """Attach a MetricsRegistry: decisions land as labeled counters
+        (``trees_controller_decisions_total{mode=...}``) and the observed
+        hole fraction as a gauge, so adaptivity is auditable in the same
+        export as the series it consumed."""
+        fam = registry.counter(
+            "trees_controller_decisions_total",
+            "dispatch=auto per-epoch mode picks",
+            ("driver", "app", "mode"),
+        )
+        self._decided = {
+            m: fam.labels(driver=driver, app=app, mode=m) for m in self.modes
+        }
+        self._hole_gauge = registry.gauge(
+            "trees_controller_hole_fraction",
+            "rolling observed hole fraction feeding dispatch=auto",
+            ("driver", "app"),
+        ).labels(driver=driver, app=app)
+        self._fill_gauge = registry.gauge(
+            "trees_controller_fill",
+            "rolling observed frontier fill feeding dispatch=auto",
+            ("driver", "app"),
+        ).labels(driver=driver, app=app)
+
+    # -------------------------------------------------------- observation
+    def observe(self, n_active: int, full_span: int) -> None:
+        """Feed one readback: active lanes vs the full frontier width."""
+        if full_span <= 0:
+            return
+        fill = min(1.0, max(0.0, n_active / full_span))
+        self.window.add(fill)
+        if self._fill_gauge is not None:
+            self._fill_gauge.set(fill)
+            self._hole_gauge.set(1.0 - fill)
+
+    # ----------------------------------------------------------- decision
+    def choose(self, span_bucket: int) -> Decision:
+        fill = self.window.mean()
+        if fill is None:
+            d = Decision("masked", None, {}, "no-data", span_bucket)
+        else:
+            costs = self.cost.epoch_costs(span_bucket, fill, self.n_types)
+            costs = {m: costs[m] for m in self.modes}
+            best = min(costs, key=costs.get)
+            mode, reason = best, "cost"
+            prev = self._last_mode
+            if (prev is not None and prev != best and prev in costs
+                    and costs[prev] <= costs[best] * (1.0 + self.hysteresis)):
+                mode, reason = prev, "hysteresis"
+            d = Decision(mode, fill, costs, reason, span_bucket)
+        self._last_mode = d.mode
+        self.last_decision = d
+        self.decisions[d.mode] = self.decisions.get(d.mode, 0) + 1
+        if self._decided is not None and d.mode in self._decided:
+            self._decided[d.mode].inc()
+        return d
+
+    def choose_resident(self, capacity: int) -> Decision:
+        """Pick the mode a resident (traced) loop bakes in: masked vs
+        gather only (§5.4 compacted stays host-side), decided once per
+        template rather than per epoch — the wave-template cache makes the
+        choice sticky per wave shape, so identical consecutive waves can
+        never retrace on a flipped decision."""
+        saved = self.modes
+        try:
+            self.modes = tuple(m for m in RESIDENT_AUTO_MODES
+                               if m in saved) or RESIDENT_AUTO_MODES
+            return self.choose(capacity)
+        finally:
+            self.modes = saved
+
+
+class ChunkController:
+    """Adaptive resident chunk size K (tentpole decision (b)).
+
+    Policy, evaluated once per chunk boundary — the only place the
+    resident path surfaces information without paying an extra readback:
+
+    * **shrink** (halve, floor ``k_min``) when the queue is hot: jobs are
+      waiting and the oldest has waited longer than ``hot_wait_s`` (the
+      same signal exported as ``trees_job_queue_wait_seconds``).  A long
+      K starves admission — completions and free regions only surface at
+      boundaries.
+    * **widen** (double, cap ``k_max``) while a boundary surfaces no
+      completions and nothing is queued: that readback bought nothing,
+      so the next chunk should amortize more epochs per sync.
+    * otherwise hold: completions are flowing at the current cadence.
+
+    K feeds ``run_chunk``'s dynamic epoch bound, so every value re-enters
+    the one compiled template per (regions, capacity, depth) — adaptation
+    is retrace-free by construction, and the zero-retrace test guards it.
+    """
+
+    def __init__(self, k_init: int = 1, k_min: int = 1, k_max: int = 4096,
+                 hot_wait_s: float = 0.05, registry=None, app: str = "?"):
+        if not (1 <= k_min <= k_init <= k_max):
+            raise ValueError(
+                f"need 1 <= k_min <= k_init <= k_max, got "
+                f"{k_min}/{k_init}/{k_max}"
+            )
+        self.k = int(k_init)
+        self.k_min = int(k_min)
+        self.k_max = int(k_max)
+        self.hot_wait_s = float(hot_wait_s)
+        self.widened = 0
+        self.shrunk = 0
+        self._k_gauge = self._adapt = None
+        if registry is not None:
+            self.bind_registry(registry, app=app)
+
+    def bind_registry(self, registry, app: str = "?") -> None:
+        self._k_gauge = registry.gauge(
+            "trees_controller_chunk_k", "adaptive resident chunk size K",
+            ("app",),
+        ).labels(app=app)
+        self._k_gauge.set(self.k)
+        fam = registry.counter(
+            "trees_controller_chunk_adaptations_total",
+            "chunk=auto boundary decisions", ("app", "action"),
+        )
+        self._adapt = {a: fam.labels(app=app, action=a)
+                       for a in ("widen", "shrink", "hold")}
+
+    def current(self) -> int:
+        return self.k
+
+    def observe(self, completions: int, queued: int = 0,
+                oldest_wait_s: float = 0.0) -> int:
+        """Feed one chunk boundary; returns the K for the next chunk."""
+        hot = queued > 0 and oldest_wait_s >= self.hot_wait_s
+        if hot and self.k > self.k_min:
+            self.k = max(self.k_min, self.k // 2)
+            self.shrunk += 1
+            action = "shrink"
+        elif completions == 0 and not hot and self.k < self.k_max:
+            self.k = min(self.k_max, self.k * 2)
+            self.widened += 1
+            action = "widen"
+        else:
+            action = "hold"
+        if self._k_gauge is not None:
+            self._k_gauge.set(self.k)
+            self._adapt[action].inc()
+        return self.k
+
+
+QueueProbe = Callable[[], Tuple[int, float]]

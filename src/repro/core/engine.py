@@ -96,6 +96,25 @@ _COMPACTED_RESIDENT_MSG = (
 )
 
 
+def resolve_resident_dispatch(dispatch, controller, capacity: int):
+    """Resolve ``dispatch="auto"`` for a resident (traced) loop.
+
+    A resident template bakes its mode in at trace time, so the decision
+    is made once per template, masked-vs-gather only (§5.4 compacted
+    stays host-side).  With no controller (or a cold observation window)
+    the answer is masked — the cheapest critical path when nothing is
+    known.  The wave-template cache makes the outcome sticky per wave
+    shape: the service reuses a cached template (and its baked mode)
+    before ever consulting the controller, so identical consecutive
+    waves can never retrace on a flipped decision.
+    """
+    if resolve_policy(dispatch).name != "auto":
+        return dispatch
+    if controller is None:
+        return "masked"
+    return controller.choose_resident(capacity).mode
+
+
 def _default_rank_fn(types, active, n_types):
     from ..kernels import ops as kops
 
@@ -365,10 +384,21 @@ class EpochLoop:
         megakernel: bool = False,
         megakernel_impl: str = "auto",
         tracer=None,
+        controller=None,
     ):
         self.program = program
         self.policy: DispatchPolicy = resolve_policy(dispatch)
         self.task_names = [t.name for t in program.tasks]
+        # dispatch="auto": a DispatchController picks the mode per fused
+        # epoch (DESIGN.md §14).  Safe because all three modes are
+        # bit-identical; the hook below only moves critical-path overhead.
+        if self.policy.name == "auto" and controller is None:
+            from ..control.controller import DispatchController
+
+            controller = DispatchController(n_types=len(program.tasks))
+        self.controller = controller
+        self.last_decision = None
+        self.last_span_bucket = 0
         self._rank_fn = rank_fn or _default_rank_fn
         self._pack_fn = pack_fn or _default_pack_fn
         self._fork_offsets_fn = fork_offsets_fn
@@ -613,7 +643,27 @@ class EpochLoop:
         dispatches = 1
         by_type = None
         tr = self.tracer
-        if self.policy.name == "compacted":
+        # decision hook: under dispatch="auto" the controller prices this
+        # epoch's modes at the rolling observed fill and picks one; static
+        # policies pass through.  The decision (and its evidence) rides the
+        # dispatch span args so adaptivity is auditable in perfetto.
+        mode = self.policy.name
+        decision = None
+        if mode == "auto":
+            decision = self.controller.choose(P)
+            mode = decision.mode
+        self.last_decision = decision
+        self.last_span_bucket = P
+        dargs = {}
+        if decision is not None:
+            dargs["auto_reason"] = decision.reason
+            if decision.hole_fraction is not None:
+                dargs["auto_hole_fraction"] = round(decision.hole_fraction, 4)
+            if decision.costs:
+                dargs["auto_cost_us"] = {
+                    m: round(c * 1e6, 2) for m, c in decision.costs.items()
+                }
+        if mode == "compacted":
             # the pack span includes its count readback (the §5.4 extra
             # V_inf dispatch + transfer), so its duration is that term's
             # real critical-path cost
@@ -630,6 +680,7 @@ class EpochLoop:
             )
             with tr.span(
                 "dispatch", "host", mode="compacted", launched=launched,
+                **dargs,
             ), tr.annotation("trees:epoch_step"):
                 state, heap, summary, map_launches = self.compacted_step(
                     P, buckets
@@ -638,7 +689,7 @@ class EpochLoop:
                     jnp.asarray(toffs, jnp.int32),
                     jnp.asarray(counts, jnp.int32),
                 )
-        elif self.policy.name == "gather":
+        elif mode == "gather":
             with tr.span("pack", "host", mode="gather", width=P):
                 perm, count_dev = self.gather_pass(P)(
                     state, start_j, count_j, cen_j
@@ -650,6 +701,7 @@ class EpochLoop:
             G = self.policy.epoch_bucket(n_sched)
             with tr.span(
                 "dispatch", "host", mode="gather", launched=G, holes=P - G,
+                **dargs,
             ), tr.annotation("trees:epoch_step"):
                 state, heap, summary, map_launches = self.gather_step(P, G)(
                     state, heap, arena, start_j, perm
@@ -658,7 +710,7 @@ class EpochLoop:
             col.holes_skipped(P - G)
         else:
             with tr.span(
-                "dispatch", "host", mode="masked", launched=P,
+                "dispatch", "host", mode="masked", launched=P, **dargs,
             ), tr.annotation("trees:epoch_step"):
                 state, heap, summary, map_launches = self.masked_step(P)(
                     state, heap, arena, start_j, count_j, cen_j
@@ -915,10 +967,19 @@ class EpochLoop:
             # traced max over the scheduled lanes' live domains: each bucket
             # width traces its own lax.switch branch (shapes stay static),
             # runtime pays only the selected one — instead of always
-            # MapType.max_domain.  Residual padding waste stays accounted.
+            # MapType.max_domain.  The *lane* axis is bucketed the same way
+            # (DESIGN.md §14): the stable gather pack's permutation gathers
+            # the scheduled lanes into `rung(count)` payload rows, so a
+            # 4096-lane TV with 3 scheduled map lanes launches an 8-row
+            # payload, not 4096 rows.  Heap writes land through the same
+            # per-element indices in the same stable lane order, so packing
+            # the rows is bit-identical.  Residual padding waste (lane rung
+            # x domain rung) stays accounted in ``map_lanes``.
             map_ct = carry.map_launches
             map_el = carry.map_elements
             map_ln = carry.map_lanes
+            lane_widths = _span_width_ladder(capacity)
+            larr = jnp.asarray(lane_widths, jnp.int32)
             for ml in map_launches:
                 mt = program.maps[ml.map_id]
                 if mt.max_domain <= 0:
@@ -941,24 +1002,44 @@ class EpochLoop:
                     jnp.searchsorted(warr, dmax, side="left"),
                     0, len(widths) - 1,
                 )
+                lperm, lcount = pack_fn(ml.where)
+                lidx = jnp.clip(
+                    jnp.searchsorted(larr, lcount, side="left"),
+                    0, len(lane_widths) - 1,
+                )
+
+                def make_lane_branch(L: int, _ml=ml):
+                    def lane_branch(h):
+                        rows = lperm[:L]
+                        valid = rows >= 0
+                        crows = jnp.clip(rows, 0, capacity - 1)
+                        w_p = valid & _ml.where[crows]
+                        argi_p = _ml.argi[crows]
+                        argf_p = _ml.argf[crows]
+                        inner = [
+                            lambda hh, _D=D: tvm.run_map_payload(
+                                program, hh, _ml.map_id, w_p, argi_p,
+                                argf_p, _D,
+                            )
+                            for D in widths
+                        ]
+                        if len(inner) == 1:
+                            return inner[0](h)
+                        return jax.lax.switch(bidx, inner, h)
+
+                    return lane_branch
+
                 branches = [lambda h: h] + [
-                    lambda h, _ml=ml, _D=D: tvm.run_map_payload(
-                        program, h, _ml.map_id, _ml.where, _ml.argi,
-                        _ml.argf, _D,
-                    )
-                    for D in widths
+                    make_lane_branch(L) for L in lane_widths
                 ]
                 heap = jax.lax.switch(
-                    jnp.where(fired, bidx + 1, 0), branches, heap
+                    jnp.where(fired, lidx + 1, 0), branches, heap
                 )
                 fire_i = fired.astype(jnp.int32)
                 map_ct = map_ct + fire_i
                 map_el = _hilo_add(map_el, live_dom.sum().astype(jnp.int32))
                 map_ln = _hilo_add(
-                    map_ln,
-                    fire_i
-                    * jnp.asarray(int(ml.where.shape[0]), jnp.int32)
-                    * warr[bidx],
+                    map_ln, fire_i * larr[lidx] * warr[bidx]
                 )
 
             return ResidentCarry(
@@ -1080,6 +1161,7 @@ class HostEngine:
         pack_fn: Optional[Callable] = None,
         stats_factory: Optional[Callable[[], StatsCollector]] = None,
         tracer=None,
+        controller=None,
     ):
         self.program = program
         self.capacity = capacity
@@ -1090,10 +1172,11 @@ class HostEngine:
             program, dispatch,
             rank_fn=rank_fn, pack_fn=pack_fn,
             fork_offsets_fn=fork_offsets_fn, donate=donate,
-            tracer=tracer,
+            tracer=tracer, controller=controller,
         )
         self.tracer = self.loop.tracer
         self.policy = self.loop.policy
+        self.controller = self.loop.controller
 
     def _collector(self) -> StatsCollector:
         if self._stats_factory is not None:
@@ -1163,10 +1246,19 @@ class HostEngine:
 
                 if map_sched:
                     heap = self.loop.maps.run(map_launches, heap, col)
+                # close the feedback loop: the readback's active count vs
+                # the *full* frontier width seeds the next epoch's decision
+                if self.loop.controller is not None:
+                    self.loop.controller.observe(
+                        int(n_active), self.loop.last_span_bucket
+                    )
                 if tr.enabled:
+                    dec = self.loop.last_decision
                     sargs.update(
                         launched=launched, active=int(n_active),
                         util=int(n_active) / max(1, launched),
+                        **({"mode": dec.mode, "auto_reason": dec.reason}
+                           if dec is not None else {}),
                     )
 
             col.epoch(d.cen, d.n_ranges)
@@ -1203,10 +1295,15 @@ class DeviceEngine:
         megakernel: bool = False,
         megakernel_impl: str = "auto",
         tracer=None,
+        controller=None,
     ):
         self.program = program
         self.capacity = capacity
         self.stack_depth = stack_depth
+        # a resident loop bakes its dispatch mode into the traced template,
+        # so "auto" resolves *here*, once, via the controller (masked on a
+        # cold window) — never per epoch inside the while_loop
+        dispatch = resolve_resident_dispatch(dispatch, controller, capacity)
         if resolve_policy(dispatch).name not in ("masked", "gather"):
             raise ValueError(_COMPACTED_RESIDENT_MSG)
         self.loop = EpochLoop(program, dispatch,

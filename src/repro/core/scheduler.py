@@ -104,7 +104,14 @@ COMPACTED = DispatchPolicy("compacted")
 # the cross-region hole lanes of masked *fused* epochs.  Pays the same
 # extra V_inf dispatch + count transfer as the compaction pass.
 GATHER = DispatchPolicy("gather")
-_POLICIES = {p.name: p for p in (MASKED, COMPACTED, GATHER)}
+# auto: not a traced strategy of its own — a per-epoch *selection* among
+# the three above, made by control.DispatchController from the observed
+# hole fraction priced against the pack-dispatch cost (DESIGN.md §14).
+# Safe because every mode is bit-identical by construction; only the
+# critical-path overhead moves.  Bucket params mirror the static modes so
+# the full-frontier width P is the same whichever mode the epoch lands on.
+AUTO = DispatchPolicy("auto")
+_POLICIES = {p.name: p for p in (MASKED, COMPACTED, GATHER, AUTO)}
 
 
 def resolve_policy(dispatch) -> DispatchPolicy:

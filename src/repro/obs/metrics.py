@@ -28,6 +28,7 @@ import bisect
 import dataclasses
 import math
 import threading
+from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from ..core.scheduler import RunStats, StatsCollector
@@ -45,6 +46,41 @@ RATIO_BUCKETS = (0.01, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8,
 
 class MetricsError(ValueError):
     pass
+
+
+class RollingWindow:
+    """Bounded recent-value series with O(1) mean.
+
+    The registry's counters/histograms are cumulative, built for export;
+    a controller needs the *recent* value of a ratio (frontier fill, hole
+    fraction) without differencing registry state, so it reads through
+    one of these instead (``control/controller.py`` is the consumer).
+    """
+
+    __slots__ = ("_items", "_sum")
+
+    def __init__(self, size: int):
+        if size < 1:
+            raise MetricsError(f"window size must be >= 1, got {size}")
+        self._items: deque = deque(maxlen=size)
+        self._sum = 0.0
+
+    def add(self, v: float) -> None:
+        if len(self._items) == self._items.maxlen:
+            self._sum -= self._items[0]
+        self._items.append(float(v))
+        self._sum += float(v)
+
+    def mean(self) -> Optional[float]:
+        if not self._items:
+            return None
+        return self._sum / len(self._items)
+
+    def last(self) -> Optional[float]:
+        return self._items[-1] if self._items else None
+
+    def __len__(self) -> int:
+        return len(self._items)
 
 
 def _check_labels(labelnames: Tuple[str, ...], labels: Dict[str, str]):

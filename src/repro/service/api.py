@@ -107,10 +107,12 @@ class JobService:
         if engine == "device":
             from ..core.scheduler import resolve_policy
 
-            if resolve_policy(dispatch).name not in ("masked", "gather"):
+            if resolve_policy(dispatch).name not in (
+                "masked", "gather", "auto"
+            ):
                 raise ValueError(
-                    "engine='device' supports dispatch='masked' or "
-                    "'gather' (resident launch shapes are fixed at trace "
+                    "engine='device' supports dispatch='masked', 'gather' "
+                    "or 'auto' (resident launch shapes are fixed at trace "
                     "time; compacted sizes launches from runtime "
                     "populations and is host-only)"
                 )
@@ -119,7 +121,13 @@ class JobService:
                     "engine='device' runs every live region each epoch "
                     "(fuse_all); gang/pop_policy are host-engine options"
                 )
-            if chunk is not None and chunk < 1:
+            if chunk == "auto":
+                pass  # adaptive K: a ChunkController owns the cadence
+            elif isinstance(chunk, str):
+                raise ValueError(
+                    f"chunk must be >= 1, None, or 'auto'; got {chunk!r}"
+                )
+            elif chunk is not None and chunk < 1:
                 raise ValueError(f"chunk must be >= 1 or None, got {chunk}")
         elif chunk is not None:
             raise ValueError(
@@ -155,6 +163,29 @@ class JobService:
         # receives epoch/chunk span timelines from the wave drivers
         self.metrics = metrics
         self.tracer = tracer
+        # self-tuning (DESIGN.md §14): the controllers live on the service
+        # so what they learn carries across waves.  The dispatch controller
+        # is shared by every wave's loop (host: per-epoch decisions;
+        # device: one resolution per new wave shape, sticky via the
+        # template cache); the chunk controller owns K across waves.
+        from ..core.scheduler import resolve_policy as _rp
+
+        self.controller = None
+        if _rp(dispatch).name == "auto":
+            from ..control.controller import DispatchController
+
+            self.controller = DispatchController()
+            if metrics is not None:
+                self.controller.bind_registry(
+                    metrics, driver=engine, app="service"
+                )
+        self.chunk_controller = None
+        if chunk == "auto":
+            from ..control.controller import ChunkController
+
+            self.chunk_controller = ChunkController()
+            if metrics is not None:
+                self.chunk_controller.bind_registry(metrics, app="service")
         self._ids = itertools.count()
         self._queue: List[JobHandle] = []
         self._handles: Dict[int, JobHandle] = {}
@@ -317,6 +348,20 @@ class JobService:
         return self.template_cache.trace_count
 
     # ------------------------------------------------------------ internal
+    def _queue_probe(self):
+        """Queue-heat signal for the chunk controller: (queued jobs, the
+        oldest queued job's wait in seconds) — the same quantity exported
+        as ``trees_job_queue_wait_seconds`` once the job finally runs."""
+        if not self._queue:
+            return (0, 0.0)
+        import time
+
+        now = time.monotonic()
+        return (
+            len(self._queue),
+            max(now - h.submitted_at for h in self._queue),
+        )
+
     def _pending(self) -> bool:
         return bool(self._queue) or (self._mux is not None and self._mux.live)
 
@@ -339,18 +384,37 @@ class JobService:
                 wave = [wave[i] for i in order]
                 from ..core.scheduler import resolve_policy
 
+                jobs = [h.job for h in wave]
+                cap = sum(h.job.quota for h in wave)
+                dispatch_name = resolve_policy(self.dispatch).name
+                if dispatch_name == "auto":
+                    # sticky per wave shape: a cached template's baked mode
+                    # wins before the controller is ever consulted, so an
+                    # identical consecutive wave can never retrace on a
+                    # flipped decision; only a *new* shape pays a decision
+                    for cand in ("masked", "gather"):
+                        k_c = wave_template_key(
+                            jobs, cap, self.stack_depth, self.chunk,
+                            dispatch=cand, megakernel=self.megakernel,
+                        )
+                        if self.template_cache.peek(k_c) is not None:
+                            dispatch_name = cand
+                            break
+                    else:
+                        dispatch_name = self.controller.choose_resident(
+                            cap
+                        ).mode
                 key = wave_template_key(
-                    [h.job for h in wave],
-                    sum(h.job.quota for h in wave),
+                    jobs, cap,
                     self.stack_depth, self.chunk,
-                    dispatch=resolve_policy(self.dispatch).name,
+                    dispatch=dispatch_name,
                     megakernel=self.megakernel,
                 )
                 tpl = self.template_cache.lookup(key)
                 self._observe_template_cache(hit=tpl is not None)
                 self._mux = DeviceMultiplexer(
                     wave,
-                    dispatch=self.dispatch,
+                    dispatch=dispatch_name,
                     stack_depth=self.stack_depth,
                     chunk=self.chunk,
                     collect_stats=self.collect_stats,
@@ -359,6 +423,9 @@ class JobService:
                     megakernel=self.megakernel,
                     megakernel_impl=self.megakernel_impl,
                     tracer=self.tracer,
+                    controller=self.controller,
+                    chunk_controller=self.chunk_controller,
+                    queue_probe=self._queue_probe,
                 )
                 if tpl is None:
                     self.template_cache.store(
@@ -380,6 +447,7 @@ class JobService:
                     stats_factory=self._stats_factory(),
                     rank_fn=self._rank_fn,
                     tracer=self.tracer,
+                    controller=self.controller,
                 )
             self._admit_ready = False
         elif self._admit_ready and self._queue:

@@ -204,7 +204,7 @@ def canonical_wave_order(jobs: Sequence[Job]) -> Tuple[int, ...]:
 
 
 def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
-                      chunk: Optional[int], dispatch: str = "masked",
+                      chunk, dispatch: str = "masked",
                       megakernel: bool = False) -> Tuple:
     """Cache key for one wave shape: everything that determines the traced
     chunk loop — member structure, quota layout, TV capacity, stack depth,
@@ -212,7 +212,15 @@ def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
     step ladders into the loop), and the chunk driver (while_loop vs the
     Pallas megakernel).  Members are keyed in :func:`canonical_wave_order`
     (not submission order), so permuted waves of the same members share one
-    template instead of retracing."""
+    template instead of retracing.
+
+    ``chunk`` is an int, ``None`` (fully resident), or the literal string
+    ``"auto"``: adaptive-K waves all key to one slot because K only ever
+    feeds the compiled loop's *dynamic* epoch bound — whatever K the
+    controller picks, the same template serves it, so K adaptation can
+    never retrace.  ``dispatch`` must be a *resolved* mode here ("auto" is
+    resolved by the service before keying, sticky per wave shape via
+    :meth:`WaveTemplateCache.peek`)."""
     order = canonical_wave_order(jobs)
     return (
         tuple(jobs[i].program.structural_hash() for i in order),
@@ -257,6 +265,12 @@ class WaveTemplateCache:
         self._entries.move_to_end(key)
         self.hits += 1
         return t
+
+    def peek(self, key: Tuple) -> Optional[WaveTemplate]:
+        """Non-counting probe: dispatch="auto" checks which resolved-mode
+        template already exists for a wave shape (the sticky-decision
+        rule) without skewing the hit/miss counters or the LRU order."""
+        return self._entries.get(key)
 
     def store(self, template: WaveTemplate) -> None:
         self._entries[template.key] = template

@@ -63,7 +63,9 @@ from ..core.engine import (
     EpochLoop,
     _COMPACTED_RESIDENT_MSG,
     _fresh_resident_carry,
+    resolve_resident_dispatch,
 )
+from ..control.controller import ChunkController
 from ..core.program import HeapVar, MapType, Program, TaskType, pack_args
 from ..obs.trace import NULL_TRACER
 from ..core.scheduler import (
@@ -550,6 +552,7 @@ class EpochMultiplexer(_FleetBase):
         pack_fn=None,
         seg_offsets_fn=None,
         tracer=None,
+        controller=None,
     ):
         super().__init__(
             handles, capacity=capacity, coalesce=coalesce,
@@ -562,10 +565,11 @@ class EpochMultiplexer(_FleetBase):
             # fused fleets have many task types but type-homogeneous epochs
             # stay common, so idle types skip via lax.cond
             skip_idle_types=True,
-            tracer=tracer,
+            tracer=tracer, controller=controller,
         )
         self.tracer = self._loop.tracer
         self.policy = self._loop.policy
+        self.controller = self._loop.controller
         self._rotor = 0
         self._global_epochs = 0
 
@@ -613,11 +617,20 @@ class EpochMultiplexer(_FleetBase):
             )
             job_forks, job_join, job_active, job_overflow, job_next, \
                 map_sched = fetched
+            # dispatch="auto" feedback: the fused readback's active count
+            # vs the full frontier width seeds the next epoch's decision
+            if self._loop.controller is not None:
+                self._loop.controller.observe(
+                    int(job_active.sum()), self._loop.last_span_bucket
+                )
             if tr.enabled:
                 n_act = int(job_active.sum())
+                dec = self._loop.last_decision
                 sargs.update(
                     launched=launched, active=n_act,
                     util=n_act / max(1, launched),
+                    **({"mode": dec.mode, "auto_reason": dec.reason}
+                       if dec is not None else {}),
                 )
         # the region cursors advance on device; only the readback copy above
         # crosses to the host
@@ -755,7 +768,7 @@ class DeviceMultiplexer(_FleetBase):
         capacity: Optional[int] = None,
         dispatch: Any = "masked",
         stack_depth: int = 1 << 10,
-        chunk: Optional[int] = None,
+        chunk: Any = None,
         collect_stats: bool = True,
         stats_factory=None,
         seg_offsets_fn=None,
@@ -763,16 +776,39 @@ class DeviceMultiplexer(_FleetBase):
         megakernel: bool = False,
         megakernel_impl: str = "auto",
         tracer=None,
+        controller=None,
+        chunk_controller=None,
+        queue_probe=None,
     ):
         super().__init__(
             handles, capacity=capacity,
             collect_stats=collect_stats, stats_factory=stats_factory,
             template=template,
         )
+        # dispatch="auto" resolves once, against the controller's rolling
+        # window, before anything is traced: a resident loop bakes its mode
+        # in (DESIGN.md §14).  The service layer makes the outcome sticky
+        # per wave shape through the template cache.
+        self._dispatch_controller = controller
+        dispatch = resolve_resident_dispatch(
+            dispatch, controller, self.capacity
+        )
         policy = resolve_policy(dispatch)
         if policy.name not in ("masked", "gather"):
             raise ValueError(_COMPACTED_RESIDENT_MSG)
-        if chunk is not None and chunk < 1:
+        # chunk="auto": a ChunkController owns K, re-decided at every chunk
+        # boundary from completions + queue heat.  K only ever feeds the
+        # dynamic `limit` argument of the one compiled chunk template, so
+        # adaptation is retrace-free by construction.
+        self._kctl = None
+        self._queue_probe = queue_probe
+        if chunk == "auto":
+            self._kctl = chunk_controller or ChunkController()
+        elif isinstance(chunk, str):
+            raise ValueError(
+                f"chunk must be an int >= 1, None, or 'auto'; got {chunk!r}"
+            )
+        elif chunk is not None and chunk < 1:
             raise ValueError(
                 "chunk must be >= 1 epoch, or None for a fully resident "
                 f"wave; got {chunk}"
@@ -857,7 +893,8 @@ class DeviceMultiplexer(_FleetBase):
         if self.chunk is None:
             limit = max_epochs
         else:
-            limit = min(max_epochs, self._ledger.epochs + self.chunk)
+            k = self._kctl.current() if self._kctl is not None else self.chunk
+            limit = min(max_epochs, self._ledger.epochs + k)
         tr = self.tracer
         if tr.enabled:
             tr.thread(2, "resident")
@@ -870,7 +907,9 @@ class DeviceMultiplexer(_FleetBase):
         # reveals are attached to the span's args instead.
         with tr.span(
             "chunk", "resident", tid=2,
-            seq=self._chunk_seq, jobs=len(riders), k=self.chunk,
+            seq=self._chunk_seq, jobs=len(riders),
+            k=(self._kctl.current() if self._kctl is not None
+               else self.chunk),
             mode=self.policy.name, megakernel=self._loop.megakernel,
         ) as sargs:
             with tr.span("dispatch", "resident", tid=2), tr.annotation(
@@ -890,7 +929,22 @@ class DeviceMultiplexer(_FleetBase):
             deltas = self._account(s, riders)
             if tr.enabled:
                 sargs.update(deltas)
-        return self._settle(s, riders, max_epochs)
+        # dispatch-controller feedback: the chunk is the finest observable
+        # grain on this driver — one fill observation per boundary, against
+        # the full-TV width (tasks / (lanes + holes))
+        if self._dispatch_controller is not None and deltas["epochs"] > 0:
+            self._dispatch_controller.observe(
+                deltas["tasks"], deltas["lanes"] + deltas["holes"]
+            )
+        done = self._settle(s, riders, max_epochs)
+        # chunk-controller feedback: widen K while boundaries surface no
+        # completions, shrink while the job queue runs hot
+        if self._kctl is not None:
+            queued, oldest = (0, 0.0)
+            if self._queue_probe is not None:
+                queued, oldest = self._queue_probe()
+            self._kctl.observe(len(done), queued, oldest)
+        return done
 
     def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
         """Drive the wave to completion, chunk by chunk; API parity with

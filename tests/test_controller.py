@@ -1,0 +1,229 @@
+"""Forced-regime tests for the self-tuning controllers (DESIGN.md §14).
+
+The controllers are deliberately plain host objects — decisions are pure
+functions of the observation window and the cost model — so every regime
+the ISSUE names is testable without timing flakiness: an all-holes fleet
+must steer dispatch to gather, a dense fleet must hold masked, a hot job
+queue must shrink K, and a completion-free wave must widen it.  End-to-end
+regime tests then drive real engines and assert the exported decision
+counters, and the calibration cache is pinned one-shot.
+"""
+import numpy as np
+import pytest
+
+from repro.control import (
+    ChunkController,
+    CostModel,
+    Decision,
+    DispatchController,
+    RollingWindow,
+)
+from repro.obs.metrics import MetricsRegistry
+
+
+# ------------------------------------------------------------ rolling window
+def test_rolling_window_mean_and_eviction():
+    w = RollingWindow(3)
+    assert w.mean() is None and w.last() is None and len(w) == 0
+    for v in (1.0, 2.0, 3.0):
+        w.add(v)
+    assert w.mean() == pytest.approx(2.0)
+    w.add(7.0)  # evicts the 1.0
+    assert w.mean() == pytest.approx(4.0)
+    assert w.last() == 7.0 and len(w) == 3
+
+
+# --------------------------------------------------------------- cost model
+def test_cost_model_prices_the_design_11_trade():
+    m = CostModel()
+    dense = m.epoch_costs(4096, fill=1.0)
+    sparse = m.epoch_costs(4096, fill=0.01)
+    # a full frontier never benefits from paying the pack pass
+    assert dense["masked"] < dense["gather"] < dense["compacted"]
+    # gather launches the rung over the live count; masked pays every lane
+    # (the pack's extra dispatch+transfer only amortizes on wide spans:
+    # at the default constants break-even is near P ~ 1k, DESIGN.md §14)
+    assert sparse["gather"] < sparse["masked"]
+    # monotone in span: wider frontiers cost more under every mode
+    narrow = m.epoch_costs(1024, fill=0.01)
+    assert all(sparse[k] >= narrow[k] for k in narrow)
+
+
+def test_dispatch_controller_all_holes_fleet_goes_gather():
+    ctl = DispatchController()
+    for _ in range(4):  # nearly-empty frontier: 8 live lanes in 4096
+        ctl.observe(8, 4096)
+    d = ctl.choose(4096)
+    assert d.mode == "gather"
+    assert d.reason == "cost"
+    assert d.hole_fraction == pytest.approx(1.0 - 8 / 4096)
+    assert d.costs["gather"] < d.costs["masked"]
+
+
+def test_dispatch_controller_dense_fleet_stays_masked():
+    ctl = DispatchController()
+    for _ in range(4):
+        ctl.observe(4096, 4096)
+    d = ctl.choose(4096)
+    assert d.mode == "masked"
+    assert d.costs["masked"] < d.costs["gather"]
+
+
+def test_dispatch_controller_cold_start_is_masked():
+    ctl = DispatchController()
+    d = ctl.choose(1024)
+    assert d.mode == "masked" and d.reason == "no-data" and d.fill is None
+
+
+def test_dispatch_controller_hysteresis_resists_flapping():
+    # park the controller on gather, then feed a fill right at the
+    # break-even point: the marginal cost difference must not flip it
+    ctl = DispatchController(hysteresis=10.0)  # huge band: never switch
+    for _ in range(8):
+        ctl.observe(8, 4096)
+    assert ctl.choose(4096).mode == "gather"
+    for _ in range(32):
+        ctl.observe(4096, 4096)
+    d = ctl.choose(4096)
+    assert d.mode == "gather" and d.reason == "hysteresis"
+
+
+def test_dispatch_controller_resident_never_picks_compacted():
+    ctl = DispatchController()
+    # fill chosen so compacted would win only if it were allowed: force
+    # gather-favourable data and confirm the resident modes are the menu
+    for _ in range(4):
+        ctl.observe(2, 4096)
+    d = ctl.choose_resident(4096)
+    assert d.mode in ("masked", "gather")
+    # and the per-epoch menu is restored afterwards
+    assert ctl.modes == ("masked", "compacted", "gather")
+
+
+def test_decision_counters_exported():
+    reg = MetricsRegistry()
+    ctl = DispatchController(registry=reg, driver="host", app="t")
+    for _ in range(4):
+        ctl.observe(8, 4096)
+    ctl.choose(4096)
+    assert reg.value("trees_controller_decisions_total",
+                     driver="host", app="t", mode="gather") == 1
+    assert reg.value("trees_controller_hole_fraction",
+                     driver="host", app="t") == pytest.approx(1 - 8 / 4096)
+
+
+# ----------------------------------------------------------- chunk controller
+def test_chunk_controller_widens_while_no_completions():
+    ctl = ChunkController(k_init=1, k_max=64)
+    ks = [ctl.observe(completions=0) for _ in range(8)]
+    assert ks[:6] == [2, 4, 8, 16, 32, 64]
+    assert ctl.current() == 64  # capped
+    assert ctl.widened == 6
+
+
+def test_chunk_controller_hot_queue_shrinks():
+    ctl = ChunkController(k_init=16, hot_wait_s=0.05)
+    # completions flowing but the queue is hot: K halves
+    k = ctl.observe(completions=2, queued=3, oldest_wait_s=1.0)
+    assert k == 8 and ctl.shrunk == 1
+    # still hot: halves again, floored at k_min
+    for _ in range(8):
+        k = ctl.observe(completions=0, queued=3, oldest_wait_s=1.0)
+    assert k == 1
+    # a cool queue with completions holds
+    assert ctl.observe(completions=1, queued=0) == 1
+
+
+def test_chunk_controller_cool_queue_below_threshold_does_not_shrink():
+    ctl = ChunkController(k_init=8, hot_wait_s=0.05)
+    k = ctl.observe(completions=1, queued=2, oldest_wait_s=0.001)
+    assert k == 8 and ctl.shrunk == 0
+
+
+def test_chunk_controller_registry_gauges():
+    reg = MetricsRegistry()
+    ctl = ChunkController(k_init=2, registry=reg, app="t")
+    ctl.observe(completions=0)
+    assert reg.value("trees_controller_chunk_k", app="t") == 4
+    assert reg.value("trees_controller_chunk_adaptations_total",
+                     app="t", action="widen") == 1
+
+
+def test_chunk_controller_validates_bounds():
+    with pytest.raises(ValueError):
+        ChunkController(k_init=0)
+    with pytest.raises(ValueError):
+        ChunkController(k_init=8, k_max=4)
+
+
+# ------------------------------------------------------------- calibration
+def test_calibration_is_one_shot_per_process(tmp_path):
+    import repro.control.controller as cc
+
+    saved = dict(cc._CALIBRATION_CACHE)
+    cc._CALIBRATION_CACHE.clear()
+    try:
+        p = str(tmp_path / "cal.json")
+        m1 = CostModel.calibrated(capacity=256, repeats=1, path=p)
+        assert m1.source.startswith("calibrated:")
+        assert m1.dispatch_s > 0 and m1.lane_s > 0
+        # second call must come from the process cache (same object)
+        assert CostModel.calibrated(capacity=256, repeats=1) is m1
+        # and the persisted file round-trips for a fresh process
+        cc._CALIBRATION_CACHE.clear()
+        import jax
+
+        m2 = CostModel.load(p, backend=jax.default_backend())
+        assert m2 is not None
+        assert m2.dispatch_s == pytest.approx(m1.dispatch_s)
+    finally:
+        cc._CALIBRATION_CACHE.clear()
+        cc._CALIBRATION_CACHE.update(saved)
+
+
+# --------------------------------------------------- end-to-end forced regimes
+def test_host_auto_sparse_fleet_decides_gather_end_to_end():
+    """An all-holes fused fleet (two tiny tenants at opposite ends of a
+    wide TV) must steer the host multiplexer's per-epoch decisions to
+    gather once the window sees the holes — and stay bit-identical to the
+    masked reference."""
+    from repro.apps import get_case
+    from repro.service import EpochMultiplexer, Job, JobHandle
+
+    def handles():
+        return [
+            JobHandle(i, Job(c.program, c.initial,
+                             heap_init=dict(c.heap_init),
+                             quota=4096, name=f"{c.name}#{i}"))
+            for i, c in enumerate((get_case("fib"), get_case("fib")))
+        ]
+
+    ref = handles()
+    EpochMultiplexer(ref, dispatch="masked").run()
+
+    ctl = DispatchController()
+    got = handles()
+    EpochMultiplexer(got, dispatch="auto", controller=ctl).run()
+    assert sum(ctl.decisions.values()) > 0
+    assert ctl.decisions["gather"] > 0, (
+        f"sparse fused fleet should pick gather, got {ctl.decisions}"
+    )
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(r.result.value), np.asarray(g.result.value)
+        )
+        assert r.result.stats.epochs == g.result.stats.epochs
+
+
+def test_host_auto_solo_dense_stays_masked_end_to_end():
+    """A solo HostEngine frontier is span-sized (no cross-region holes):
+    the controller must keep paying the single masked launch."""
+    from repro.apps import get_case
+    from repro.core.engine import HostEngine
+
+    case = get_case("fib")
+    ctl = DispatchController()
+    eng = HostEngine(case.program, capacity=case.capacity,
+                     dispatch="auto", controller=ctl)
+    eng.run(case.initial, heap_init=dict(case.heap_init))
+    assert ctl.decisions["masked"] == sum(ctl.decisions.values())

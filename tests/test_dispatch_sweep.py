@@ -78,7 +78,7 @@ def test_all_dispatch_modes_and_chunks_bit_identical(members):
     EpochMultiplexer(handles, dispatch="masked").run()
     ref = _snapshot(handles)
 
-    for dispatch in ("compacted", "gather"):
+    for dispatch in ("compacted", "gather", "auto"):
         handles = _handles(fleet)
         EpochMultiplexer(handles, dispatch=dispatch).run()
         _assert_same(ref, _snapshot(handles), f"host:{dispatch}")
@@ -104,6 +104,20 @@ def test_all_dispatch_modes_and_chunks_bit_identical(members):
                     f"device:mega={megakernel}:{dispatch}:K={chunk}",
                 )
 
+    # the self-tuning axis: dispatch="auto" + chunk="auto" through the
+    # service front door must land on the same bits as every static cell
+    svc = JobService(
+        capacity=sum(q for _, q in fleet), max_jobs=len(fleet),
+        engine="device", dispatch="auto", chunk="auto",
+    )
+    handles = [
+        svc.submit(c.program, c.initial, heap_init=dict(c.heap_init),
+                   quota=q, name=f"auto#{i}")
+        for i, (c, q) in enumerate(fleet)
+    ]
+    svc.drain()
+    _assert_same(ref, _snapshot(handles), "device:auto:K=auto")
+
 
 def test_megakernel_waves_zero_retrace():
     """Identical consecutive megakernel waves reuse one compiled template:
@@ -124,6 +138,36 @@ def test_megakernel_waves_zero_retrace():
     svc.drain()
     assert svc.trace_count == traced, (
         "identical consecutive megakernel waves must not retrace"
+    )
+    assert svc.template_cache.hits >= 1
+    for h, n in zip(first + second, (8, 9, 8, 9)):
+        assert int(np.asarray(h.result.value)[0, 0]) == fib.fib_reference(n)
+
+
+def test_chunk_auto_zero_retrace_under_k_adaptation():
+    """chunk="auto" adapts K between boundaries (the controller widens
+    while completions don't surface), yet every K re-enters the same
+    compiled chunk template: ``trace_count`` stays flat after the first
+    wave — K only ever feeds the loop's *dynamic* epoch bound — and an
+    identical consecutive auto wave stays flat too."""
+    from repro.apps import fib
+
+    svc = JobService(capacity=512, max_jobs=2, engine="device",
+                     dispatch="auto", chunk="auto")
+    first = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256)
+             for n in (8, 9)]
+    svc.drain()
+    assert svc.chunk_controller.widened > 0, (
+        "a wave with no early completions must widen K"
+    )
+    traced = svc.trace_count
+    assert traced > 0
+    second = [svc.submit(fib.PROGRAM, fib.initial(n), quota=256)
+              for n in (8, 9)]
+    svc.drain()
+    assert svc.trace_count == traced, (
+        "K adaptation and an identical consecutive auto wave must not "
+        "retrace"
     )
     assert svc.template_cache.hits >= 1
     for h, n in zip(first + second, (8, 9, 8, 9)):
