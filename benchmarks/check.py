@@ -33,10 +33,17 @@ artifacts describe disjoint row sets and "pass" would be vacuous.
   This gate is self-contained (no baseline artifact needed), so the
   baseline argument is optional when ``--auto`` is given.
 
+* **Sharded ladders are gated on conservation.**  ``--shards`` checks
+  every ``sharded_service_*_pP`` row's pipe-joined per-shard counters:
+  they must sum to the row's own merged stats and match the ``p1`` row's
+  totals exactly — sharding moves work between shards, never changes it
+  (DESIGN.md §15).  Self-contained, like ``--auto``.
+
 Usage::
 
     python benchmarks/check.py FRESH.json BASELINE.json [options]
     python benchmarks/check.py FRESH.json --auto            # envelope only
+    python benchmarks/check.py FRESH.json --shards          # conservation
 
 Exit status 0 = within tolerance, 1 = drift, 2 = unusable inputs.
 """
@@ -216,6 +223,91 @@ def run_auto_check(
     return 0
 
 
+def run_shards_check(fresh_path: str, out=sys.stdout) -> int:
+    """Gate the sharded scale-out ladder's conservation invariant.
+
+    Self-contained (no baseline needed): for every
+    ``sharded_service_<fleet>_pP`` row, the pipe-joined per-shard counters
+    (``shard_tasks``/``shard_forks``) must have exactly P entries and sum
+    to the row's own merged stats — and every row of one fleet's ladder
+    must agree with the ``p1`` row's totals *exactly*.  Sharding (and
+    chunk-boundary rebalancing) moves work between shards; it must never
+    create, lose, or re-execute any of it (DESIGN.md §15).
+    """
+    try:
+        fresh = load(fresh_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check: {e}", file=out)
+        return 2
+
+    ladder = re.compile(r"^(sharded_service_.+)_p(\d+)$")
+    groups: Dict[str, Dict[int, dict]] = {}
+    for r in fresh["rows"]:
+        m = ladder.match(r["name"])
+        if m:
+            groups.setdefault(m.group(1), {})[int(m.group(2))] = r
+    if not groups:
+        print(
+            f"check: {fresh_path} has no sharded_service_*_p<P> rows — "
+            "was it run with --shards?",
+            file=out,
+        )
+        return 2
+
+    problems: List[str] = []
+    gated = 0
+    for gname in sorted(groups):
+        rows = groups[gname]
+        totals: Dict[str, Dict[int, int]] = {"tasks": {}, "forks": {}}
+        for p in sorted(rows):
+            r = rows[p]
+            d = parse_derived(r.get("derived", ""))
+            stats = r.get("stats") or {}
+            for key, stat_key, tot in (
+                ("shard_tasks", "tasks_executed", "tasks"),
+                ("shard_forks", "total_forks", "forks"),
+            ):
+                if key not in d:
+                    problems.append(f"{r['name']}: derived lacks {key}")
+                    continue
+                gated += 1
+                parts = [int(v) for v in d[key].split("|") if v != ""]
+                if len(parts) != p:
+                    problems.append(
+                        f"{r['name']}: {key} has {len(parts)} entries, "
+                        f"expected {p} (one per shard)"
+                    )
+                s = sum(parts)
+                totals[tot][p] = s
+                if stat_key in stats and s != stats[stat_key]:
+                    problems.append(
+                        f"{r['name']}: sum({key})={s} != "
+                        f"stats.{stat_key}={stats[stat_key]} — per-shard "
+                        "accounting leaks work"
+                    )
+        for tot, per_p in totals.items():
+            base_p = min(per_p) if per_p else None
+            for p, s in sorted(per_p.items()):
+                if s != per_p[base_p]:
+                    problems.append(
+                        f"{gname}_p{p}: total {tot}={s} != p{base_p} "
+                        f"baseline {per_p[base_p]} — sharding changed the "
+                        "work, not just its placement"
+                    )
+    print(
+        f"check: {gated} per-shard counter list(s) gated across "
+        f"{len(groups)} sharded ladder(s)",
+        file=out,
+    )
+    for p in problems:
+        print(f"  FAIL {p}", file=out)
+    if problems:
+        print(f"check: {len(problems)} failure(s)", file=out)
+        return 1
+    print("check: shards OK", file=out)
+    return 0
+
+
 def run_check(
     fresh_path: str,
     base_path: str,
@@ -312,9 +404,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="one-sided noise tolerance for the --auto envelope gate "
         "(default %(default)s)",
     )
+    ap.add_argument(
+        "--shards", action="store_true",
+        help="also gate the sharded_service ladder's conservation "
+        "invariant: per-shard counter sums must equal the single-shard "
+        "baseline's totals exactly (self-contained, no baseline needed)",
+    )
     args = ap.parse_args(argv)
-    if args.baseline is None and not args.auto:
-        ap.error("baseline artifact required unless --auto is given")
+    if args.baseline is None and not (args.auto or args.shards):
+        ap.error(
+            "baseline artifact required unless --auto/--shards is given"
+        )
     rc = 0
     if args.baseline is not None:
         rc = run_check(
@@ -325,6 +425,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         )
     if args.auto:
         rc = max(rc, run_auto_check(args.fresh, args.auto_factor))
+    if args.shards:
+        rc = max(rc, run_shards_check(args.fresh))
     return rc
 
 

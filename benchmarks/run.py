@@ -36,6 +36,10 @@ SMOKE = False
 # persistent Pallas epoch megakernel next to the while_loop K-ladder rows)
 MEGAKERNEL = False
 
+# set by main() from --shards: emit sharded_service_*_p{1..P} rows (the
+# device-mesh fleet scale-out ladder, DESIGN.md §15); 0 skips the group
+SHARDS = 0
+
 # set by main() from --trace / --metrics: the obs tracer + metrics registry
 # every service/engine below feeds when enabled (None = disabled, free)
 TRACER = None
@@ -514,10 +518,19 @@ def bench_device_service():
                 case.initial, heap_init=dict(case.heap_init) or None
             )
             solo_vinf += s.dispatches + s.scalar_transfers
+        # one template cache across the stats pass + warmup + repeats: a
+        # fresh service per call is the measurement (queue + wave build),
+        # but re-tracing the chunk loop per call is not — without the
+        # shared cache the "steady-state" repeats each paid a full
+        # retrace, double-counting compile into us_per_call on top of the
+        # compile_us column
+        cache_d = WaveTemplateCache()
         hs = run_svc(fleet, "host").stats()
-        ds = run_svc(fleet, "device").stats()
+        ds = run_svc(fleet, "device", cache=cache_d).stats()
         t_host = _time(lambda f=fleet: run_svc(f, "host"), repeats=1)
-        t_dev = _time(lambda f=fleet: run_svc(f, "device"), repeats=1)
+        t_dev = _time(
+            lambda f=fleet: run_svc(f, "device", cache=cache_d), repeats=1
+        )
         host_vinf = hs.dispatches + hs.scalar_transfers
         dev_vinf = ds.dispatches + ds.scalar_transfers
         row(
@@ -643,6 +656,85 @@ def bench_device_service():
                 )
 
 
+# ------------- sharded fleet execution across a device mesh (DESIGN §15)
+def bench_sharded_service():
+    """Scale-out ladder: the same job stream through P TVM shards.
+
+    Each ``sharded_service_<fleet>_pP`` row drains R copies of the fleet
+    through ``JobService(engine="sharded", shards=P)`` — P full device
+    waves on a 1-D ``"fleet"`` mesh, ONE fused launch + ONE stacked
+    readback per collective chunk — and reports jobs/sec against the
+    ``p1`` baseline, the collective V_inf totals, rebalance-migration
+    counts, and the per-shard work split (``shard_tasks``/``shard_forks``
+    pipe-joined, which ``check.py --shards`` gates: their sums must equal
+    the ``p1`` row's totals exactly — sharding moves work, never changes
+    it).  ``mesh=1`` marks rows that ran on a real device mesh; ``mesh=0``
+    is the single-device vmap simulation (bit-identical, not parallel —
+    CI forces 8 host devices so the smoke row exercises the real path).
+
+    One :class:`~repro.service.jobs.WaveTemplateCache` is shared across
+    the whole ladder: the template is deliberately not keyed on P, so
+    ``p1`` compiles the chunk body once and every later P reuses it
+    (``template_hits`` makes that diffable per row).
+    """
+    import jax
+
+    from repro.apps import get_fleet
+    from repro.service import JobService, WaveTemplateCache
+
+    fleet = get_fleet("mixed3")
+    reps = 6 if SMOKE else 8  # 18 / 24 queued jobs (acceptance: >= 16)
+    n_jobs = reps * len(fleet)
+    chunk = 4  # finite K: rebalancing needs chunk boundaries
+    ladder = [p for p in (1, 2, 4, 8) if p <= SHARDS] or [1]
+    if SMOKE and SHARDS > 1:
+        ladder = [1, SHARDS]  # the smoke row: baseline + full width
+
+    def run_sharded(shards, cache):
+        svc = JobService(
+            capacity=sum(q for _, q in fleet), engine="sharded",
+            shards=shards, chunk=chunk, dispatch="masked",
+            max_jobs=len(fleet), template_cache=cache,
+            metrics=METRICS, tracer=TRACER,
+        )
+        for r in range(reps):
+            for case, quota in fleet:
+                svc.submit_case(case, quota=quota, name=f"{case.name}#{r}")
+        svc.drain()
+        return svc
+
+    cache = WaveTemplateCache()
+    t_p1 = None
+    for P in ladder:
+        svc = run_sharded(P, cache)
+        fs = svc.stats()
+        fl = svc._mux  # the last (only) wave's fleet, post-drain
+        t = _time(lambda P=P: run_sharded(P, cache), repeats=1)
+        if t_p1 is None:
+            t_p1 = float(t)
+        shard_stats = fl.shard_stats() if fl is not None else []
+        shard_tasks = "|".join(
+            str(s.tasks_executed) for s in shard_stats
+        )
+        shard_forks = "|".join(str(s.total_forks) for s in shard_stats)
+        row(
+            f"sharded_service_mixed3_p{P}", t,
+            f"jobs={n_jobs};shards={P};chunk={chunk};"
+            f"jobs_per_sec={n_jobs / max(float(t), 1e-9):.1f};"
+            f"speedup_vs_p1={t_p1 / max(float(t), 1e-9):.2f};"
+            f"vinf={fs.dispatches + fs.scalar_transfers};"
+            f"collective_steps={getattr(fl, 'collective_steps', 0)};"
+            f"migrations={getattr(fl, 'migrations', 0)};"
+            f"util_spread="
+            f"{fl.utilization_spread() if fl is not None else 0:.3f};"
+            f"mesh={1 if getattr(fl, 'mesh', None) is not None else 0};"
+            f"devices={jax.device_count()};"
+            f"template_hits={cache.hits};"
+            f"shard_tasks={shard_tasks};shard_forks={shard_forks}",
+            stats=fs,
+        )
+
+
 # --------------------------------------------------- TVM serving engine
 def bench_serving():
     import jax
@@ -718,6 +810,7 @@ BENCHES = {
     "dispatch": bench_dispatch,
     "service": bench_service,
     "device_service": bench_device_service,
+    "sharded_service": bench_sharded_service,
     "serving": bench_serving,
     "roofline": bench_roofline,
 }
@@ -753,6 +846,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
         "chunk": CHUNK,
         "smoke": smoke,
         "megakernel": MEGAKERNEL,
+        "shards": SHARDS,
         "groups": sorted(groups),
         "rows": rows,
     }
@@ -762,7 +856,7 @@ def write_json(path: str, dispatch: str, smoke: bool, groups) -> None:
 
 
 def main(argv=None) -> None:
-    global DISPATCH, CHUNK, SMOKE, MEGAKERNEL, TRACER, METRICS
+    global DISPATCH, CHUNK, SMOKE, MEGAKERNEL, SHARDS, TRACER, METRICS
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--dispatch", choices=("masked", "compacted", "gather", "auto"),
@@ -795,9 +889,17 @@ def main(argv=None) -> None:
         "kernel on TPU)",
     )
     ap.add_argument(
+        "--shards", type=int, default=0, metavar="P",
+        help="emit the sharded_service_*_p{1..P} scale-out ladder "
+        "(DESIGN.md §15); rows run on a real 'fleet' device mesh when "
+        "the host exposes >= P devices (CI forces 8 via "
+        "--xla_force_host_platform_device_count), else on the "
+        "bit-identical single-device vmap fallback (mesh=0 in derived)",
+    )
+    ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="write the rows as a machine-readable JSON artifact; defaults "
-        "to BENCH_8.json for full runs, off for --only subset or --smoke "
+        "to BENCH_9.json for full runs, off for --only subset or --smoke "
         "runs (pass a path to force, '' to disable)",
     )
     ap.add_argument(
@@ -815,6 +917,7 @@ def main(argv=None) -> None:
     CHUNK = args.chunk
     SMOKE = args.smoke
     MEGAKERNEL = args.megakernel
+    SHARDS = args.shards
     if args.trace:
         from repro.obs import SpanTracer
 
@@ -824,6 +927,14 @@ def main(argv=None) -> None:
 
         METRICS = MetricsRegistry()
     only = args.only or (list(SMOKE_GROUPS) if args.smoke else None)
+    if args.shards:
+        # --shards opts the scale-out ladder in, whatever the selection
+        if only is not None and "sharded_service" not in only:
+            only = list(only) + ["sharded_service"]
+    elif only is None:
+        # the ladder only means something with a shard count: skip the
+        # group on plain full runs rather than emitting a p1-only row set
+        only = [n for n in BENCHES if n != "sharded_service"]
     ran = []
     print("name,us_per_call,compile_us,derived")
     for name, fn in BENCHES.items():
@@ -835,7 +946,7 @@ def main(argv=None) -> None:
     if json_path is None:
         # don't silently clobber the cross-PR artifact with a subset or
         # smoke run (CI's smoke job passes --json explicitly)
-        json_path = "" if (args.only or args.smoke) else "BENCH_8.json"
+        json_path = "" if (args.only or args.smoke) else "BENCH_9.json"
     if json_path:
         write_json(json_path, args.dispatch, args.smoke, ran)
     if args.trace:

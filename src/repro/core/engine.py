@@ -87,6 +87,11 @@ class EngineError(RuntimeError):
     pass
 
 
+# every leaf of a fleet-stacked ResidentCarry shards its leading axis over
+# the 1-D "fleet" mesh (launch/mesh.py make_fleet_mesh)
+_FLEET_SPEC = jax.sharding.PartitionSpec("fleet")
+
+
 _COMPACTED_RESIDENT_MSG = (
     "resident (device) execution supports the 'masked' and 'gather' "
     "dispatches: the on-device loop needs launch shapes fixed at trace "
@@ -96,20 +101,34 @@ _COMPACTED_RESIDENT_MSG = (
 )
 
 
-def resolve_resident_dispatch(dispatch, controller, capacity: int):
+def resolve_resident_dispatch(dispatch, controller, capacity: int,
+                              peek: Optional[Callable[[str], Any]] = None):
     """Resolve ``dispatch="auto"`` for a resident (traced) loop.
 
     A resident template bakes its mode in at trace time, so the decision
     is made once per template, masked-vs-gather only (§5.4 compacted
     stays host-side).  With no controller (or a cold observation window)
     the answer is masked — the cheapest critical path when nothing is
-    known.  The wave-template cache makes the outcome sticky per wave
-    shape: the service reuses a cached template (and its baked mode)
-    before ever consulting the controller, so identical consecutive
-    waves can never retrace on a flipped decision.
+    known.
+
+    ``peek`` is the stickiness hook (optional): called with each
+    candidate mode name, it returns a truthy value when a compiled
+    template for this wave shape already exists under that mode.  A hit
+    wins before the controller is ever consulted — identical consecutive
+    waves can never retrace on a flipped decision — while a *new* wave
+    shape appearing mid-service falls through to the controller, whose
+    rolling window has been accumulating fill observations across every
+    prior wave's chunks.  New shapes are therefore re-evaluated against
+    everything the service has learned so far, not against the cold-start
+    default (DESIGN.md §14-§15; the service passes a wave-template cache
+    peek here, the sharded fleet the same per-shard-layout peek).
     """
     if resolve_policy(dispatch).name != "auto":
         return dispatch
+    if peek is not None:
+        for cand in ("masked", "gather"):
+            if peek(cand):
+                return cand
     if controller is None:
         return "masked"
     return controller.choose_resident(capacity).mode
@@ -1112,6 +1131,126 @@ class EpochLoop:
         """Run the resident loop to completion: one chunk bounded only by
         the epoch guard — one dispatch for the whole program (or wave)."""
         return self.run_chunk(carry, max_epochs, n_regions)
+
+    def run_chunk_fleet(self, carry: ResidentCarry, limits,
+                        n_regions: int, n_shards: int,
+                        mesh=None) -> ResidentCarry:
+        """Run P independent shard chunks as ONE fused launch (DESIGN.md
+        §15).
+
+        ``carry`` is a :class:`ResidentCarry` whose every leaf carries a
+        leading fleet axis of size ``n_shards`` — P full TVM + arena +
+        stack blocks stacked together; ``limits`` is ``i32[P]``, each
+        shard's own dynamic epoch bound (a drained or boundless shard
+        passes 0 / its guard and no-ops — the per-shard cond fails on
+        entry, bit-identically to never launching it).
+
+        With ``mesh`` (a 1-D ``"fleet"`` device mesh,
+        :func:`repro.launch.mesh.make_fleet_mesh`) the chunk runs under
+        ``shard_map``: each device owns one shard's block and drives its
+        own resident ``while_loop`` — shards advance *independently* to
+        their bounds inside the one launch, no cross-shard lockstep.
+        Without a mesh the fleet falls back to ``vmap`` over the shard
+        axis (single-device simulation): jax batches the while_loop as
+        "while any shard's cond holds" with finished shards' carries
+        frozen by ``select`` — bit-identical per shard, just not
+        device-parallel.
+
+        ``megakernel=True`` composes on the mesh path (each device runs
+        its chunk through the persistent Pallas kernel); the vmap
+        fallback drives the kernel's ``lax.while_loop`` oracle instead —
+        the two are bit-identical by construction (DESIGN.md §12), so the
+        fallback changes nothing observable.
+
+        Compiled once per (shards, regions, capacity, depth, driver) and
+        cached next to the solo chunk templates; ``limits`` stays dynamic
+        so K adaptation and per-shard staggering never retrace.
+        """
+        capacity = int(carry.state.task.shape[-1])
+        depth = int(carry.jstack.shape[-1])
+        key = ("fleet", n_shards, n_regions, capacity, depth,
+               mesh is not None)
+        if key not in self._resident_cache:
+            body = self.resident_body(capacity, depth)
+
+            def cond(cc: ResidentCarry, lim):
+                return (cc.sp > 0).any() & (cc.n_epochs < lim)
+
+            use_megakernel = self.megakernel and mesh is not None
+            if use_megakernel:
+                from ..kernels import epoch_megakernel as mk
+
+                impl = self.megakernel_impl
+
+                def one_shard(c, lim):
+                    return mk.epoch_chunk(cond, body, c, lim, impl=impl)
+
+            else:
+
+                def one_shard(c, lim):
+                    return jax.lax.while_loop(
+                        lambda cc: cond(cc, lim), body, c
+                    )
+
+            if mesh is None:
+                loop = jax.jit(jax.vmap(one_shard))
+            else:
+                from ..launch.mesh import fleet_shard_map
+
+                spec = jax.tree.map(lambda _: _FLEET_SPEC, carry)
+
+                def shard_fn(c, lim):
+                    # shard_map hands each device its block with the
+                    # fleet axis still present (size 1): squeeze, run the
+                    # solo chunk, re-expand
+                    c1 = jax.tree.map(lambda x: x[0], c)
+                    out = one_shard(c1, lim[0])
+                    return jax.tree.map(lambda x: x[None], out)
+
+                loop = jax.jit(fleet_shard_map(
+                    shard_fn, mesh,
+                    in_specs=(spec, _FLEET_SPEC),
+                    out_specs=spec,
+                ))
+            self._resident_cache[key] = loop
+        return self._resident_cache[key](
+            carry, jnp.asarray(limits, jnp.int32)
+        )
+
+    def fleet_chunk_summaries(self, carry: ResidentCarry,
+                              n_shards: int) -> List[ChunkSummary]:
+        """The fleet boundary readback: ONE ``device_get`` of the stacked
+        control scalars, split host-side into per-shard
+        :class:`ChunkSummary` views — P shards pay the V_inf transfer
+        once per collective chunk, not once each."""
+        arena_next = None if carry.arena is None else carry.arena.next
+        (sp, failed, failed_stack, n_epochs, job_epochs, job_tasks,
+         job_forks, job_peak, m_ct, m_el, m_ln, holes, a_next) = (
+            jax.device_get((
+                carry.sp, carry.failed, carry.failed_stack, carry.n_epochs,
+                carry.job_epochs, carry.job_tasks, carry.job_forks,
+                carry.job_peak, carry.map_launches, carry.map_elements,
+                carry.map_lanes, carry.hole_lanes, arena_next,
+            ))
+        )
+        return [
+            ChunkSummary(
+                n_epochs=int(n_epochs[p]),
+                sp=np.asarray(sp[p]),
+                failed=np.asarray(failed[p]),
+                failed_stack=np.asarray(failed_stack[p]),
+                job_epochs=np.asarray(job_epochs[p]),
+                job_tasks=_hilo_value(job_tasks[p]),
+                job_forks=_hilo_value(job_forks[p]),
+                job_peak=np.asarray(job_peak[p]),
+                map_launches=int(m_ct[p]),
+                map_elements=int(_hilo_value(m_el[p])),
+                map_lanes=int(_hilo_value(m_ln[p])),
+                hole_lanes=int(_hilo_value(holes[p])),
+                arena_next=None if a_next is None else np.asarray(a_next[p]),
+            )
+            for p in range(n_shards)
+        ]
 
     def chunk_summary(self, carry: ResidentCarry) -> ChunkSummary:
         """The chunk-boundary readback: one ``device_get`` of the compact

@@ -1,4 +1,6 @@
 # Distributed-optimization substrate: gradient compression (error-feedback
-# int8 / bf16 all-reduce), GPipe pipeline parallelism over the 'pod' axis.
+# int8 / bf16 all-reduce), GPipe pipeline parallelism over the 'pod' axis,
+# and sharded TVM fleet execution over a 1-D "fleet" mesh (DESIGN.md §15).
 from .compression import CompressionState, compressed_grad_allreduce  # noqa: F401
+from .fleet import PLACEMENTS, ShardedFleet, ShardWave  # noqa: F401
 from .pipeline import gpipe_apply  # noqa: F401

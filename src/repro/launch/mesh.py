@@ -23,6 +23,51 @@ from ..models.common import (
 )
 
 
+def make_fleet_mesh(shards: int):
+    """1-D ``"fleet"`` device mesh for sharded TVM execution (DESIGN.md
+    §15): shard ``p`` of a :class:`~repro.distributed.fleet.ShardedFleet`
+    lives on device ``p`` and runs its own resident chunk loop under
+    ``shard_map``.
+
+    Returns ``None`` when fewer than ``shards`` devices are attached —
+    the fleet then falls back to its single-device ``vmap`` simulation
+    (bit-identical, not device-parallel), so P > device_count is a
+    degraded mode, never an error.  CI forces 8 host devices
+    (``--xla_force_host_platform_device_count=8``) to exercise the real
+    path on CPU.
+    """
+    if shards < 1:
+        raise ValueError(f"a fleet needs >= 1 shard, got {shards}")
+    if shards == 1 or len(jax.devices()) < shards:
+        return None
+    try:
+        return jax.make_mesh(
+            (shards,), ("fleet",),
+            axis_types=(jax.sharding.AxisType.Auto,),
+        )
+    except (AttributeError, TypeError):
+        # older jax: no AxisType / no axis_types kwarg
+        return jax.make_mesh((shards,), ("fleet",))
+
+
+def fleet_shard_map(fn, mesh, *, in_specs, out_specs):
+    """``shard_map`` across jax versions (``jax.shard_map`` when present,
+    the experimental module otherwise).  The fleet's per-shard chunk
+    bodies are closed computations — no cross-shard collectives — so
+    replication checking is irrelevant and disabled where the API
+    requires an explicit opt-out."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

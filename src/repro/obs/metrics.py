@@ -264,14 +264,24 @@ class MetricsCollector(StatsCollector):
     chunk (resident — the chunk *is* the finest grain the resident path can
     observe without paying extra readbacks, see DESIGN.md §13), and
     ``trees_hole_fraction`` the matching skipped-lane share.
+
+    ``shard`` (opt-in) adds a shard label to every series — the sharded
+    fleet engine gives each shard its own collector so per-shard work
+    splits and utilization spread are scrapeable directly (DESIGN.md §15).
+    The registry pins labelnames per metric name, so a given registry must
+    be fed consistently: all collectors sharded, or none.
     """
 
     def __init__(self, inner: StatsCollector, registry: MetricsRegistry,
-                 driver: str, dispatch: str, app: str):
+                 driver: str, dispatch: str, app: str,
+                 shard: Optional[str] = None):
         self.inner = inner
         self.registry = registry
         self.labels = dict(driver=driver, dispatch=dispatch, app=app)
         lab = ("driver", "dispatch", "app")
+        if shard is not None:
+            self.labels["shard"] = shard
+            lab = lab + ("shard",)
         r = registry
         self._epochs = r.counter(
             "trees_epochs_total", "epochs run (critical-path T_inf)", lab

@@ -78,6 +78,19 @@ class JobService:
     readback cadence; ``dispatch="gather"`` on the device engine packs
     each epoch's scheduled lanes into a fixed-shape segmented frontier so
     union-span hole lanes are never stepped (DESIGN.md §12).
+
+    ``engine="sharded"`` scales the device engine out: ``shards`` full
+    device waves — same slot layout, one shared compiled template — run
+    together on a 1-D ``"fleet"`` device mesh (DESIGN.md §15), one fused
+    launch and one stacked readback per collective chunk.  ``placement``
+    (``round_robin`` / ``least_loaded`` / ``sticky``) assigns queued jobs
+    to shards; ``rebalance`` migrates jobs off hot shards at chunk
+    boundaries.  Per-job results stay bit-identical to solo at every P.
+
+    ``calibrate`` (default on) seeds ``dispatch="auto"``'s controller
+    with a :meth:`~repro.control.controller.CostModel.calibrated` micro
+    -probe of this host at service start — cached per process, so only
+    the first service constructed ever pays it (DESIGN.md §14).
     """
 
     def __init__(
@@ -99,26 +112,46 @@ class JobService:
         megakernel_impl: str = "auto",
         metrics=None,
         tracer=None,
+        shards: int = 1,
+        placement: str = "round_robin",
+        rebalance: bool = True,
+        calibrate: bool = True,
     ):
-        if engine not in ("host", "device"):
+        if engine not in ("host", "device", "sharded"):
             raise ValueError(
-                f"engine must be 'host' or 'device', got {engine!r}"
+                "engine must be 'host', 'device' or 'sharded', "
+                f"got {engine!r}"
             )
-        if engine == "device":
+        if engine == "sharded":
+            from ..distributed.fleet import PLACEMENTS
+
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+            if placement not in PLACEMENTS:
+                raise ValueError(
+                    f"placement must be one of {PLACEMENTS}, "
+                    f"got {placement!r}"
+                )
+        elif shards != 1:
+            raise ValueError(
+                "shards requires engine='sharded' (host/device waves run "
+                f"one TVM); got shards={shards}"
+            )
+        if engine in ("device", "sharded"):
             from ..core.scheduler import resolve_policy
 
             if resolve_policy(dispatch).name not in (
                 "masked", "gather", "auto"
             ):
                 raise ValueError(
-                    "engine='device' supports dispatch='masked', 'gather' "
-                    "or 'auto' (resident launch shapes are fixed at trace "
-                    "time; compacted sizes launches from runtime "
+                    f"engine={engine!r} supports dispatch='masked', "
+                    "'gather' or 'auto' (resident launch shapes are fixed "
+                    "at trace time; compacted sizes launches from runtime "
                     "populations and is host-only)"
                 )
             if gang or pop_policy != "fuse_all":
                 raise ValueError(
-                    "engine='device' runs every live region each epoch "
+                    f"engine={engine!r} runs every live region each epoch "
                     "(fuse_all); gang/pop_policy are host-engine options"
                 )
             if chunk == "auto":
@@ -140,6 +173,9 @@ class JobService:
                 "engine='device' (the host engine has no resident loop)"
             )
         self.engine = engine
+        self.shards = int(shards)
+        self.placement = placement
+        self.rebalance = bool(rebalance)
         self.stack_depth = stack_depth
         self.chunk = chunk
         self.megakernel = bool(megakernel)
@@ -172,9 +208,14 @@ class JobService:
 
         self.controller = None
         if _rp(dispatch).name == "auto":
-            from ..control.controller import DispatchController
+            from ..control.controller import CostModel, DispatchController
 
-            self.controller = DispatchController()
+            # calibrate by default: the controller's priors come from a
+            # one-shot micro-probe of *this* host (process-cached, so only
+            # the first service pays it) instead of the static roofline
+            # constants — DESIGN.md §14's "calibrate once, decide often"
+            cost = CostModel.calibrated() if calibrate else None
+            self.controller = DispatchController(cost=cost)
             if metrics is not None:
                 self.controller.bind_registry(
                     metrics, driver=engine, app="service"
@@ -214,6 +255,32 @@ class JobService:
             return MetricsCollector(
                 inner, registry, driver=driver, dispatch=dispatch,
                 app="service",
+            )
+
+        return factory
+
+    def _sharded_stats_factory(self):
+        """Per-shard collector factory for the sharded engine: same series
+        as :meth:`_stats_factory` with a ``shard`` label on every one, so
+        per-shard utilization and work splits are scrapeable directly.
+        (A registry pins labelnames per metric name, so keep one registry
+        per engine flavor — sharded services label ``shard`` on every
+        run-series metric, solo services label none.)"""
+        if self.metrics is None:
+            return None
+        from ..core.scheduler import NullStats, RunStatsCollector, \
+            resolve_policy
+        from ..obs.metrics import MetricsCollector
+
+        registry = self.metrics
+        dispatch = resolve_policy(self.dispatch).name
+        collect = self.collect_stats
+
+        def factory(p: int):
+            inner = RunStatsCollector() if collect else NullStats()
+            return MetricsCollector(
+                inner, registry, driver="sharded", dispatch=dispatch,
+                app="service", shard=str(p),
             )
 
         return factory
@@ -375,35 +442,35 @@ class JobService:
             wave = self._take_wave()
             if not wave:
                 return []
-            if self.engine == "device":
+            if self.engine in ("device", "sharded"):
                 # seat members in canonical order so a permutation of an
                 # earlier wave lands on the same slot layout as its cached
                 # template (the key is canonical too); each job's results
                 # attach to its own handle, so no un-permuting is needed
                 order = canonical_wave_order([h.job for h in wave])
                 wave = [wave[i] for i in order]
-                from ..core.scheduler import resolve_policy
+                from ..core.engine import resolve_resident_dispatch
 
                 jobs = [h.job for h in wave]
                 cap = sum(h.job.quota for h in wave)
-                dispatch_name = resolve_policy(self.dispatch).name
-                if dispatch_name == "auto":
-                    # sticky per wave shape: a cached template's baked mode
-                    # wins before the controller is ever consulted, so an
-                    # identical consecutive wave can never retrace on a
-                    # flipped decision; only a *new* shape pays a decision
-                    for cand in ("masked", "gather"):
-                        k_c = wave_template_key(
-                            jobs, cap, self.stack_depth, self.chunk,
-                            dispatch=cand, megakernel=self.megakernel,
-                        )
-                        if self.template_cache.peek(k_c) is not None:
-                            dispatch_name = cand
-                            break
-                    else:
-                        dispatch_name = self.controller.choose_resident(
-                            cap
-                        ).mode
+
+                def _peek(cand: str):
+                    # sticky per wave shape: a cached template's baked
+                    # mode wins before the controller is ever consulted,
+                    # so an identical consecutive wave can never retrace
+                    # on a flipped decision; a *new* shape falls through
+                    # to the controller's accumulated cross-wave window
+                    return self.template_cache.peek(wave_template_key(
+                        jobs, cap, self.stack_depth, self.chunk,
+                        dispatch=cand, megakernel=self.megakernel,
+                    ))
+
+                dispatch_name = resolve_resident_dispatch(
+                    self.dispatch, self.controller, cap, peek=_peek
+                )
+                # the key is deliberately NOT a function of `shards`: a
+                # sharded fleet replicates ONE per-shard wave, so the same
+                # compiled template serves the solo wave and every P
                 key = wave_template_key(
                     jobs, cap,
                     self.stack_depth, self.chunk,
@@ -412,28 +479,66 @@ class JobService:
                 )
                 tpl = self.template_cache.lookup(key)
                 self._observe_template_cache(hit=tpl is not None)
-                self._mux = DeviceMultiplexer(
-                    wave,
-                    dispatch=dispatch_name,
-                    stack_depth=self.stack_depth,
-                    chunk=self.chunk,
-                    collect_stats=self.collect_stats,
-                    stats_factory=self._stats_factory(),
-                    template=tpl,
-                    megakernel=self.megakernel,
-                    megakernel_impl=self.megakernel_impl,
-                    tracer=self.tracer,
-                    controller=self.controller,
-                    chunk_controller=self.chunk_controller,
-                    queue_probe=self._queue_probe,
-                )
+                if self.engine == "sharded":
+                    from ..distributed.fleet import ShardedFleet
+
+                    self._mux = ShardedFleet(
+                        wave,
+                        shards=self.shards,
+                        dispatch=dispatch_name,
+                        stack_depth=self.stack_depth,
+                        chunk=self.chunk,
+                        placement=self.placement,
+                        rebalance=self.rebalance,
+                        collect_stats=self.collect_stats,
+                        stats_factory=self._sharded_stats_factory(),
+                        template=tpl,
+                        megakernel=self.megakernel,
+                        megakernel_impl=self.megakernel_impl,
+                        tracer=self.tracer,
+                        controller=self.controller,
+                        chunk_controller=self.chunk_controller,
+                        queue_probe=self._queue_probe,
+                    )
+                    tpl_built = self._mux.template
+                    # the whole queue streams into the fleet's placement
+                    # queues up front: the anchor wave sized ONE shard's
+                    # layout, the other P-1 shards start vacant and fill
+                    # from here (and from later submits via streaming
+                    # admission)
+                    still = [
+                        h for h in self._queue if not self._mux.admit(h)
+                    ]
+                    self._queue = still
+                else:
+                    self._mux = DeviceMultiplexer(
+                        wave,
+                        dispatch=dispatch_name,
+                        stack_depth=self.stack_depth,
+                        chunk=self.chunk,
+                        collect_stats=self.collect_stats,
+                        stats_factory=self._stats_factory(),
+                        template=tpl,
+                        megakernel=self.megakernel,
+                        megakernel_impl=self.megakernel_impl,
+                        tracer=self.tracer,
+                        controller=self.controller,
+                        chunk_controller=self.chunk_controller,
+                        queue_probe=self._queue_probe,
+                    )
+                    tpl_built = WaveTemplate(
+                        key=key,
+                        program=self._mux.program,
+                        slots=self._mux.slots,
+                        loop=self._mux.loop,
+                    )
                 if tpl is None:
                     self.template_cache.store(
                         WaveTemplate(
                             key=key,
-                            program=self._mux.program,
-                            slots=self._mux.slots,
-                            loop=self._mux.loop,
+                            program=tpl_built.program,
+                            slots=tpl_built.slots,
+                            loop=tpl_built.loop,
                         )
                     )
             else:

@@ -220,7 +220,17 @@ def wave_template_key(jobs: Sequence[Job], capacity: int, stack_depth: int,
     controller picks, the same template serves it, so K adaptation can
     never retrace.  ``dispatch`` must be a *resolved* mode here ("auto" is
     resolved by the service before keying, sticky per wave shape via
-    :meth:`WaveTemplateCache.peek`)."""
+    :meth:`WaveTemplateCache.peek`).
+
+    The key is deliberately *not* a function of the shard count: a sharded
+    fleet (DESIGN.md §15) replicates ONE per-shard wave layout, and its
+    per-shard chunk body is the very loop this template holds — the fleet
+    driver caches its stacked vmap/shard_map wrappers separately, keyed on
+    (n_shards, mesh), inside :class:`~repro.core.engine.EpochLoop`.  One
+    template therefore serves the solo wave and every P; switching P
+    mid-service never rebuilds the template — it costs at most the one
+    vmap/shard_map wrapper trace for the new batch shape, after which
+    waves at that P are zero-retrace again."""
     order = canonical_wave_order(jobs)
     return (
         tuple(jobs[i].program.structural_hash() for i in order),

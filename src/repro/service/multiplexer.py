@@ -326,8 +326,22 @@ class _FleetBase:
     ):
         if not handles:
             raise ValueError(f"{type(self).__name__} needs at least one job")
-        jobs = [h.job for h in handles]
-        quota_total = sum(j.quota for j in jobs)
+        # a ``None`` entry is a *vacant* slot region: the sharded fleet
+        # (distributed/fleet.py) builds every shard with the same slot
+        # layout and seats tenants through the admit/reseed path, so a
+        # shard may start with some (or all) regions empty.  Vacancy
+        # requires a template — the fused program cannot be built from
+        # absent jobs.
+        jobs = [h.job for h in handles if h is not None]
+        if len(jobs) != len(handles) and template is None:
+            raise ValueError(
+                "vacant wave slots (handle=None) require a wave template: "
+                "the fused program cannot be derived from absent jobs"
+            )
+        quota_total = (
+            sum(s.quota for s in template.slots) if template is not None
+            else sum(j.quota for j in jobs)
+        )
         self.capacity = int(capacity) if capacity else quota_total
         if quota_total > self.capacity:
             raise ValueError(
@@ -346,7 +360,10 @@ class _FleetBase:
             # fuse-time members, so the fused program — and every compiled
             # step/loop traced against it — applies verbatim; only runtime
             # state (TV, heap, stacks) is rebuilt below
-            if [s.quota for s in template.slots] != [j.quota for j in jobs]:
+            if len(handles) != len(template.slots) or any(
+                h is not None and h.job.quota != s.quota
+                for h, s in zip(handles, template.slots)
+            ):
                 raise ValueError(
                     "wave template quota layout does not match the wave"
                 )
@@ -379,8 +396,17 @@ class _FleetBase:
         self._regions: List[_Region] = []
         self._heap: Dict[str, jnp.ndarray] = {}
         for slot, h in zip(self._slots, handles):
-            job = h.job
             slot_job[slot.base : slot.end] = slot.index
+            if h is None:
+                # vacant region: TV slots stay zeroed (epoch 0 matches no
+                # frontier), the tenant heap gets its declared-default
+                # arrays so the fused program's traced steps see every
+                # key; a tenant seats later via the admit/reseed path
+                for k, v in slot.program.init_heap().items():
+                    self._heap[slot.prefix + k] = v
+                self._regions.append(_Region(slot=slot))
+                continue
+            job = h.job
             tid = slot.task_offset + slot.program.task_id(job.initial.task)
             ai, af = pack_args(fused, job.initial.argi, job.initial.argf)
             task[slot.base] = tid
@@ -854,6 +880,7 @@ class DeviceMultiplexer(_FleetBase):
         self._carry = None
         self._chunk_seq = 0
         self._ledger = _ChunkLedger(len(self._slots))
+        self.last_deltas: Dict[str, int] = {}
 
     @property
     def loop(self) -> EpochLoop:
@@ -866,6 +893,65 @@ class DeviceMultiplexer(_FleetBase):
         return self._slots
 
     # ------------------------------------------------------------ driving
+    def _ensure_carry(self) -> None:
+        """Build the resident carry on first use: a seated region's device
+        stack gets its seed entry (sp=1), a *vacant* region (handle=None,
+        sharded-fleet shards) starts empty (sp=0) — its tenant seats later
+        through the admit/reseed path, so a shard's initial seating and
+        its mid-flight reseeds are one code path."""
+        if self._carry is not None:
+            return
+        J = len(self._slots)
+        jstack, rstack, sp = batched_device_stacks(
+            J, self.stack_depth,
+            cens=np.ones(J, np.int32),
+            starts=np.asarray([s.base for s in self._slots], np.int32),
+            counts=np.ones(J, np.int32),
+        )
+        seated = np.asarray(
+            [r.handle is not None for r in self._regions], np.int32
+        )
+        sp = sp * jnp.asarray(seated)
+        self._carry = _fresh_resident_carry(
+            self._state, self._heap, self._arena, jstack, rstack, sp,
+            n_regions=J,
+        )
+
+    def _chunk_limit(self, max_epochs: int) -> int:
+        """This chunk's dynamic epoch bound: the guard for a fully
+        resident wave, else the ledger's epoch watermark plus K (the
+        controller's K under ``chunk="auto"``)."""
+        if self.chunk is None:
+            return max_epochs
+        k = self._kctl.current() if self._kctl is not None else self.chunk
+        return min(max_epochs, self._ledger.epochs + k)
+
+    def _attach_carry(self, carry) -> None:
+        """Adopt a post-chunk carry: the bulk state stays on device; these
+        references keep ``_finalize`` / ``_seed_region`` working on the
+        current wave state."""
+        self._carry = carry
+        self._state, self._heap, self._arena = (
+            carry.state, carry.heap, carry.arena
+        )
+
+    def _finish_chunk(self, s: ChunkSummary, riders: List[int],
+                      max_epochs: int) -> List[JobHandle]:
+        """Account one chunk's readback and settle its riders — shared by
+        :meth:`step` and the sharded fleet's collective step (which runs
+        the chunk itself, P shards fused, then finishes each shard here).
+        Leaves the delta terms in ``last_deltas`` for span args."""
+        deltas = self._account(s, riders)
+        self.last_deltas = deltas
+        # dispatch-controller feedback: the chunk is the finest observable
+        # grain on this driver — one fill observation per boundary, against
+        # the full-TV width (tasks / (lanes + holes))
+        if self._dispatch_controller is not None and deltas["epochs"] > 0:
+            self._dispatch_controller.observe(
+                deltas["tasks"], deltas["lanes"] + deltas["holes"]
+            )
+        return self._settle(s, riders, max_epochs)
+
     def step(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
         """Run one chunk — at most ``chunk`` epochs in one resident loop
         invocation (the whole wave when ``chunk`` is None) — then surface
@@ -879,22 +965,8 @@ class DeviceMultiplexer(_FleetBase):
         if not riders:
             return []
         J = len(self._slots)
-        if self._carry is None:
-            jstack, rstack, sp = batched_device_stacks(
-                J, self.stack_depth,
-                cens=np.ones(J, np.int32),
-                starts=np.asarray([s.base for s in self._slots], np.int32),
-                counts=np.ones(J, np.int32),
-            )
-            self._carry = _fresh_resident_carry(
-                self._state, self._heap, self._arena, jstack, rstack, sp,
-                n_regions=J,
-            )
-        if self.chunk is None:
-            limit = max_epochs
-        else:
-            k = self._kctl.current() if self._kctl is not None else self.chunk
-            limit = min(max_epochs, self._ledger.epochs + k)
+        self._ensure_carry()
+        limit = self._chunk_limit(max_epochs)
         tr = self.tracer
         if tr.enabled:
             tr.thread(2, "resident")
@@ -916,27 +988,14 @@ class DeviceMultiplexer(_FleetBase):
                 "trees:resident_chunk"
             ):
                 carry = self._loop.run_chunk(self._carry, limit, n_regions=J)
-            self._carry = carry
-            # the bulk state stays on device; these references keep
-            # _finalize / _seed_region working on the current wave state
-            self._state, self._heap, self._arena = (
-                carry.state, carry.heap, carry.arena
-            )
+            self._attach_carry(carry)
             # the chunk's one readback (XLA launches are async: the dispatch
             # span above is enqueue time, this wait is the real chunk)
             with tr.span("readback", "resident", tid=2):
                 s = self._loop.chunk_summary(carry)
-            deltas = self._account(s, riders)
+            done = self._finish_chunk(s, riders, max_epochs)
             if tr.enabled:
-                sargs.update(deltas)
-        # dispatch-controller feedback: the chunk is the finest observable
-        # grain on this driver — one fill observation per boundary, against
-        # the full-TV width (tasks / (lanes + holes))
-        if self._dispatch_controller is not None and deltas["epochs"] > 0:
-            self._dispatch_controller.observe(
-                deltas["tasks"], deltas["lanes"] + deltas["holes"]
-            )
-        done = self._settle(s, riders, max_epochs)
+                sargs.update(self.last_deltas)
         # chunk-controller feedback: widen K while boundaries surface no
         # completions, shrink while the job queue runs hot
         if self._kctl is not None:

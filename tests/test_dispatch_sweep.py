@@ -104,6 +104,16 @@ def test_all_dispatch_modes_and_chunks_bit_identical(members):
                     f"device:mega={megakernel}:{dispatch}:K={chunk}",
                 )
 
+    # the scale-out axis: the same fleet through P TVM shards (vmap
+    # fallback on one device — bit-identical to the mesh path by
+    # construction) must land on the same bits as every solo cell
+    from repro.distributed import ShardedFleet
+
+    for shards in (1, 2):
+        handles = _handles(fleet)
+        ShardedFleet(handles, shards=shards, chunk=4).run()
+        _assert_same(ref, _snapshot(handles), f"sharded:P={shards}")
+
     # the self-tuning axis: dispatch="auto" + chunk="auto" through the
     # service front door must land on the same bits as every static cell
     svc = JobService(
