@@ -308,6 +308,115 @@ def run_shards_check(fresh_path: str, out=sys.stdout) -> int:
     return 0
 
 
+def run_latency_check(
+    fresh_path: str,
+    base_path: Optional[str] = None,
+    latency_factor: float = 1.25,
+    out=sys.stdout,
+) -> int:
+    """Gate the front-door loadgen rows (DESIGN.md §16).
+
+    Self-contained part (no baseline needed): the ``loadgen_fifo`` /
+    ``loadgen_priority`` pair must show the admission layer *winning* —
+    the offered load makes FIFO packing miss interactive deadlines
+    (``misses_interactive > 0``, otherwise the scenario gates nothing)
+    and priority admission misses strictly fewer, with an interactive p99
+    no worse than FIFO's.  Loadgen runs on a virtual clock, so these are
+    deterministic properties of the scheduling algorithm.
+
+    With a baseline artifact: the deterministic scoreboard (job count,
+    deadline misses/met, preemptions, jobs per virtual second) must match
+    *exactly*, and the latency percentiles are gated one-sided and fuzzy
+    (``--latency-factor``) — they are virtual-time too, but small packing
+    changes legitimately move them a little.
+    """
+    try:
+        fresh = load(fresh_path)
+        base = load(base_path) if base_path is not None else None
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check: {e}", file=out)
+        return 2
+
+    fr = _rows_by_name(fresh)
+    if "loadgen_fifo" not in fr or "loadgen_priority" not in fr:
+        print(
+            f"check: {fresh_path} lacks loadgen_fifo/loadgen_priority "
+            "rows — was it produced by benchmarks/loadgen.py?",
+            file=out,
+        )
+        return 2
+    fifo = parse_derived(fr["loadgen_fifo"].get("derived", ""))
+    prio = parse_derived(fr["loadgen_priority"].get("derived", ""))
+
+    problems: List[str] = []
+    f_miss = int(fifo.get("misses_interactive", -1))
+    p_miss = int(prio.get("misses_interactive", -1))
+    if f_miss <= 0:
+        problems.append(
+            f"loadgen_fifo: misses_interactive={f_miss} — the offered "
+            "load no longer stresses FIFO packing, the comparison is "
+            "vacuous"
+        )
+    if p_miss < 0 or p_miss >= max(f_miss, 0):
+        problems.append(
+            f"loadgen_priority: misses_interactive={p_miss} is not "
+            f"strictly fewer than FIFO's {f_miss} — the admission layer "
+            "stopped winning"
+        )
+    f_p99 = float(fifo.get("p99_interactive_ms", 0.0))
+    p_p99 = float(prio.get("p99_interactive_ms", 0.0))
+    if p_p99 > f_p99:
+        problems.append(
+            f"loadgen_priority: p99_interactive_ms={p_p99} exceeds "
+            f"FIFO's {f_p99}"
+        )
+    print(
+        f"check: loadgen interactive deadlines — fifo misses {f_miss}, "
+        f"priority misses {p_miss}; p99 {f_p99}ms -> {p_p99}ms",
+        file=out,
+    )
+
+    if base is not None:
+        br = _rows_by_name(base)
+        exact = (
+            "jobs", "misses_interactive", "met_interactive", "preempts",
+            "jobs_per_vsec",
+        )
+        for name in ("loadgen_fifo", "loadgen_priority"):
+            if name not in br:
+                problems.append(f"{name}: missing from baseline")
+                continue
+            fd = parse_derived(fr[name].get("derived", ""))
+            bd = parse_derived(br[name].get("derived", ""))
+            for k in exact:
+                if k in fd and k in bd and fd[k] != bd[k]:
+                    problems.append(
+                        f"{name}: {k}={fd[k]} != baseline {bd[k]} "
+                        "(virtual-time counters are deterministic — this "
+                        "is a scheduling change, not noise)"
+                    )
+            for k in sorted(bd):
+                if not k.startswith(("p50_", "p99_")):
+                    continue
+                if k not in fd:
+                    problems.append(f"{name}: derived lacks {k}")
+                    continue
+                f_v, b_v = float(fd[k]), float(bd[k])
+                if b_v > 0 and f_v > b_v * latency_factor:
+                    problems.append(
+                        f"{name}: {k}={f_v} is {f_v / b_v:.2f}x the "
+                        f"baseline {b_v} (tolerance {latency_factor:g}x)"
+                    )
+
+    for p in problems:
+        print(f"  FAIL {p}", file=out)
+    if problems:
+        print(f"check: {len(problems)} failure(s)", file=out)
+        return 1
+    print("check: latency OK", file=out)
+    return 0
+
+
 def run_check(
     fresh_path: str,
     base_path: str,
@@ -410,13 +519,28 @@ def main(argv: Optional[List[str]] = None) -> int:
         "invariant: per-shard counter sums must equal the single-shard "
         "baseline's totals exactly (self-contained, no baseline needed)",
     )
+    ap.add_argument(
+        "--latency", action="store_true",
+        help="gate the loadgen front-door rows: priority admission must "
+        "beat FIFO on interactive deadlines (self-contained), plus exact "
+        "virtual-time counters and fuzzy percentiles vs the baseline "
+        "when one is given",
+    )
+    ap.add_argument(
+        "--latency-factor", type=float, default=1.25,
+        help="one-sided tolerance for p50/p99 vs the baseline under "
+        "--latency (default %(default)s)",
+    )
     args = ap.parse_args(argv)
-    if args.baseline is None and not (args.auto or args.shards):
+    if args.baseline is None and not (
+        args.auto or args.shards or args.latency
+    ):
         ap.error(
-            "baseline artifact required unless --auto/--shards is given"
+            "baseline artifact required unless --auto/--shards/--latency "
+            "is given"
         )
     rc = 0
-    if args.baseline is not None:
+    if args.baseline is not None and not args.latency:
         rc = run_check(
             args.fresh, args.baseline,
             time_factor=args.time_factor,
@@ -427,6 +551,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         rc = max(rc, run_auto_check(args.fresh, args.auto_factor))
     if args.shards:
         rc = max(rc, run_shards_check(args.fresh))
+    if args.latency:
+        rc = max(rc, run_latency_check(
+            args.fresh, args.baseline, args.latency_factor
+        ))
     return rc
 
 

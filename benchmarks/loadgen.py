@@ -1,0 +1,207 @@
+"""Front-door load generator: deadline/priority admission vs plain FIFO.
+
+Simulates a large tenant population offering the *same* load to the
+:class:`~repro.service.api.JobService` twice — once with every job in one
+undifferentiated class (the pre-§16 FIFO front door) and once with an
+``interactive`` quota class carrying a priority and per-job deadlines
+(EDF-within-priority admission plus chunk-boundary preemption) — and
+emits one ``trees-bench-v2`` row per configuration with p50/p99 latency,
+jobs per second, and the deadline/preemption scoreboard.
+
+Time is **virtual**: the service runs on an injected deterministic clock
+that advances a fixed tick per pump (one chunk boundary = one scheduling
+quantum), so every latency percentile and counter in the artifact is
+bit-reproducible across machines — the row is a property of the
+*scheduling algorithm*, not of the CI container.  ``check.py --latency``
+gates the self-contained claim (priority admission meets interactive
+deadlines that FIFO misses under the same offered load) and, given a
+baseline artifact, the exact counters + fuzzy percentiles.
+
+Workload shape: a burst of batch jobs (fib(10), the backlog) arrives at
+t=0; small interactive jobs (fib(7)) trickle in behind it with tight
+deadlines.  FIFO packs strictly in arrival order, so every interactive
+job waits out the backlog; the admission layer lets them jump the queue
+and preempt running batch work at chunk boundaries.
+
+Run:  PYTHONPATH=src python benchmarks/loadgen.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class VirtualClock:
+    """Deterministic clock: advances only when the driver says so."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def build_arrivals(
+    n_jobs: int, interactive_every: int, deadline_s: float,
+    batch_gap_s: float, interactive_gap_s: float,
+) -> List[Tuple[float, dict]]:
+    """The offered load: (arrival time, submit kwargs) per job, identical
+    for both service configurations.  Batch jobs burst in nearly at once
+    (the backlog); interactive jobs arrive spread behind them."""
+    from repro.apps import fib
+
+    arrivals: List[Tuple[float, dict]] = []
+    t_batch = 0.0
+    t_inter = interactive_gap_s
+    for i in range(n_jobs):
+        if interactive_every and i % interactive_every == 0:
+            arrivals.append((t_inter, dict(
+                program=fib.PROGRAM, initial=fib.initial(7), quota=256,
+                name=f"i{i}", klass="interactive", deadline=deadline_s,
+            )))
+            t_inter += interactive_gap_s
+        else:
+            arrivals.append((t_batch, dict(
+                program=fib.PROGRAM, initial=fib.initial(10), quota=256,
+                name=f"b{i}", klass="batch",
+            )))
+            t_batch += batch_gap_s
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def drive(svc, clock: VirtualClock, arrivals, tick_s: float):
+    """Feed arrivals as virtual time crosses them; one pump per tick."""
+    done = []
+    i = 0
+    while i < len(arrivals) or svc._pending():
+        while i < len(arrivals) and arrivals[i][0] <= clock.t + 1e-12:
+            svc.submit(**arrivals[i][1])
+            i += 1
+        if svc._pending():
+            done.extend(svc._pump())
+            clock.advance(tick_s)
+        else:
+            # idle: jump straight to the next arrival
+            clock.t = max(clock.t, arrivals[i][0])
+    return done
+
+
+def run_config(
+    name: str, arrivals, priority: bool, tick_s: float,
+) -> Tuple[str, float, str]:
+    """One configuration over the offered load; returns a bench row
+    (name, us_per_job in virtual time, derived string)."""
+    from repro.service import AdmissionController, JobService, QuotaClass
+
+    class FifoAdmission(AdmissionController):
+        """The pre-§16 front door: pack strictly in arrival order;
+        deadlines are scored but never influence scheduling."""
+
+        def order(self, queue):
+            return sorted(queue, key=lambda h: h.job_id)
+
+    clock = VirtualClock()
+    classes = [
+        QuotaClass("interactive", priority=(10 if priority else 0)),
+        QuotaClass("batch", priority=0),
+    ]
+    admission = (AdmissionController if priority else FifoAdmission)(
+        classes=classes, clock=clock
+    )
+    svc = JobService(
+        capacity=1024, max_jobs=4, engine="device", chunk=2,
+        admission=admission, preemption=priority,
+    )
+    done = drive(svc, clock, arrivals, tick_s)
+    assert len(done) == len(arrivals), (len(done), len(arrivals))
+    assert all(h.status.value == "done" for h in done)
+
+    lat: Dict[str, List[float]] = {"interactive": [], "batch": []}
+    for h in done:
+        lat[h.klass].append((h.finished_at - h.submitted_at) * 1e3)
+    adm = svc.admission
+    stats = {
+        "jobs": len(done),
+        "misses_interactive": adm.deadline_misses.get("interactive", 0),
+        "met_interactive": adm.deadline_met.get("interactive", 0),
+        "preempts": sum(adm.preempted.values()),
+    }
+    for k in ("interactive", "batch"):
+        xs = np.asarray(lat[k])
+        stats[f"p50_{k}_ms"] = round(float(np.percentile(xs, 50)), 3)
+        stats[f"p99_{k}_ms"] = round(float(np.percentile(xs, 99)), 3)
+    v_total = clock.t
+    stats["jobs_per_vsec"] = round(len(done) / v_total, 3)
+    derived = ";".join(f"{k}={v}" for k, v in stats.items())
+    us_per_job = v_total * 1e6 / len(done)
+    print(f"{name},{us_per_job:.1f},0.0,{derived}", flush=True)
+    return (name, us_per_job, derived)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized population (48 jobs instead of 2048)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override the tenant population size")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="artifact path (default BENCH_10.json, or "
+                    "BENCH_10.smoke.json with --smoke)")
+    args = ap.parse_args(argv)
+
+    n_jobs = args.jobs or (48 if args.smoke else 2048)
+    # one interactive job per four batch jobs; deadlines sized so the
+    # FIFO backlog wait blows them but priority admission does not
+    arrivals = build_arrivals(
+        n_jobs,
+        interactive_every=4,
+        deadline_s=0.015,
+        batch_gap_s=0.0,
+        interactive_gap_s=0.010,
+    )
+    tick_s = 0.001  # one chunk boundary = 1 virtual ms
+
+    print("name,us_per_call,compile_us,derived")
+    rows = [
+        run_config("loadgen_fifo", arrivals, priority=False,
+                   tick_s=tick_s),
+        run_config("loadgen_priority", arrivals, priority=True,
+                   tick_s=tick_s),
+    ]
+
+    path = args.json or (
+        "BENCH_10.smoke.json" if args.smoke else "BENCH_10.json"
+    )
+    payload = {
+        "schema": "trees-bench-v2",
+        "dispatch": "masked",
+        "chunk": 2,
+        "smoke": bool(args.smoke),
+        "megakernel": False,
+        "shards": 0,
+        "groups": ["loadgen"],
+        "rows": [
+            {
+                "name": n,
+                "us_per_call": round(us, 1),
+                "compile_us": 0.0,
+                "derived": d,
+            }
+            for n, us, d in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,13 @@ into online decisions:
   admission at the next boundary).  ``run_chunk``'s epoch bound is a
   dynamic argument of one compiled template per (regions, capacity,
   depth), so K adaptation re-enters the cached template and can never
-  retrace.
+  retrace.  It also folds in deadline slack from the admission layer
+  (DESIGN.md §16): a tightening nearest deadline shrinks K so the
+  boundaries — the only preemption yield points — come sooner.
+* :class:`PlacementController` — per submitted job on a sharded fleet,
+  pick ``round_robin`` / ``least_loaded`` / ``sticky`` from the observed
+  workload mix (structural-type diversity vs per-shard imbalance),
+  closing the ROADMAP note that placement policy was still static.
 
 The :class:`CostModel` defaults to the roofline constants in
 ``benchmarks/roofline.py`` (V_inf critical-path prices); a one-shot
@@ -338,9 +344,12 @@ class ChunkController:
 
     * **shrink** (halve, floor ``k_min``) when the queue is hot: jobs are
       waiting and the oldest has waited longer than ``hot_wait_s`` (the
-      same signal exported as ``trees_job_queue_wait_seconds``).  A long
-      K starves admission — completions and free regions only surface at
-      boundaries.
+      same signal exported as ``trees_job_queue_wait_seconds``) — or the
+      nearest outstanding *deadline* is within ``tight_slack_s``
+      (DESIGN.md §16: boundaries are the only preemption/admission yield
+      points, so a tightening deadline needs them to come sooner).  A
+      long K starves admission — completions and free regions only
+      surface at boundaries.
     * **widen** (double, cap ``k_max``) while a boundary surfaces no
       completions and nothing is queued: that readback bought nothing,
       so the next chunk should amortize more epochs per sync.
@@ -352,7 +361,8 @@ class ChunkController:
     """
 
     def __init__(self, k_init: int = 1, k_min: int = 1, k_max: int = 4096,
-                 hot_wait_s: float = 0.05, registry=None, app: str = "?"):
+                 hot_wait_s: float = 0.05, tight_slack_s: float = 0.1,
+                 registry=None, app: str = "?"):
         if not (1 <= k_min <= k_init <= k_max):
             raise ValueError(
                 f"need 1 <= k_min <= k_init <= k_max, got "
@@ -362,6 +372,7 @@ class ChunkController:
         self.k_min = int(k_min)
         self.k_max = int(k_max)
         self.hot_wait_s = float(hot_wait_s)
+        self.tight_slack_s = float(tight_slack_s)
         self.widened = 0
         self.shrunk = 0
         self._k_gauge = self._adapt = None
@@ -385,9 +396,18 @@ class ChunkController:
         return self.k
 
     def observe(self, completions: int, queued: int = 0,
-                oldest_wait_s: float = 0.0) -> int:
-        """Feed one chunk boundary; returns the K for the next chunk."""
-        hot = queued > 0 and oldest_wait_s >= self.hot_wait_s
+                oldest_wait_s: float = 0.0,
+                deadline_slack: float = float("inf")) -> int:
+        """Feed one chunk boundary; returns the K for the next chunk.
+
+        ``deadline_slack`` is seconds until the nearest outstanding
+        deadline across queued + running jobs (``inf`` when none): within
+        ``tight_slack_s`` it counts as hot even with an empty queue, so
+        the boundary cadence tightens before the deadline, not after."""
+        hot = (
+            (queued > 0 and oldest_wait_s >= self.hot_wait_s)
+            or deadline_slack <= self.tight_slack_s
+        )
         if hot and self.k > self.k_min:
             self.k = max(self.k_min, self.k // 2)
             self.shrunk += 1
@@ -404,4 +424,97 @@ class ChunkController:
         return self.k
 
 
-QueueProbe = Callable[[], Tuple[int, float]]
+class PlacementController:
+    """Pick the fleet placement policy per workload mix (ROADMAP item).
+
+    ``placement="auto"`` on a sharded fleet routes every placement
+    decision through here, the way ``dispatch="auto"`` routes launch
+    shaping through :class:`DispatchController`.  Placement, like
+    dispatch, only moves *overhead* (which shard a job lands on — never
+    its results), so an online heuristic is safe:
+
+    * **least_loaded** when the fleet runs *imbalanced*: the observed
+      per-shard utilization spread or pending-queue spread exceeds its
+      threshold — evening out load beats any affinity.
+    * **sticky** when the workload is *type-diverse* and balanced: many
+      distinct program structures in the recent submission window means
+      type-affinity maximizes region compatibility on each shard (a
+      queued job only seats into a structurally-equal region, so mixing
+      types across shards strands free regions).
+    * **round_robin** otherwise: a homogeneous balanced workload needs
+      no signal — rotation is the cheapest fair spread.
+    """
+
+    def __init__(self, window: int = 64, spread_hot: float = 0.25,
+                 queue_spread_hot: int = 2, diversity_hot: float = 0.5,
+                 registry=None, app: str = "?"):
+        self.window = int(window)
+        self.spread_hot = float(spread_hot)
+        self.queue_spread_hot = int(queue_spread_hot)
+        self.diversity_hot = float(diversity_hot)
+        self._recent_types: list = []
+        self._util_spread = 0.0
+        self._queue_spread = 0
+        self.decisions: Dict[str, int] = {}
+        self.last_policy: Optional[str] = None
+        self._decided = None
+        if registry is not None:
+            self.bind_registry(registry, app=app)
+
+    def bind_registry(self, registry, app: str = "?") -> None:
+        fam = registry.counter(
+            "trees_controller_placement_total",
+            "placement=auto per-job policy picks", ("app", "policy"),
+        )
+        self._decided = {
+            p: fam.labels(app=app, policy=p)
+            for p in ("round_robin", "least_loaded", "sticky")
+        }
+
+    # -------------------------------------------------------- observation
+    def observe_job(self, type_key) -> None:
+        """Feed one submission's structural type (rolling window)."""
+        self._recent_types.append(type_key)
+        if len(self._recent_types) > self.window:
+            self._recent_types.pop(0)
+
+    def observe_imbalance(self, util_spread: float,
+                          queue_spread: int) -> None:
+        """Feed one collective boundary's imbalance signals: max-min
+        per-shard lane utilization, max-min pending-queue depth."""
+        self._util_spread = float(util_spread)
+        self._queue_spread = int(queue_spread)
+
+    @property
+    def diversity(self) -> float:
+        """Distinct structural types per recent submission (0..1)."""
+        if not self._recent_types:
+            return 0.0
+        return len(set(self._recent_types)) / len(self._recent_types)
+
+    # ----------------------------------------------------------- decision
+    def choose(self) -> str:
+        if (
+            self._util_spread > self.spread_hot
+            or self._queue_spread > self.queue_spread_hot
+        ):
+            policy = "least_loaded"
+        elif (
+            len(self._recent_types) >= 2
+            and len(set(self._recent_types)) >= 2
+            and self.diversity >= self.diversity_hot
+        ):
+            policy = "sticky"
+        else:
+            policy = "round_robin"
+        self.last_policy = policy
+        self.decisions[policy] = self.decisions.get(policy, 0) + 1
+        if self._decided is not None:
+            self._decided[policy].inc()
+        return policy
+
+
+# queue-heat probe fed to the chunk controller: (queued, oldest_wait_s)
+# with an optional third element, seconds of slack to the nearest
+# outstanding deadline (drivers accept both arities)
+QueueProbe = Callable[[], Tuple[float, ...]]

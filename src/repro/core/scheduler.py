@@ -190,6 +190,30 @@ class EpochScheduler:
             self._join.append(cen)
             self._range.append((base, count))
 
+    # -------------------------------------------------- checkpoint support
+    def export_stack(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Snapshot the stacks bottom-to-top as ``(cens i32[sp],
+        ranges i32[sp, 2])`` — the same layout as one row of the device
+        stacks (``jstack[j, :sp]`` / ``rstack[j, :sp]``), so a host
+        scheduler and a device stack row round-trip through one
+        engine-agnostic :class:`~repro.service.jobs.RegionCheckpoint`."""
+        cens = np.asarray(self._join, np.int32)
+        ranges = (
+            np.asarray(self._range, np.int32).reshape(-1, 2)
+            if self._range else np.zeros((0, 2), np.int32)
+        )
+        return cens, ranges
+
+    def load_stack(self, cens, ranges) -> None:
+        """Restore a snapshot taken by :meth:`export_stack` (or sliced off
+        a device stack row): entries are bottom-to-top, replacing any
+        current content."""
+        self._join = [int(c) for c in np.asarray(cens).reshape(-1)]
+        self._range = [
+            (int(s), int(c))
+            for s, c in np.asarray(ranges).reshape(-1, 2)
+        ]
+
 
 # --------------------------------------------------------------------------
 # Multi-stack pop policy (service layer: which jobs fuse into one epoch)
@@ -341,6 +365,37 @@ def reseed_region_stacks(jstack, rstack, sp, j: int, cen: int = 1,
         .at[j, 0, 1].set(count)
     )
     sp = jnp.asarray(sp).at[j].set(1)
+    return jstack, rstack, sp
+
+
+def load_region_stacks(jstack, rstack, sp, j: int, cens, ranges):
+    """Replace region ``j``'s stack row with a checkpointed stack image.
+
+    The multi-entry sibling of :func:`reseed_region_stacks`, used by the
+    preemption path (DESIGN.md §16): a preempted job's
+    :class:`~repro.service.jobs.RegionCheckpoint` carries its whole stack
+    (``sp`` entries, bottom-to-top, the layout
+    :meth:`EpochScheduler.export_stack` emits), and restore writes it back
+    into whichever region of whichever wave the job resumes in.  Returns
+    ``(jstack, rstack, sp)``.
+    """
+    cens = np.asarray(cens, np.int32).reshape(-1)
+    ranges = np.asarray(ranges, np.int32).reshape(-1, 2)
+    n = cens.shape[0]
+    depth = int(np.asarray(jstack).shape[1])
+    if n > depth:
+        raise ValueError(
+            f"checkpointed stack depth {n} exceeds this wave's "
+            f"stack_depth {depth}"
+        )
+    jrow = jnp.zeros((depth,), jnp.int32)
+    rrow = jnp.zeros((depth, 2), jnp.int32)
+    if n:
+        jrow = jrow.at[:n].set(jnp.asarray(cens))
+        rrow = rrow.at[:n].set(jnp.asarray(ranges))
+    jstack = jnp.asarray(jstack).at[j].set(jrow)
+    rstack = jnp.asarray(rstack).at[j].set(rrow)
+    sp = jnp.asarray(sp).at[j].set(n)
     return jstack, rstack, sp
 
 

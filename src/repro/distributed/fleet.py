@@ -127,6 +127,7 @@ class ShardedFleet:
         stack_depth: int = 1 << 10,
         chunk: Any = None,
         placement: str = "round_robin",
+        placement_controller=None,
         rebalance: bool = True,
         collect_stats: bool = True,
         stats_factory: Optional[Callable[[int], Any]] = None,
@@ -141,14 +142,22 @@ class ShardedFleet:
     ):
         if shards < 1:
             raise ValueError(f"a fleet needs >= 1 shard, got {shards}")
-        if placement not in PLACEMENTS:
+        if placement not in PLACEMENTS + ("auto",):
             raise ValueError(
-                f"placement must be one of {PLACEMENTS}, got {placement!r}"
+                f"placement must be one of {PLACEMENTS + ('auto',)}, "
+                f"got {placement!r}"
             )
         if not handles:
             raise ValueError("ShardedFleet needs at least one anchor job")
         self.shards = int(shards)
         self.placement = placement
+        self._pctl = None
+        if placement == "auto":
+            from ..control.controller import PlacementController
+
+            self._pctl = (
+                placement_controller or PlacementController()
+            )
         self.rebalance = bool(rebalance)
         self.tracer = tracer or NULL_TRACER
         self.migrations = 0
@@ -262,9 +271,15 @@ class ShardedFleet:
         )
 
     def _place(self, job: Job) -> int:
-        if self.placement == "sticky":
+        policy = self.placement
+        if self._pctl is not None:
+            # placement="auto": the controller re-picks the concrete
+            # policy per job from the observed workload mix
+            self._pctl.observe_job(_type_key(job))
+            policy = self._pctl.choose()
+        if policy == "sticky":
             return _type_key(job) % self.shards
-        if self.placement == "least_loaded":
+        if policy == "least_loaded":
             return min(range(self.shards), key=self._load)
         p = self._rr
         self._rr = (self._rr + 1) % self.shards
@@ -470,18 +485,51 @@ class ShardedFleet:
                     jobs=len(riders[p]), **sh.last_deltas,
                 ):
                     pass
-        # chunk-controller feedback, ONCE per collective boundary: the
-        # fleet queue is its internal shard queues plus whatever external
-        # queue the service reports
+        # controller feedback, ONCE per collective boundary: the fleet
+        # queue is its internal shard queues plus whatever external queue
+        # the service reports (the probe's optional third element is the
+        # admission layer's nearest-deadline slack)
+        if self._pctl is not None:
+            loads = [len(q) for q in self._pending]
+            self._pctl.observe_imbalance(
+                self.utilization_spread(), max(loads) - min(loads)
+            )
         if self._kctl is not None:
             queued = sum(len(q) for q in self._pending)
-            oldest = 0.0
+            oldest, slack = 0.0, None
             if self._queue_probe is not None:
-                ext_q, ext_oldest = self._queue_probe()
-                queued += ext_q
-                oldest = ext_oldest
-            self._kctl.observe(len(done), queued, oldest)
+                probe = self._queue_probe()
+                queued += probe[0]
+                oldest = probe[1]
+                if len(probe) > 2:
+                    slack = probe[2]
+            if slack is None:
+                self._kctl.observe(len(done), queued, oldest)
+            else:
+                self._kctl.observe(
+                    len(done), queued, oldest, deadline_slack=slack
+                )
         return done
+
+    # ---------------------------------------------------------- preemption
+    def running_handles(self) -> List[JobHandle]:
+        out: List[JobHandle] = []
+        for sh in self._shards:
+            out.extend(sh.running_handles())
+        return out
+
+    def preempt(self, handle: JobHandle) -> bool:
+        """Lift a running job off whichever shard holds it into its
+        engine-agnostic checkpoint (the region goes vacant).  Works only
+        at collective boundaries — exactly when the service calls it —
+        because the shard's carry must be host-attached to capture."""
+        for p, sh in enumerate(self._shards):
+            if any(
+                r.handle is handle and r.running for r in sh._regions
+            ):
+                self._view(p)  # capture/vacate mutate the carry
+                return sh.preempt(handle)
+        return False
 
     def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
         out: List[JobHandle] = []

@@ -9,7 +9,8 @@
 # streaming completions and region reuse at the chunk boundaries; K=∞ is
 # the fully resident O(1) wave).  Structurally identical consecutive device
 # waves reuse one compiled chunk template (WaveTemplateCache).
-from .api import JobService, merge_stats
+from .admission import AdmissionController, QuotaClass
+from .api import JobFuture, JobService, merge_stats
 from .jobs import (
     AdmissionError,
     Job,
@@ -18,6 +19,7 @@ from .jobs import (
     JobResult,
     JobStats,
     JobStatus,
+    RegionCheckpoint,
     WaveTemplate,
     WaveTemplateCache,
     canonical_wave_order,
@@ -31,16 +33,20 @@ from .multiplexer import (
 )
 
 __all__ = [
+    "AdmissionController",
     "AdmissionError",
     "DeviceMultiplexer",
     "EpochMultiplexer",
     "Job",
     "JobFailure",
+    "JobFuture",
     "JobHandle",
     "JobResult",
     "JobService",
     "JobStats",
     "JobStatus",
+    "QuotaClass",
+    "RegionCheckpoint",
     "TenantSlot",
     "WaveTemplate",
     "WaveTemplateCache",

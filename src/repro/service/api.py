@@ -1,24 +1,47 @@
-"""Submission surface of the epoch-multiplexing job service.
+"""Execution surface of the layered serving front door (DESIGN.md §16).
 
 :class:`JobService` is the multi-tenant front door: ``submit`` enqueues a
-program (any app, any arguments) with a TV-region quota, ``poll`` reports
-its lifecycle state, ``result`` drives the fleet until that job finishes,
-and ``completions`` streams handles the moment each job's scheduler drains.
+program (any app, any arguments) with a TV-region quota — optionally under
+a :class:`~repro.service.admission.QuotaClass` with a priority and a
+deadline — ``poll`` reports its lifecycle state, ``result`` drives the
+fleet until that job finishes, and ``completions`` streams handles the
+moment each job's scheduler drains.  ``submit_async`` /
+:meth:`JobService.stream_results` are the non-blocking face of the same
+queue: a :class:`JobFuture` awaits one job while the service keeps pumping
+waves cooperatively, so callers never block on a whole wave.
+
+The service stack is three layers (``admission.py`` module docstring):
+the :class:`~repro.service.admission.AdmissionController` decides *which*
+queued jobs form the next wave and *who* yields a region (EDF within
+priority, class shares, token buckets, preemption plans); the wave
+drivers in ``multiplexer.py``/``distributed/fleet.py`` execute those
+plans at chunk boundaries through the one reseed path; this module is the
+surface that wires them together.
 
 The service runs jobs in *waves*: a wave is one fused
 :class:`~repro.service.multiplexer.EpochMultiplexer` fleet (up to
 ``max_jobs`` jobs whose quotas fit the capacity budget and whose value
 dtypes agree).  While a wave is in flight, queued jobs whose program
 template matches a freed region are admitted mid-flight (streaming
-multi-tenancy, no retrace); everything else waits for the next wave.
+multi-tenancy, no retrace); everything else waits for the next wave.  At
+each chunk boundary the admission layer may also *preempt*: a running
+job lifts into an engine-agnostic
+:class:`~repro.service.jobs.RegionCheckpoint` and re-queues, its region
+goes to a strictly-higher-priority waiter, and the resumed run stays
+bit-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
+import asyncio
 import itertools
-from typing import Any, Dict, Iterator, List, Mapping, Optional
+import time
+from typing import (
+    Any, AsyncIterator, Callable, Dict, Iterator, List, Mapping, Optional,
+)
 
 from ..core.program import InitialTask, Program
 from ..core.scheduler import RunStats
+from .admission import AdmissionController, QuotaClass
 from .jobs import (
     AdmissionError,
     Job,
@@ -43,6 +66,49 @@ def merge_stats(into: RunStats, s: RunStats) -> RunStats:
     next to ``as_dict`` — the shared metric vocabulary).
     """
     return into.merge(s)
+
+
+class JobFuture:
+    """Awaitable face of one submitted job.
+
+    Awaiting it drives the service cooperatively — one :meth:`JobService.
+    _pump` per event-loop turn, yielding control between pumps — until
+    *this* job reaches a terminal state.  Any number of futures may be
+    awaited concurrently (``asyncio.gather``): they share the service's
+    single-threaded pump, so progress interleaves without locks and
+    whichever future's job finishes first resolves first.
+    """
+
+    def __init__(self, service: "JobService", handle: JobHandle):
+        self.service = service
+        self.handle = handle
+
+    @property
+    def job_id(self) -> int:
+        return self.handle.job_id
+
+    @property
+    def status(self) -> JobStatus:
+        return self.handle.status
+
+    def done(self) -> bool:
+        return self.handle.done
+
+    async def result(self) -> JobResult:
+        h = self.handle
+        while not h.done:
+            if not self.service._pending():
+                raise RuntimeError(
+                    f"job {h.job.name!r} cannot make progress"
+                )
+            self.service._pump()
+            await asyncio.sleep(0)
+        if h.status is JobStatus.FAILED:
+            raise h.error
+        return h.result
+
+    def __await__(self):
+        return self.result().__await__()
 
 
 class JobService:
@@ -116,6 +182,11 @@ class JobService:
         placement: str = "round_robin",
         rebalance: bool = True,
         calibrate: bool = True,
+        classes: Optional[List[QuotaClass]] = None,
+        admission: Optional[AdmissionController] = None,
+        preemption: bool = True,
+        evict_over_deadline: bool = False,
+        clock: Callable[[], float] = time.monotonic,
     ):
         if engine not in ("host", "device", "sharded"):
             raise ValueError(
@@ -127,9 +198,9 @@ class JobService:
 
             if shards < 1:
                 raise ValueError(f"shards must be >= 1, got {shards}")
-            if placement not in PLACEMENTS:
+            if placement not in PLACEMENTS + ("auto",):
                 raise ValueError(
-                    f"placement must be one of {PLACEMENTS}, "
+                    f"placement must be one of {PLACEMENTS + ('auto',)}, "
                     f"got {placement!r}"
                 )
         elif shards != 1:
@@ -227,6 +298,31 @@ class JobService:
             self.chunk_controller = ChunkController()
             if metrics is not None:
                 self.chunk_controller.bind_registry(metrics, app="service")
+        # placement="auto" (sharded): the controller lives here so its
+        # workload-mix window carries across waves, like the K controller
+        self.placement_controller = None
+        if engine == "sharded" and placement == "auto":
+            from ..control.controller import PlacementController
+
+            self.placement_controller = PlacementController()
+            if metrics is not None:
+                self.placement_controller.bind_registry(
+                    metrics, app="service"
+                )
+        # admission layer (DESIGN.md §16): the policy brain this surface
+        # delegates wave assembly and preemption planning to.  An explicit
+        # controller wins (its clock becomes the service clock so handle
+        # stamps and deadline arithmetic share one timebase).
+        if admission is not None:
+            self.admission = admission
+            self._clock = admission.clock
+        else:
+            self.admission = AdmissionController(
+                classes=classes, clock=clock,
+                evict_over_deadline=evict_over_deadline,
+            )
+            self._clock = clock
+        self.preemption = bool(preemption)
         self._ids = itertools.count()
         self._queue: List[JobHandle] = []
         self._handles: Dict[int, JobHandle] = {}
@@ -286,9 +382,14 @@ class JobService:
         return factory
 
     def _observe_completions(self, done: List[JobHandle]) -> None:
-        """Feed the per-tenant lifecycle series for newly finished jobs:
-        queue-wait and run-time latency histograms plus a completion
-        counter labeled by terminal status."""
+        """Record deadline outcomes with the admission layer and feed the
+        per-tenant/per-class lifecycle series for newly finished jobs:
+        queue-wait and run-time latency histograms, completion counters by
+        terminal status, and the per-class deadline scoreboard."""
+        # admission accounting happens with or without a registry
+        outcomes = {
+            h.job_id: self.admission.note_finished(h) for h in done
+        }
         if self.metrics is None or not done:
             return
         r = self.metrics
@@ -305,13 +406,41 @@ class JobService:
             "trees_jobs_finished_total",
             "jobs reaching a terminal status", ("tenant", "status"),
         )
+        # per-class series (new names: the registry pins labelnames per
+        # metric, so class-labeled series cannot share the tenant ones)
+        cqw = r.histogram(
+            "trees_class_queue_wait_seconds",
+            "queue wait by quota class", ("klass",),
+        )
+        dmiss = r.counter(
+            "trees_deadline_misses_total",
+            "deadlined jobs finishing past their deadline", ("klass",),
+        )
+        dmet = r.counter(
+            "trees_deadlines_met_total",
+            "deadlined jobs finishing in time", ("klass",),
+        )
+        ratio = r.gauge(
+            "trees_deadline_miss_ratio",
+            "misses / (misses + met) per quota class", ("klass",),
+        )
         for h in done:
             tenant = h.job.name or h.job.program.name
             if h.queue_wait is not None:
                 qw.labels(tenant=tenant).observe(h.queue_wait)
+                cqw.labels(klass=h.klass).observe(h.queue_wait)
             if h.run_time is not None:
                 rt.labels(tenant=tenant).observe(h.run_time)
             fin.labels(tenant=tenant, status=h.status.value).inc()
+            met = outcomes[h.job_id]
+            if met is True:
+                dmet.labels(klass=h.klass).inc()
+            elif met is False:
+                dmiss.labels(klass=h.klass).inc()
+            if met is not None:
+                ratio.labels(klass=h.klass).set(
+                    self.admission.miss_ratio(h.klass)
+                )
         # completions follow the wave's compiled steps, so the trace-count
         # gauge set at lookup time (pre-compile) is refreshed here with
         # whatever the wave actually traced
@@ -320,10 +449,21 @@ class JobService:
             "traced builder bodies across all wave templates",
         ).labels().set(self.template_cache.trace_count)
 
+    def _observe_preemption(self, h: JobHandle) -> None:
+        """Count one executed preemption, labeled by quota class."""
+        if self.metrics is None:
+            return
+        self.metrics.counter(
+            "trees_job_preemptions_total",
+            "running jobs checkpointed and re-queued at a chunk boundary",
+            ("klass",),
+        ).labels(klass=h.klass).inc()
+
     def _observe_template_cache(self, hit: bool) -> None:
         """Mirror the wave-template cache's reuse counters into the
-        registry (hit/miss per wave build, plus the monotone trace-count
-        gauge the compile-regression guard watches)."""
+        registry (hit/miss per wave build, LRU evictions, plus the
+        monotone trace-count gauge the compile-regression guard
+        watches)."""
         if self.metrics is None:
             return
         r = self.metrics
@@ -331,6 +471,10 @@ class JobService:
             "trees_wave_template_lookups_total",
             "wave-template cache lookups", ("outcome",),
         ).labels(outcome="hit" if hit else "miss").inc()
+        r.gauge(
+            "trees_wave_template_evictions",
+            "wave templates LRU-evicted from the cache so far",
+        ).labels().set(self.template_cache.evictions)
         r.gauge(
             "trees_wave_template_traces",
             "traced builder bodies across all wave templates",
@@ -344,9 +488,21 @@ class JobService:
         heap_init: Optional[Mapping[str, Any]] = None,
         quota: Optional[int] = None,
         name: str = "",
+        priority: int = 0,
+        deadline: Optional[float] = None,
+        klass: str = "default",
     ) -> JobHandle:
         """Admit a job into the queue; raises AdmissionError if it can
-        never run on this service."""
+        never run on this service.
+
+        ``priority`` orders admission (higher first; overrides the class
+        priority when nonzero) and gates preemption — a queued job evicts
+        running work only when strictly higher-priority.  ``deadline`` is
+        *relative* seconds from now on the service clock; the admission
+        layer schedules EDF within each priority band, tightens the chunk
+        cadence as it approaches, and scores met/missed per class.
+        ``klass`` names a :class:`~repro.service.admission.QuotaClass`
+        configured at service construction."""
         job = Job(
             program=program,
             initial=initial,
@@ -355,13 +511,25 @@ class JobService:
             name=name or program.name,
         )
         validate_job(job, self.capacity)
-        handle = JobHandle(job_id=next(self._ids), job=job)
+        if klass not in self.admission.classes:
+            raise AdmissionError(
+                f"job {job.name!r}: unknown quota class {klass!r} "
+                f"(known: {sorted(self.admission.classes)})"
+            )
+        handle = JobHandle(
+            job_id=next(self._ids), job=job, clock=self._clock,
+            priority=int(priority),
+            deadline=(
+                None if deadline is None else self._clock() + deadline
+            ),
+            klass=klass,
+        )
         self._handles[handle.job_id] = handle
         self._queue.append(handle)
         return handle
 
     def submit_case(self, case, quota: Optional[int] = None,
-                    name: str = "") -> JobHandle:
+                    name: str = "", **kw) -> JobHandle:
         """Submit a registered :class:`~repro.apps.registry.AppCase`."""
         return self.submit(
             case.program,
@@ -369,7 +537,12 @@ class JobService:
             heap_init=dict(case.heap_init),
             quota=quota or case.capacity,
             name=name or case.name,
+            **kw,
         )
+
+    def submit_async(self, *args, **kw) -> JobFuture:
+        """:meth:`submit`, wrapped in an awaitable :class:`JobFuture`."""
+        return JobFuture(self, self.submit(*args, **kw))
 
     # -------------------------------------------------------------- query
     def poll(self, handle: JobHandle) -> JobStatus:
@@ -399,6 +572,29 @@ class JobService:
         completion order."""
         return list(self.completions())
 
+    async def stream_results(self) -> AsyncIterator[JobHandle]:
+        """Async face of :meth:`completions`: yield handles as they
+        finish, ceding the event loop between pumps so concurrent
+        coroutines (more submits, per-job awaits) interleave."""
+        while self._pending():
+            for h in self._pump():
+                yield h
+            await asyncio.sleep(0)
+
+    def preempt(self, handle: JobHandle) -> bool:
+        """Preempt one running job at the next opportunity *now*: lift it
+        into its checkpoint, re-queue it, free its region.  Returns False
+        if the job is not currently seated (queued, finished, or the wave
+        driver cannot checkpoint mid-flight — e.g. an unchunked resident
+        wave has no boundary to capture at)."""
+        if self._mux is None or not self._mux.preempt(handle):
+            return False
+        self.admission.note_preempted(handle)
+        self._observe_preemption(handle)
+        self._queue.append(handle)
+        self._admit_ready = True
+        return True
+
     def stats(self) -> RunStats:
         """Fleet-level stats accumulated across every wave so far."""
         total = merge_stats(RunStats(), self._stats)
@@ -417,16 +613,21 @@ class JobService:
     # ------------------------------------------------------------ internal
     def _queue_probe(self):
         """Queue-heat signal for the chunk controller: (queued jobs, the
-        oldest queued job's wait in seconds) — the same quantity exported
-        as ``trees_job_queue_wait_seconds`` once the job finally runs."""
+        oldest queued job's wait in seconds, seconds of slack to the
+        nearest outstanding deadline).  The first two are the same
+        quantities exported as ``trees_job_queue_wait_seconds``; the third
+        lets the controller tighten K *before* a deadline, not after."""
+        running = (
+            self._mux.running_handles() if self._mux is not None else ()
+        )
+        slack = self.admission.deadline_slack(self._queue, running)
         if not self._queue:
-            return (0, 0.0)
-        import time
-
-        now = time.monotonic()
+            return (0, 0.0, slack)
+        now = self._clock()
         return (
             len(self._queue),
             max(now - h.submitted_at for h in self._queue),
+            slack,
         )
 
     def _pending(self) -> bool:
@@ -489,6 +690,7 @@ class JobService:
                         stack_depth=self.stack_depth,
                         chunk=self.chunk,
                         placement=self.placement,
+                        placement_controller=self.placement_controller,
                         rebalance=self.rebalance,
                         collect_stats=self.collect_stats,
                         stats_factory=self._sharded_stats_factory(),
@@ -557,43 +759,60 @@ class JobService:
             self._admit_ready = False
         elif self._admit_ready and self._queue:
             # streaming admission: seed queued jobs into regions freed by
-            # the completions of the previous step (a region can only free
-            # on a completion, so skip the scan on every other epoch)
-            still: List[JobHandle] = []
-            for h in self._queue:
-                if not self._mux.admit(h):
-                    still.append(h)
-            self._queue = still
+            # the completions (or preemptions) of the previous step — a
+            # region can only free at those events, so skip the scan on
+            # every other epoch
+            self._admit_queued()
             self._admit_ready = False
         done = self._mux.step()
         if done:
             self._admit_ready = True
             self._observe_completions(done)
+        # preemption (DESIGN.md §16): the step just crossed a chunk
+        # boundary, the only place a region can yield.  Seat what free
+        # regions absorb first — a free region always beats evicting work
+        # — then ask admission who must yield for whoever is still stuck.
+        if self.preemption and self._queue and self._mux.live:
+            self._admit_queued()
+            victims = self.admission.plan_preemptions(
+                self._mux.running_handles(), self._queue
+            ) if self._queue else []
+            for v in victims:
+                if self._mux.preempt(v):
+                    self.admission.note_preempted(v)
+                    self._observe_preemption(v)
+                    self._queue.append(v)
+                    self._admit_ready = True
         return done
 
-    def _take_wave(self) -> List[JobHandle]:
-        """Greedy FIFO wave packing under the capacity/max_jobs budget.
-
-        The first queued job anchors the wave's value dtype; later queued
-        jobs join only if they fit the remaining budget and dtype.  Jobs
-        left behind simply wait for a later wave — admission control never
-        reorders a job ahead of a *compatible* earlier one.
-        """
-        wave: List[JobHandle] = []
-        left: List[JobHandle] = []
-        budget = self.capacity
-        for h in self._queue:
-            if len(wave) < self.max_jobs and h.job.quota <= budget:
-                try:
-                    check_fleet_dtype(
-                        [w.job.program for w in wave] + [h.job.program]
-                    )
-                except AdmissionError:
-                    left.append(h)
-                    continue
-                wave.append(h)
-                budget -= h.job.quota
+    def _admit_queued(self) -> int:
+        """Try to seat queued jobs into free regions of the live wave, in
+        admission order, consuming class rate tokens per seat."""
+        seated = 0
+        still: List[JobHandle] = []
+        for h in self.admission.order(self._queue):
+            if (
+                self.admission.has_token(h)
+                and self._mux.admit(h)
+                and self.admission.allow(h)
+            ):
+                seated += 1
             else:
-                left.append(h)
-        self._queue = left
+                still.append(h)
+        still.sort(key=lambda h: h.job_id)
+        self._queue = still
+        return seated
+
+    def _take_wave(self) -> List[JobHandle]:
+        """Assemble the next wave — delegated to the admission layer.
+
+        :meth:`~repro.service.admission.AdmissionController.take_wave`
+        packs first-fit in admission order (priority desc, EDF, FIFO)
+        under the capacity / max_jobs / dtype / class-share budgets.
+        With no priorities, deadlines, or class limits configured this is
+        exactly the greedy FIFO first-fit this method used to inline.
+        """
+        wave, self._queue = self.admission.take_wave(
+            self._queue, self.capacity, self.max_jobs
+        )
         return wave

@@ -21,18 +21,22 @@ import collections
 import dataclasses
 import enum
 import time
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
+)
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.program import InitialTask, Program
 
 
 class JobStatus(enum.Enum):
-    QUEUED = "queued"      # submitted, waiting for a region
-    RUNNING = "running"    # co-scheduled in the shared TVM
-    DONE = "done"          # scheduler drained; result extracted
-    FAILED = "failed"      # outgrew its quota (region overflow)
+    QUEUED = "queued"        # submitted, waiting for a region
+    RUNNING = "running"      # co-scheduled in the shared TVM
+    PREEMPTED = "preempted"  # checkpointed at a boundary, requeued
+    DONE = "done"            # scheduler drained; result extracted
+    FAILED = "failed"        # outgrew its quota (region overflow)
 
 
 class AdmissionError(ValueError):
@@ -74,6 +78,21 @@ class JobStats:
     shared_dispatches: int = 0
     shared_transfers: int = 0
 
+    def solo_dict(self) -> Dict[str, int]:
+        """The four fields a solo ``RunStats`` must match bit-for-bit.
+
+        ``shared_dispatches``/``shared_transfers`` are *service* economics
+        (how many fused launches the job rode on) and legitimately differ
+        between an uninterrupted run and a preempt/resume round trip; the
+        solo-comparable fields may not.
+        """
+        return {
+            "epochs": self.epochs,
+            "tasks_executed": self.tasks_executed,
+            "total_forks": self.total_forks,
+            "peak_tv_slots": self.peak_tv_slots,
+        }
+
 
 @dataclasses.dataclass
 class JobResult:
@@ -91,16 +110,58 @@ class JobResult:
 
 
 @dataclasses.dataclass
+class RegionCheckpoint:
+    """A preempted job's region, lifted off the wave at a chunk boundary.
+
+    Engine-agnostic: the host multiplexer's per-region
+    :class:`~repro.core.scheduler.EpochScheduler` and the resident drivers'
+    stack rows share one discipline (list index <-> stack row, LIFO with
+    same-CEN coalescing), so both capture into and restore from this one
+    form.  Everything position-dependent is stored *region-relative*
+    (``child_base``, range starts, the arena cursor), which is exactly the
+    "bit-identical shifted copy" invariant that already justifies region
+    reuse — restore may land the job in a *different* region of a
+    *different* wave and still replay identically.
+    """
+
+    structural_hash: Any    # whatever Program.structural_hash() returns
+    quota: int
+    # TV columns, sliced to [quota, ...]; child_base is region-relative.
+    tv: Dict[str, np.ndarray]
+    # tenant-local heap (namespace prefix already stripped)
+    heap: Dict[str, Any]
+    arena_next_off: int        # arena cursor - region base
+    sp: int                    # scheduler stack depth at capture
+    jstack: np.ndarray         # i32[sp]   pending CENs (bottom -> top)
+    rstack: np.ndarray         # i32[sp,2] (start-offset, count) per entry
+    job_epochs: int = 0        # accumulator snapshot (solo-comparable)
+    job_tasks: int = 0
+    job_forks: int = 0
+    job_peak: int = 0
+    stats: Optional[JobStats] = None
+
+
+@dataclasses.dataclass
 class JobHandle:
     """Submission ticket: poll ``status``, read ``result`` when DONE.
 
-    Lifecycle timestamps (``time.monotonic`` seconds) are stamped at the
-    QUEUED -> RUNNING -> DONE/FAILED transitions, so per-tenant latency
-    splits into the two numbers a serving operator actually tunes:
-    ``queue_wait`` (admission backpressure — capacity vs quota pressure)
-    and ``run_time`` (co-scheduled execution).  The service feeds both into
-    the ``trees_job_queue_wait_seconds`` / ``trees_job_run_seconds``
-    histograms (DESIGN.md §13).
+    Lifecycle timestamps are stamped from one injectable monotonic
+    ``clock`` (``time.monotonic`` by default) at the QUEUED -> RUNNING ->
+    DONE/FAILED transitions, so per-tenant latency splits into the two
+    numbers a serving operator actually tunes: ``queue_wait`` (admission
+    backpressure — capacity vs quota pressure) and ``run_time``
+    (co-scheduled execution).  The service feeds both into the
+    ``trees_job_queue_wait_seconds`` / ``trees_job_run_seconds``
+    histograms (DESIGN.md §13).  Every stamp goes through the same clock —
+    mixing wall-clock submit stamps with monotonic transition stamps would
+    let queue-wait go negative across clock adjustments; the injectable
+    clock also lets the load generator run on deterministic virtual time.
+
+    ``priority`` / ``deadline`` / ``klass`` feed the admission layer
+    (DESIGN.md §16): ``deadline`` is absolute, in clock seconds (the
+    service converts a relative deadline at submit).  ``checkpoint`` is
+    non-None exactly while the job is PREEMPTED: the region image that a
+    later wave restores instead of seeding from scratch.
     """
 
     job_id: int
@@ -108,11 +169,23 @@ class JobHandle:
     status: JobStatus = JobStatus.QUEUED
     result: Optional[JobResult] = None
     error: Optional[Exception] = None
-    submitted_at: float = dataclasses.field(
-        default_factory=time.monotonic
-    )
+    submitted_at: Optional[float] = None
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
+    clock: Callable[[], float] = dataclasses.field(
+        default=time.monotonic, repr=False
+    )
+    priority: int = 0
+    deadline: Optional[float] = None
+    klass: str = "default"
+    preemptions: int = 0
+    checkpoint: Optional[RegionCheckpoint] = dataclasses.field(
+        default=None, repr=False
+    )
+
+    def __post_init__(self) -> None:
+        if self.submitted_at is None:
+            self.submitted_at = self.clock()
 
     @property
     def done(self) -> bool:
@@ -123,12 +196,24 @@ class JobHandle:
         wave reseeds regions across chunks, only the first admit counts)."""
         self.status = JobStatus.RUNNING
         if self.started_at is None:
-            self.started_at = time.monotonic()
+            self.started_at = self.clock()
 
     def mark_finished(self) -> None:
         """Stamp the terminal transition (status set by the caller)."""
         if self.finished_at is None:
-            self.finished_at = time.monotonic()
+            self.finished_at = self.clock()
+
+    def mark_preempted(self, checkpoint: RegionCheckpoint) -> None:
+        """RUNNING -> PREEMPTED: park the region image on the handle.
+
+        The job re-enters the queue as a restartable unit; admission
+        treats it like a QUEUED job whose seed is the checkpoint.  The
+        ``started_at`` stamp is kept — queue_wait measures time to *first*
+        placement, and run_time keeps covering the whole span (preemption
+        is the service's choice, not the tenant's)."""
+        self.status = JobStatus.PREEMPTED
+        self.checkpoint = checkpoint
+        self.preemptions += 1
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -257,6 +342,7 @@ class WaveTemplateCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self._entries: "collections.OrderedDict[Tuple, WaveTemplate]" = (
             collections.OrderedDict()
         )
@@ -287,6 +373,7 @@ class WaveTemplateCache:
         self._entries.move_to_end(template.key)
         while len(self._entries) > self.max_entries:
             _, evicted = self._entries.popitem(last=False)
+            self.evictions += 1
             self._evicted_traces += evicted.loop.trace_count
 
     @property

@@ -62,7 +62,9 @@ from ..core.engine import (
     ChunkSummary,
     EpochLoop,
     _COMPACTED_RESIDENT_MSG,
+    _HILO_BASE,
     _fresh_resident_carry,
+    _hilo_value,
     resolve_resident_dispatch,
 )
 from ..control.controller import ChunkController
@@ -75,6 +77,7 @@ from ..core.scheduler import (
     RunStatsCollector,
     StatsCollector,
     batched_device_stacks,
+    load_region_stacks,
     reseed_region_stacks,
     resolve_mux_policy,
     resolve_policy,
@@ -86,6 +89,7 @@ from .jobs import (
     JobResult,
     JobStats,
     JobStatus,
+    RegionCheckpoint,
     check_fleet_dtype,
     validate_job,
 )
@@ -374,6 +378,11 @@ class _FleetBase:
                 [j.program for j in jobs], [j.quota for j in jobs]
             )
         self._col = self._collector()
+        # (region index, handle) pairs whose TV image must be restored from
+        # a RegionCheckpoint once the driver's runtime state exists — the
+        # host driver restores at construction, the resident driver at its
+        # first chunk (the carry is built lazily)
+        self._restore_pending: List[Tuple[int, JobHandle]] = []
         self._init_fleet(handles)
 
     def _collector(self) -> StatsCollector:
@@ -397,14 +406,20 @@ class _FleetBase:
         self._heap: Dict[str, jnp.ndarray] = {}
         for slot, h in zip(self._slots, handles):
             slot_job[slot.base : slot.end] = slot.index
-            if h is None:
+            if h is None or h.checkpoint is not None:
                 # vacant region: TV slots stay zeroed (epoch 0 matches no
                 # frontier), the tenant heap gets its declared-default
                 # arrays so the fused program's traced steps see every
-                # key; a tenant seats later via the admit/reseed path
+                # key; a tenant seats later via the admit/reseed path.
+                # A *checkpointed* handle (preempted elsewhere, resuming
+                # in this wave) is seated the same lazy way — its region
+                # image restores through ``_restore_region`` once the
+                # driver's runtime state exists, never by reseeding.
                 for k, v in slot.program.init_heap().items():
                     self._heap[slot.prefix + k] = v
                 self._regions.append(_Region(slot=slot))
+                if h is not None:
+                    self._restore_pending.append((slot.index, h))
                 continue
             job = h.job
             tid = slot.task_offset + slot.program.task_id(job.initial.task)
@@ -480,7 +495,10 @@ class _FleetBase:
                 s.program.structural_hash() != job.program.structural_hash()
             ):
                 continue
-            self._seed_region(r, handle)
+            if handle.checkpoint is not None:
+                self._restore_region(r, handle)
+            else:
+                self._seed_region(r, handle)
             return True
         return False
 
@@ -489,6 +507,129 @@ class _FleetBase:
 
     def _seed_region(self, r: _Region, handle: JobHandle) -> None:
         raise NotImplementedError
+
+    # --------------------------------------------------------- preemption
+    def preempt(self, handle: JobHandle) -> bool:
+        """Evict a RUNNING job at the current boundary (DESIGN.md §16).
+
+        The job's region — TV columns, tenant heap, arena cursor, stack
+        entries, accumulators — lifts into an engine-agnostic
+        :class:`~repro.service.jobs.RegionCheckpoint` on the handle, the
+        region is vacated (free for admission), and the handle moves to
+        PREEMPTED.  Re-admitting the handle (same wave later, or any other
+        wave whose layout fits) restores the image through
+        ``_restore_region`` and the job continues bit-identically to an
+        uninterrupted run.  Returns False when the driver is not at a
+        yield point (``_admits_midflight`` — e.g. a fully resident wave)
+        or the handle is not running here.
+        """
+        if not self._admits_midflight():
+            return False
+        for j, r in enumerate(self._regions):
+            if r.handle is handle and r.running:
+                cp = self._capture_region(j)
+                self._release(j)
+                self._vacate(j)
+                handle.mark_preempted(cp)
+                return True
+        return False
+
+    def running_handles(self) -> List[JobHandle]:
+        """The handles currently seated in this wave's regions."""
+        return [r.handle for r in self._regions if r.running]
+
+    def _capture_region(self, j: int) -> RegionCheckpoint:
+        raise NotImplementedError
+
+    def _restore_region(self, r: _Region, handle: JobHandle) -> None:
+        raise NotImplementedError
+
+    def _vacate(self, j: int) -> None:
+        """Driver-specific cleanup after a region's tenant was captured
+        (the host driver needs none: with the scheduler gone, the stale
+        TV content is unreachable — no pop ever targets the region)."""
+
+    def _capture_tv(self, r: _Region):
+        """The TVM half of a capture, shared by both drivers: the job's
+        TV columns (position-dependent ones region-relative), its tenant
+        heap (namespace stripped), and the arena cursor offset.
+
+        Task codes are stored relative to the slot's fuse-time task-table
+        offset and ``child_base`` relative to the region base — the
+        restore target may be a different slot of a different fused
+        program.  Lanes never written (epoch 0 / no children) are stored
+        as zeros rather than translated: they are inert either way (the
+        TMS epoch check skips them) and zeros keep the image independent
+        of the source wave's offsets.
+        """
+        s = r.slot
+        sub = s.program
+        q = r.active_quota
+        tgt = slice(s.base, s.base + q)
+        epoch = np.asarray(self._state.epoch[tgt], np.int32)
+        task = np.asarray(self._state.task[tgt], np.int32)
+        child_count = np.asarray(self._state.child_count[tgt], np.int32)
+        child_base = np.asarray(self._state.child_base[tgt], np.int32)
+        tv = {
+            "epoch": epoch,
+            "task_rel": np.where(
+                epoch > 0, task - s.task_offset, 0
+            ).astype(np.int32),
+            "argi": np.asarray(
+                self._state.argi[tgt, : sub.n_arg_i], np.int32
+            ),
+            "argf": np.asarray(
+                self._state.argf[tgt, : sub.n_arg_f], np.float32
+            ),
+            "value": np.asarray(
+                self._state.value[tgt, : sub.value_width]
+            ),
+            "child_count": child_count,
+            "child_base_rel": np.where(
+                child_count > 0, child_base - s.base, 0
+            ).astype(np.int32),
+        }
+        heap = {hv.name: self._heap[s.prefix + hv.name] for hv in sub.heap}
+        next_off = int(np.asarray(self._arena.next)[s.index]) - s.base
+        return tv, heap, next_off
+
+    def _restore_state(self, state: tvm.TVMState, slot: TenantSlot,
+                       cp: RegionCheckpoint) -> tvm.TVMState:
+        """The TVM half of a restore: clear the slot region (as
+        ``_seed_state`` does) and write the checkpoint image shifted to
+        this slot's base and task-table offset, padded to this fused
+        program's argument/value widths (the tenant's own columns are a
+        prefix; padding stays zero, exactly the fuse-time layout)."""
+        fused = self.program
+        sl = slice(slot.base, slot.end)
+        q = cp.quota
+        tgt = slice(slot.base, slot.base + q)
+        epoch = cp.tv["epoch"]
+        task = np.where(
+            epoch > 0, cp.tv["task_rel"] + slot.task_offset, 0
+        ).astype(np.int32)
+        cb = np.where(
+            cp.tv["child_count"] > 0,
+            cp.tv["child_base_rel"] + slot.base, 0,
+        ).astype(np.int32)
+        argi = np.zeros((q, fused.n_arg_i), np.int32)
+        argi[:, : cp.tv["argi"].shape[1]] = cp.tv["argi"]
+        argf = np.zeros((q, fused.n_arg_f), np.float32)
+        argf[:, : cp.tv["argf"].shape[1]] = cp.tv["argf"]
+        value = np.zeros((q, fused.value_width), jnp.dtype(fused.value_dtype))
+        value[:, : cp.tv["value"].shape[1]] = cp.tv["value"]
+        return tvm.TVMState(
+            task=state.task.at[sl].set(0).at[tgt].set(jnp.asarray(task)),
+            argi=state.argi.at[sl].set(0).at[tgt].set(jnp.asarray(argi)),
+            argf=state.argf.at[sl].set(0.0).at[tgt].set(jnp.asarray(argf)),
+            epoch=state.epoch.at[sl].set(0).at[tgt].set(jnp.asarray(epoch)),
+            value=state.value.at[sl].set(0).at[tgt].set(jnp.asarray(value)),
+            child_base=state.child_base.at[sl].set(0).at[tgt].set(
+                jnp.asarray(cb)),
+            child_count=state.child_count.at[sl].set(0).at[tgt].set(
+                jnp.asarray(cp.tv["child_count"])),
+            next_free=state.next_free,
+        )
 
     def _seed_state(self, state: tvm.TVMState, slot: TenantSlot,
                     job: Job) -> tvm.TVMState:
@@ -598,6 +739,11 @@ class EpochMultiplexer(_FleetBase):
         self.controller = self._loop.controller
         self._rotor = 0
         self._global_epochs = 0
+        # resume preempted members: the host driver's runtime state is
+        # fully built by now, so checkpointed wave members restore here
+        for j, h in self._restore_pending:
+            self._restore_region(self._regions[j], h)
+        self._restore_pending = []
 
     @staticmethod
     def _readback(summary, state):
@@ -724,6 +870,57 @@ class EpochMultiplexer(_FleetBase):
         r.sched = sched
         r.stats = JobStats()
         r.active_quota = job.quota
+        handle.mark_running()
+
+    # --------------------------------------------------------- preemption
+    def _capture_region(self, j: int) -> RegionCheckpoint:
+        r = self._regions[j]
+        tv, heap, next_off = self._capture_tv(r)
+        cens, ranges = r.sched.export_stack()
+        ranges = ranges.copy()
+        if ranges.size:
+            ranges[:, 0] -= r.slot.base
+        st = dataclasses.replace(r.stats)
+        return RegionCheckpoint(
+            structural_hash=r.slot.program.structural_hash(),
+            quota=r.active_quota,
+            tv=tv, heap=heap, arena_next_off=next_off,
+            sp=len(cens), jstack=cens, rstack=ranges,
+            job_epochs=st.epochs, job_tasks=st.tasks_executed,
+            job_forks=st.total_forks, job_peak=st.peak_tv_slots,
+            stats=st,
+        )
+
+    def _restore_region(self, r: _Region, handle: JobHandle) -> None:
+        """Seat a preempted job's checkpoint into a freed region: the TV
+        image shifts to this region's base/offsets, the arena cursor
+        resumes where it left off, and the scheduler stacks reload — the
+        dual of ``_seed_region`` with the checkpoint as the seed."""
+        cp = handle.checkpoint
+        s = r.slot
+        self._state = self._restore_state(self._state, s, cp)
+        arena = tvm.arena_reset_region(self._arena, s.index, s.base, cp.quota)
+        self._arena = dataclasses.replace(
+            arena, next=arena.next.at[s.index].set(s.base + cp.arena_next_off)
+        )
+        for k, v in cp.heap.items():
+            self._heap[s.prefix + k] = v
+        sched = EpochScheduler(coalesce=self.coalesce)
+        ranges = np.asarray(cp.rstack, np.int32).reshape(-1, 2).copy()
+        if ranges.size:
+            ranges[:, 0] += s.base
+        sched.load_stack(cp.jstack, ranges)
+        r.handle = handle
+        r.sched = sched
+        r.stats = (
+            cp.stats if cp.stats is not None
+            else JobStats(
+                epochs=cp.job_epochs, tasks_executed=cp.job_tasks,
+                total_forks=cp.job_forks, peak_tv_slots=cp.job_peak,
+            )
+        )
+        r.active_quota = cp.quota
+        handle.checkpoint = None
         handle.mark_running()
 
 
@@ -961,6 +1158,13 @@ class DeviceMultiplexer(_FleetBase):
         nothing is live, calls are clean no-ops that touch neither the
         device nor the stats ledger.
         """
+        if self._restore_pending:
+            # wave members resuming from preemption: build the carry, then
+            # write each checkpoint image into its region
+            self._ensure_carry()
+            for j, h in self._restore_pending:
+                self._restore_region(self._regions[j], h)
+            self._restore_pending = []
         riders = [j for j, r in enumerate(self._regions) if r.running]
         if not riders:
             return []
@@ -997,12 +1201,21 @@ class DeviceMultiplexer(_FleetBase):
             if tr.enabled:
                 sargs.update(self.last_deltas)
         # chunk-controller feedback: widen K while boundaries surface no
-        # completions, shrink while the job queue runs hot
+        # completions, shrink while the job queue runs hot or the nearest
+        # deadline tightens (the probe's optional third element)
         if self._kctl is not None:
-            queued, oldest = (0, 0.0)
+            queued, oldest, slack = (0, 0.0, None)
             if self._queue_probe is not None:
-                queued, oldest = self._queue_probe()
-            self._kctl.observe(len(done), queued, oldest)
+                probe = self._queue_probe()
+                queued, oldest = probe[0], probe[1]
+                if len(probe) > 2:
+                    slack = probe[2]
+            if slack is None:
+                self._kctl.observe(len(done), queued, oldest)
+            else:
+                self._kctl.observe(
+                    len(done), queued, oldest, deadline_slack=slack
+                )
         return done
 
     def run(self, max_epochs: int = 1 << 20) -> List[JobHandle]:
@@ -1143,4 +1356,104 @@ class DeviceMultiplexer(_FleetBase):
         r.sched = None
         r.stats = JobStats()
         r.active_quota = job.quota
+        handle.mark_running()
+
+    # --------------------------------------------------------- preemption
+    def _capture_region(self, j: int) -> RegionCheckpoint:
+        """Lift region ``j`` off the live carry at a chunk boundary: TV
+        image + heap + arena cursor (shared helper), this region's device
+        stack row (starts made region-relative), and the carry's
+        solo-comparable accumulators (hi/lo pairs decoded to ints)."""
+        r = self._regions[j]
+        tv, heap, next_off = self._capture_tv(r)
+        carry = self._carry
+        sp = int(np.asarray(carry.sp)[j])
+        jst = np.asarray(carry.jstack)[j, :sp].astype(np.int32)
+        rst = np.asarray(carry.rstack)[j, :sp].astype(np.int32).copy()
+        if rst.size:
+            rst[:, 0] -= r.slot.base
+        epochs = int(np.asarray(carry.job_epochs)[j])
+        tasks = int(_hilo_value(np.asarray(carry.job_tasks)[j]))
+        forks = int(_hilo_value(np.asarray(carry.job_forks)[j]))
+        peak = int(np.asarray(carry.job_peak)[j])
+        st = dataclasses.replace(
+            r.stats, epochs=epochs, tasks_executed=tasks,
+            total_forks=forks, peak_tv_slots=peak,
+        )
+        return RegionCheckpoint(
+            structural_hash=r.slot.program.structural_hash(),
+            quota=r.active_quota,
+            tv=tv, heap=heap, arena_next_off=next_off,
+            sp=sp, jstack=jst, rstack=rst,
+            job_epochs=epochs, job_tasks=tasks,
+            job_forks=forks, job_peak=peak,
+            stats=st,
+        )
+
+    def _vacate(self, j: int) -> None:
+        # parking a vacated region is one scalar: sp=0 makes it inert (no
+        # pops, so the stale TV content is unreachable — lanes only run
+        # when a popped range's CEN matches their epoch).  Accumulator
+        # rows are left as-is: they still match the ledger rows, so chunk
+        # deltas stay zero until a reseed/restore rewrites both sides.
+        carry = self._carry
+        self._carry = dataclasses.replace(
+            carry, sp=carry.sp.at[j].set(0)
+        )
+
+    def _restore_region(self, r: _Region, handle: JobHandle) -> None:
+        """Write a checkpoint image into a freed region of the live carry:
+        the between-chunks dual of ``_seed_region``, restoring TV, heap,
+        arena cursor, the whole stack row, and the accumulator rows (hi/lo
+        re-encoded) — with the ledger rows set to match, so the next
+        chunk's delta accounting credits only new work (the pre-preemption
+        work was already credited when it happened)."""
+        cp = handle.checkpoint
+        s = r.slot
+        j = s.index
+        carry = self._carry
+        state = self._restore_state(carry.state, s, cp)
+        heap = dict(carry.heap)
+        for k, v in cp.heap.items():
+            heap[s.prefix + k] = v
+        arena = tvm.arena_reset_region(carry.arena, j, s.base, cp.quota)
+        arena = dataclasses.replace(
+            arena, next=arena.next.at[j].set(s.base + cp.arena_next_off)
+        )
+        ranges = np.asarray(cp.rstack, np.int32).reshape(-1, 2).copy()
+        if ranges.size:
+            ranges[:, 0] += s.base
+        jstack, rstack, sp = load_region_stacks(
+            carry.jstack, carry.rstack, carry.sp, j, cp.jstack, ranges
+        )
+        t_hi, t_lo = divmod(int(cp.job_tasks), _HILO_BASE)
+        f_hi, f_lo = divmod(int(cp.job_forks), _HILO_BASE)
+        self._carry = dataclasses.replace(
+            carry, state=state, heap=heap, arena=arena,
+            jstack=jstack, rstack=rstack, sp=sp,
+            failed=carry.failed.at[j].set(False),
+            failed_stack=carry.failed_stack.at[j].set(False),
+            job_epochs=carry.job_epochs.at[j].set(cp.job_epochs),
+            job_tasks=carry.job_tasks.at[j].set(
+                jnp.asarray([t_hi, t_lo], jnp.int32)),
+            job_forks=carry.job_forks.at[j].set(
+                jnp.asarray([f_hi, f_lo], jnp.int32)),
+            job_peak=carry.job_peak.at[j].set(cp.job_peak),
+        )
+        self._state, self._heap, self._arena = state, heap, arena
+        led = self._ledger
+        led.job_epochs[j] = cp.job_epochs
+        led.job_tasks[j] = cp.job_tasks
+        led.job_forks[j] = cp.job_forks
+        r.handle = handle
+        r.sched = None
+        r.stats = (
+            cp.stats if cp.stats is not None
+            else JobStats(
+                epochs=cp.job_epochs, tasks_executed=cp.job_tasks,
+                total_forks=cp.job_forks, peak_tv_slots=cp.job_peak,
+            )
+        )
+        r.active_quota = cp.quota
+        handle.checkpoint = None
         handle.mark_running()
